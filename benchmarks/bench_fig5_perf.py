@@ -1,0 +1,40 @@
+"""Paper Fig 5: latency & throughput vs batch size per variant (the
+latency-model curves that drive the elastic-serving experiments)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import VARIANTS, bench_world, serve_batch, time_call
+from repro.models.recsys import api
+
+BATCHES = (1, 16, 64, 256, 1024)
+
+
+def run() -> list:
+    w = bench_world()
+    cfg, world, rules, ladder = w["cfg"], w["world"], w["rules"], w["ladder"]
+    rows = []
+    for name in VARIANTS:
+        v = ladder[name]
+        fn = jax.jit(lambda p, b: api.serve(p, b, v["cfg"], rules))
+        for bs in BATCHES:
+            b = serve_batch(cfg, world, bs)
+            t = time_call(fn, v["params"], b, reps=3)
+            rows.append({
+                "variant": name, "batch": bs,
+                "latency_ms": t * 1e3, "items_per_s": bs / t,
+            })
+    return rows
+
+
+def main():
+    rows = run()
+    print("# Fig 5: latency/throughput vs batch")
+    print("variant,batch,latency_ms,items_per_s")
+    for r in rows:
+        print(f"{r['variant']},{r['batch']},{r['latency_ms']:.3f},{r['items_per_s']:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Fig 6: HitRate@50 / NDCG@50 / MRR retention across the ladder
+(candidate set 50, as in the paper's Taobao setup)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import VARIANTS, bench_world
+from repro.data.metrics import ranking_metrics
+from repro.data.synthetic import taobao_eval_candidates
+from repro.models.recsys import api
+
+
+def run(n_queries: int = 256, n_cand: int = 50) -> list:
+    w = bench_world()
+    cfg, world, rules, ladder = w["cfg"], w["world"], w["rules"], w["ladder"]
+    ev = taobao_eval_candidates(cfg, n_queries=n_queries, n_cand=n_cand, world=world)
+    jb = {k: jnp.asarray(v) for k, v in ev["batch"].items()}
+
+    rows = []
+    base = None
+    for name in VARIANTS:
+        v = ladder[name]
+        scores = np.asarray(api.serve(v["params"], jb, v["cfg"], rules))
+        m = ranking_metrics(scores.reshape(n_queries, n_cand), ev["pos_idx"], k=50)
+        m10 = ranking_metrics(scores.reshape(n_queries, n_cand), ev["pos_idx"], k=10)
+        if name == "baseline":
+            base = m
+        rows.append({
+            "variant": name,
+            "hit_rate@50": m["hit_rate"], "ndcg@50": m["ndcg"], "mrr": m["mrr"],
+            "hit_rate@10": m10["hit_rate"],
+            "retention_ndcg": m["ndcg"] / max(base["ndcg"], 1e-9),
+            "retention_mrr": m["mrr"] / max(base["mrr"], 1e-9),
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    print("# Fig 6: accuracy retention (paper: <1% loss for distilled)")
+    print("variant,hit_rate@50,ndcg@50,mrr,hit_rate@10,retention_ndcg,retention_mrr")
+    for r in rows:
+        print(f"{r['variant']},{r['hit_rate@50']:.4f},{r['ndcg@50']:.4f},"
+              f"{r['mrr']:.4f},{r['hit_rate@10']:.4f},{r['retention_ndcg']:.4f},{r['retention_mrr']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Fig 7: model size / parameter count / peak serving memory."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import VARIANTS, bench_world, serve_batch
+from repro.core.compression_loop import variant_stats
+from repro.models.recsys import api
+
+
+def _peak_bytes(fn, *args) -> int:
+    """Compiled peak (args + temps) from memory_analysis on this host."""
+    lowered = jax.jit(fn).lower(*args)
+    mem = lowered.compile().memory_analysis()
+    return int(
+        getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "temp_size_in_bytes", 0)
+    )
+
+
+def run() -> list:
+    w = bench_world()
+    cfg, world, rules, ladder = w["cfg"], w["world"], w["rules"], w["ladder"]
+    stats = variant_stats(ladder)
+    batch = serve_batch(cfg, world, 512)
+    rows = []
+    base_mem = None
+    for name in VARIANTS:
+        v = ladder[name]
+        peak = _peak_bytes(lambda p, b: api.serve(p, b, v["cfg"], rules), v["params"], batch)
+        if name == "baseline":
+            base_mem = peak
+        rows.append({
+            "variant": name,
+            "params_m": stats[name]["params"] / 1e6,
+            "size_mb": stats[name]["bytes"] / 2**20,
+            "peak_mem_mb": peak / 2**20,
+            "mem_vs_baseline": peak / base_mem,
+            "sparsity": stats[name]["sparsity"],
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    print("# Fig 7: resource consumption")
+    print("variant,params_m,size_mb,peak_mem_mb,mem_vs_baseline,sparsity")
+    for r in rows:
+        print(f"{r['variant']},{r['params_m']:.2f},{r['size_mb']:.2f},"
+              f"{r['peak_mem_mb']:.1f},{r['mem_vs_baseline']:.3f},{r['sparsity']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Kernel microbenchmarks: oracle (XLA-fused jnp) timings on this CPU host
+plus analytic TPU-v5e projections for the Pallas path.
+
+The Pallas kernels run interpret=True here (Python per grid step — not a
+speed path); their performance claim is structural: bytes/flops per tile
+are computed from the BlockSpecs and projected against v5e peaks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.kernels.block_pruned_matmul.ref import block_pruned_matmul_ref
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.fm_interaction.ref import fm_interaction_ref
+from repro.kernels.int8_matmul.ref import int8_matmul_ref, quantize_activations
+from repro.kernels.local_attention.ref import local_attention_ref
+from repro.launch.analysis import HBM_BW, PEAK_FLOPS_BF16, PEAK_FLOPS_INT8
+
+
+def _proj(flops: float, bytes_: float, int8: bool = False) -> dict:
+    peak = PEAK_FLOPS_INT8 if int8 else PEAK_FLOPS_BF16
+    return {
+        "t_compute_us": flops / peak * 1e6,
+        "t_memory_us": bytes_ / HBM_BW * 1e6,
+        "bound": "compute" if flops / peak > bytes_ / HBM_BW else "memory",
+    }
+
+
+def run() -> list:
+    rows = []
+    key = jax.random.key(0)
+
+    # int8 matmul: 4096x4096x4096
+    M = K = N = 512
+    a = jax.random.normal(key, (M, K))
+    wq, ws = quantize_activations(jax.random.normal(jax.random.key(1), (N, K)))
+    aq, as_ = quantize_activations(a)
+    t = time_call(jax.jit(int8_matmul_ref), aq, wq.T, as_, ws, reps=3)
+    p = _proj(2 * M * K * N, (M * K + K * N) * 1 + M * N * 4, int8=True)
+    rows.append(("int8_matmul_ref_512", t * 1e6, f"v5e_proj={p['t_compute_us']:.1f}us/{p['bound']}"))
+
+    # block-pruned matmul at 40% block sparsity
+    x = jax.random.normal(key, (512, 512))
+    w = jax.random.normal(jax.random.key(2), (512, 512))
+    mask = (jax.random.uniform(jax.random.key(3), (4, 4)) > 0.4).astype(jnp.float32)
+    t = time_call(jax.jit(lambda x, w, m: block_pruned_matmul_ref(x, w, m, block=128)), x, w, mask, reps=3)
+    dens = float(mask.mean())
+    p = _proj(2 * 512**3 * dens, (512 * 512 * dens + 512 * 512) * 4)
+    rows.append(("block_pruned_ref_512_d%.2f" % dens, t * 1e6, f"v5e_proj={p['t_compute_us']:.1f}us"))
+
+    # windowed attention 2048 seq, w=256
+    BH, L, dh, win = 8, 2048, 64, 256
+    q, k, v = (jax.random.normal(jax.random.key(i), (BH, L, dh)) for i in range(3))
+    t = time_call(jax.jit(lambda q, k, v: local_attention_ref(q, k, v, window=win)), q, k, v, reps=3)
+    sparse_flops = 4 * BH * L * win * dh
+    dense_flops = 4 * BH * L * L * dh
+    p = _proj(sparse_flops, BH * L * dh * 3 * 4)
+    rows.append(("local_attn_ref_2048w256", t * 1e6,
+                 f"flops_saved={1-sparse_flops/dense_flops:.2f};v5e={max(p['t_compute_us'],p['t_memory_us']):.1f}us"))
+
+    # embedding bag 1M-row table
+    V, d, B, nnz = 1_000_000, 32, 4096, 20
+    table = jax.random.normal(key, (V, d))
+    idx = jax.random.randint(jax.random.key(4), (B, nnz), 0, V)
+    t = time_call(jax.jit(embedding_bag_ref), table, idx, reps=3)
+    p = _proj(B * nnz * d, B * nnz * (d * 4 + 4))
+    rows.append(("embedding_bag_1M_4096x20", t * 1e6, f"v5e_mem={p['t_memory_us']:.1f}us/memory"))
+
+    # FM interaction
+    e = jax.random.normal(key, (65536, 39, 10))
+    t = time_call(jax.jit(fm_interaction_ref), e, reps=3)
+    p = _proj(65536 * 39 * 10 * 4, 65536 * 39 * 10 * 4)
+    rows.append(("fm_interaction_65536", t * 1e6, f"v5e_mem={p['t_memory_us']:.1f}us/memory"))
+
+    # AUGRU recurrence (DIEN): B=4096, T=100, g=108
+    from repro.kernels.augru.ref import augru_ref
+
+    B, T, g = 4096, 100, 108
+    zx = jax.random.normal(key, (B, T, 3 * g))
+    wh = jax.random.normal(jax.random.key(5), (g, 3 * g)) * 0.3
+    h0 = jnp.zeros((B, g))
+    att = jax.random.uniform(jax.random.key(6), (B, T))
+    mask = jnp.ones((B, T), bool)
+    t = time_call(jax.jit(augru_ref), zx, wh, h0, att, mask, reps=3)
+    p = _proj(2 * B * T * g * 3 * g, B * T * (3 * g) * 4)
+    rows.append(("augru_4096x100", t * 1e6,
+                 f"v5e={max(p['t_compute_us'], p['t_memory_us']):.1f}us/{p['bound']}"))
+    return rows
+
+
+def main():
+    rows = run()
+    print("# kernel microbenches (CPU oracle timing; v5e projection derived)")
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

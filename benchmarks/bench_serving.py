@@ -1,0 +1,62 @@
+"""Elastic-scheduling benchmark (paper §IV.B): the five variants under a
+traffic spike, autoscaling on/off — latency/throughput/shedding tradeoffs.
+Service times from LatencyModels calibrated on the real executables."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import VARIANTS, bench_world, serve_batch
+from repro.core.serving.engine import ElasticEngine, EngineConfig, poisson_arrivals
+from repro.core.serving.rate_limiter import TierPolicy
+from repro.core.serving.replica import LatencyModel, ReplicaSpec
+from repro.models.recsys import api
+
+SPIKE = lambda t: 150.0 if t < 10 else (1000.0 if t < 30 else 200.0)
+
+
+def run() -> list:
+    w = bench_world()
+    cfg, world, rules, ladder = w["cfg"], w["world"], w["rules"], w["ladder"]
+    arrivals = poisson_arrivals(SPIKE, 45.0, seed=0)
+    rows = []
+    for name in VARIANTS:
+        v = ladder[name]
+        fixed = {b: serve_batch(cfg, world, b) for b in (1, 8, 32, 128, 512)}
+        jitted = jax.jit(lambda p, b: api.serve(p, b, v["cfg"], rules))
+
+        def call(b):
+            jax.block_until_ready(jitted(v["params"], fixed[b]))
+
+        lat = LatencyModel.calibrate(call, reps=2)
+        spec = ReplicaSpec(name, lat, cold_start_s=5.0, warm_start_s=0.2)
+        for autoscale in (False, True):
+            eng = ElasticEngine(
+                spec,
+                EngineConfig(n_replicas=2, autoscale=autoscale, slo_p99_s=0.15,
+                             max_batch=64),
+                tiers={"tier0": TierPolicy(1500, 150), "tier1": TierPolicy(1500, 150)},
+            )
+            res = eng.run(arrivals, until=45.0)
+            rows.append({
+                "variant": name, "autoscale": autoscale,
+                "p50_ms": res["p50"] * 1e3, "p99_ms": res["p99"] * 1e3,
+                "throughput": res["throughput"], "rejected": res["rejected"],
+                "max_replicas": max(res["trace"]["replicas"]) if res["trace"]["replicas"] else 2,
+                "svc_ms_b1": lat(1) * 1e3, "svc_ms_b512": lat(512) * 1e3,
+            })
+    return rows
+
+
+def main():
+    rows = run()
+    print("# elastic serving under a 150->1000 QPS spike")
+    print("variant,autoscale,p50_ms,p99_ms,throughput,rejected,max_replicas,svc_ms_b1,svc_ms_b512")
+    for r in rows:
+        print(f"{r['variant']},{r['autoscale']},{r['p50_ms']:.1f},{r['p99_ms']:.1f},"
+              f"{r['throughput']:.0f},{r['rejected']},{r['max_replicas']},"
+              f"{r['svc_ms_b1']:.2f},{r['svc_ms_b512']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper Table I: params / model size / latency / throughput for the five
+variants. Latency = one candidate-set request (50 items, the paper's
+setup); throughput = items/s at the batched serving size. Absolute numbers
+are this host's CPU; the paper-faithful claim is the RATIO ladder, printed
+against the paper's V100 ratios."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import PAPER_TABLE1, VARIANTS, bench_world, serve_batch, time_call
+from repro.core.compression_loop import variant_stats
+from repro.models.recsys import api
+
+
+def run() -> list:
+    w = bench_world()
+    cfg, world, rules, ladder = w["cfg"], w["world"], w["rules"], w["ladder"]
+    stats = variant_stats(ladder)
+
+    rows = []
+    req = serve_batch(cfg, world, 50)  # one request = 50 candidates
+    bulk = serve_batch(cfg, world, 2048)
+    base_lat = base_thpt = None
+    for name in VARIANTS:
+        v = ladder[name]
+        fn = jax.jit(lambda p, b: api.serve(p, b, v["cfg"], rules))
+        lat = time_call(fn, v["params"], req)
+        t_bulk = time_call(fn, v["params"], bulk)
+        thpt = 2048 / t_bulk / 50  # requests/s at 50 candidates each
+        if name == "baseline":
+            base_lat, base_thpt = lat, thpt
+        p = PAPER_TABLE1[name]
+        rows.append({
+            "variant": name,
+            "params_m": stats[name]["params"] / 1e6,
+            "size_mb": stats[name]["bytes"] / 2**20,
+            "latency_ms": lat * 1e3,
+            "throughput_rps": thpt,
+            "lat_ratio": lat / base_lat,
+            "thpt_ratio": thpt / base_thpt,
+            "paper_lat_ratio": p["lat_ms"] / PAPER_TABLE1["baseline"]["lat_ms"],
+            "paper_thpt_ratio": p["thpt"] / PAPER_TABLE1["baseline"]["thpt"],
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    print("# Table I reproduction (CPU host; ratios vs paper V100 ratios)")
+    hdr = ("variant", "params_m", "size_mb", "latency_ms", "throughput_rps",
+           "lat_ratio", "paper_lat_ratio", "thpt_ratio", "paper_thpt_ratio")
+    print(",".join(hdr))
+    for r in rows:
+        print(",".join(f"{r[h]:.3f}" if isinstance(r[h], float) else str(r[h]) for h in hdr))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

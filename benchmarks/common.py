@@ -1,0 +1,85 @@
+"""Shared benchmark substrate: one trained teacher + compression ladder,
+reused by every paper-table benchmark (built lazily, cached in-process)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import lru_cache
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.compression_loop import LadderConfig, run_ladder, variant_stats
+from repro.data.synthetic import TaobaoWorld, taobao_batches, taobao_eval_candidates
+from repro.distributed.sharding import RECSYS_RULES, adapt_rules
+from repro.models.common import init_params
+from repro.models.recsys import api
+from repro.training.optimizer import get_optimizer
+from repro.training.train_loop import make_train_step
+
+VARIANTS = ("baseline", "quantized", "pruned", "pruned_quantized", "distilled")
+
+# Paper Table I reference numbers (V100 ms / req/s) for side-by-side ratios.
+PAPER_TABLE1 = {
+    "baseline": dict(params_m=32.0, size_mb=128.0, lat_ms=52.4, thpt=190),
+    "quantized": dict(params_m=32.0, size_mb=32.0, lat_ms=44.1, thpt=225),
+    "pruned": dict(params_m=19.2, size_mb=76.8, lat_ms=36.7, thpt=260),
+    "pruned_quantized": dict(params_m=19.2, size_mb=19.2, lat_ms=29.8, thpt=325),
+    "distilled": dict(params_m=6.4, size_mb=12.8, lat_ms=21.5, thpt=460),
+}
+
+
+@lru_cache(maxsize=1)
+def bench_world():
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )
+    rules = adapt_rules(RECSYS_RULES, mesh)
+    cfg = get_config("taobao_ssa")
+    fields = tuple(
+        dataclasses.replace(f, vocab=min(f.vocab, 20_000)) for f in cfg.fields
+    )
+    cfg = dataclasses.replace(cfg, fields=fields)
+    world = TaobaoWorld(20_000, 20_000, 10_000)
+
+    params = init_params(api.param_defs(cfg), jax.random.key(0))
+    opt = get_optimizer("adamw", 3e-3)
+    step = jax.jit(make_train_step(lambda p, b: api.loss(p, b, cfg, rules), opt))
+    state = opt.init(params)
+    gen = (
+        {k: jnp.asarray(v) for k, v in b.items()}
+        for b in taobao_batches(cfg, 512, 10_000, world=world, seed=1)
+    )
+    for i, b in zip(range(200), gen):
+        params, state, _ = step(params, state, b)
+
+    def batch_fn():
+        for b in taobao_batches(cfg, 512, 10_000, world=world, seed=3):
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+
+    ladder = run_ladder(
+        params, cfg, rules, batch_fn,
+        LadderConfig(finetune_steps=15, qat_steps=15, distill_steps=30),
+    )
+    return {"cfg": cfg, "world": world, "rules": rules, "ladder": ladder}
+
+
+def time_call(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds of a blocking call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def serve_batch(cfg, world, batch: int, seed: int = 11) -> Dict:
+    gen = taobao_batches(cfg, batch, 1, world=world, seed=seed)
+    b = next(iter(gen))
+    return {k: jnp.asarray(v) for k, v in b.items() if k != "label"}

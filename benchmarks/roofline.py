@@ -1,0 +1,102 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+
+Per (arch x shape x mesh): the three terms
+    T_compute    = flops_per_device / 197 TFLOP/s
+    T_memory     = hbm_bytes_per_device / 819 GB/s
+    T_collective = coll_link_bytes_per_device / 50 GB/s
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs useful-compute ratio, and the
+roofline fraction (useful model flops vs the time the dominant term costs).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs.base import get_config
+from repro.launch.analysis import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def model_flops(cell: str, meta: Dict) -> Optional[float]:
+    """Analytic useful flops (global) for the workload."""
+    arch = cell.split(":")[0]
+    cfg = get_config(arch)
+    kind = meta.get("kind")
+    if cfg.family == "lm":
+        n = cfg.active_param_count()
+        toks = meta.get("tokens", 0)
+        if kind == "train":
+            return 6.0 * n * toks
+        if kind == "prefill":
+            return 2.0 * n * toks
+        return 2.0 * n * toks  # decode: tokens = batch
+    if cfg.family == "recsys":
+        return None  # embedding-dominated; flops not the useful metric
+    return None
+
+
+def load_rows(mesh: str = "single", include_tags: bool = False) -> List[Dict]:
+    rows = []
+    pattern = f"*__{mesh}*.json" if include_tags else f"*__{mesh}.json"
+    for f in sorted(RESULTS.glob(pattern)):
+        if f.name.endswith(".err.json"):
+            continue
+        rec = json.loads(f.read_text())
+        n = rec["n_chips"]
+        flops_dev = rec["flops"]
+        bytes_dev = rec["bytes_accessed"]
+        coll_dev = rec["collectives"]["total"]
+        t_c = flops_dev / PEAK_FLOPS_BF16
+        t_m = bytes_dev / HBM_BW
+        t_x = coll_dev / ICI_BW
+        terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+        dom = max(terms, key=terms.get)
+        mf = model_flops(rec["cell"], rec.get("meta", {}))
+        useful = (mf / n / max(flops_dev, 1.0)) if mf else None
+        # roofline fraction: useful-compute time / dominant-term time
+        frac = None
+        if mf:
+            t_useful = mf / n / PEAK_FLOPS_BF16
+            frac = t_useful / max(max(terms.values()), 1e-15)
+        rows.append({
+            "cell": rec["cell"], "mesh": rec["mesh"], "tag": rec.get("tag", ""),
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "bottleneck": dom, "useful_ratio": useful, "roofline_frac": frac,
+            "temp_gib": rec["memory"]["temp_bytes"] / 2**30,
+            "arg_gib": rec["memory"]["argument_bytes"] / 2**30,
+            "coll_counts": rec.get("collective_counts", {}),
+            "top": rec.get("top_computations", [])[:3],
+        })
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    out = [
+        "| cell | T_comp (s) | T_mem (s) | T_coll (s) | bottleneck | useful/HLO | roofline frac | temp GiB |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        ur = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "—"
+        fr = f"{r['roofline_frac']:.2f}" if r["roofline_frac"] else "—"
+        out.append(
+            f"| {r['cell']}{('['+r['tag']+']') if r['tag'] else ''} | {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | {r['bottleneck']} | {ur} | {fr} "
+            f"| {r['temp_gib']:.1f} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    rows = load_rows("single")
+    print(markdown_table(rows))
+    n_bound = {}
+    for r in rows:
+        n_bound[r["bottleneck"]] = n_bound.get(r["bottleneck"], 0) + 1
+    print(f"\nbottleneck histogram: {n_bound}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark driver — one module per paper table/figure.
+
+`PYTHONPATH=src python -m benchmarks.run [--only table1,fig6,...]`
+
+Prints each benchmark's own section plus a final ``name,us_per_call,derived``
+CSV summary across all of them.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma list: table1,fig5,fig6,fig7,kernels,roofline,serving")
+    args = ap.parse_args()
+
+    from benchmarks import (  # noqa: E402 (import here: jax init)
+        bench_fig5_perf, bench_fig6_accuracy, bench_fig7_resources,
+        bench_kernels, bench_serving, bench_table1, roofline,
+    )
+
+    benches = {
+        "table1": bench_table1.main,
+        "fig5": bench_fig5_perf.main,
+        "fig6": bench_fig6_accuracy.main,
+        "fig7": bench_fig7_resources.main,
+        "kernels": bench_kernels.main,
+        "serving": bench_serving.main,
+        "roofline": roofline.main,
+    }
+    chosen = args.only.split(",") if args.only else list(benches)
+
+    summary = []
+    failed = 0
+    for name in chosen:
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            benches[name]()
+            summary.append((name, (time.time() - t0) * 1e6, "ok"))
+        except Exception:
+            traceback.print_exc()
+            failed += 1
+            summary.append((name, (time.time() - t0) * 1e6, "FAILED"))
+
+    print("\n===== summary =====")
+    print("name,us_per_call,derived")
+    for name, us, derived in summary:
+        print(f"{name},{us:.0f},{derived}")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""End-to-end driver (deliverable b): train ~few-hundred steps, run the
+paper's compression ladder, then SERVE batched requests through the elastic
+engine — the full paper pipeline: model-level (C1-C5) + system-level (C7).
+
+    PYTHONPATH=src python examples/compress_and_serve.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.compression_loop import LadderConfig, run_ladder, variant_stats
+from repro.core.serving.engine import ElasticEngine, EngineConfig, poisson_arrivals
+from repro.core.serving.rate_limiter import TierPolicy
+from repro.core.serving.replica import LatencyModel, ReplicaSpec
+from repro.data.synthetic import TaobaoWorld, taobao_batches
+from repro.distributed.sharding import RECSYS_RULES, adapt_rules
+from repro.launch.mesh import make_test_mesh
+from repro.models.common import init_params
+from repro.models.recsys import api
+from repro.training.fault_tolerance import FTConfig, ResilientTrainer
+from repro.training.optimizer import get_optimizer
+from repro.training.train_loop import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=512)
+    args = ap.parse_args()
+
+    mesh = make_test_mesh()
+    rules = adapt_rules(RECSYS_RULES, mesh)
+    cfg = get_config("taobao_ssa")
+    cfg = dataclasses.replace(
+        cfg, fields=tuple(dataclasses.replace(f, vocab=min(f.vocab, 50_000)) for f in cfg.fields)
+    )
+    world = TaobaoWorld(50_000, 50_000, 10_000)
+
+    # ---- stage 1: fault-tolerant training (checkpoints + resume path) ----
+    params = init_params(api.param_defs(cfg), jax.random.key(0))
+    opt = get_optimizer("adamw", 2e-3)
+    step = jax.jit(make_train_step(lambda p, b: api.loss(p, b, cfg, rules), opt))
+    state = opt.init(params)
+
+    def mk_batches(start):
+        return ({k: jnp.asarray(v) for k, v in b.items()}
+                for b in taobao_batches(cfg, args.batch, 10**9, world=world, seed=100 + start))
+
+    trainer = ResilientTrainer(
+        step, FTConfig(ckpt_dir="/tmp/repro_e2e_ckpt", ckpt_every=100), make_batches=mk_batches
+    )
+    t0 = time.time()
+    params, state, restarts, last = trainer.run(params, state, args.steps)
+    print(f"trained {last} steps in {time.time()-t0:.0f}s (restarts={restarts})")
+
+    # ---- stage 2: the paper's ladder ----
+    ladder = run_ladder(
+        params, cfg, rules, lambda: mk_batches(777),
+        LadderConfig(finetune_steps=20, qat_steps=20, distill_steps=40),
+    )
+    print(json.dumps(variant_stats(ladder), indent=2, default=str))
+
+    # ---- stage 3: serve every variant through the elastic engine ----
+    def batch_of(n, seed=5):
+        b = next(iter(taobao_batches(cfg, n, 1, world=world, seed=seed)))
+        return {k: jnp.asarray(v) for k, v in b.items() if k != "label"}
+
+    fixed = {b: batch_of(b) for b in (1, 8, 32, 128, 512)}
+    spike = lambda t: 150.0 if t < 10 else (900.0 if t < 30 else 200.0)
+    arrivals = poisson_arrivals(spike, 45.0, seed=0)
+
+    print(f"{'variant':18s} {'svc@1':>8s} {'svc@512':>8s} {'p50':>8s} {'p99':>8s} {'thpt':>8s}")
+    for name, v in ladder.items():
+        jitted = jax.jit(lambda p, b: api.serve(p, b, v["cfg"], rules))
+
+        def call(bs):
+            jax.block_until_ready(jitted(v["params"], fixed[bs]))
+
+        lat = LatencyModel.calibrate(call, reps=2)
+        eng = ElasticEngine(
+            ReplicaSpec(name, lat, cold_start_s=5.0, warm_start_s=0.2),
+            EngineConfig(n_replicas=2, autoscale=True, slo_p99_s=0.15),
+            tiers={"tier0": TierPolicy(1500, 150), "tier1": TierPolicy(1500, 150)},
+        )
+        res = eng.run(arrivals, until=45.0)
+        print(f"{name:18s} {lat(1)*1e3:7.2f}ms {lat(512)*1e3:7.1f}ms "
+              f"{res['p50']*1e3:7.1f}ms {res['p99']*1e3:7.1f}ms {res['throughput']:7.0f}/s")
+
+
+if __name__ == "__main__":
+    main()

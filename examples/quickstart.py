@@ -1,0 +1,70 @@
+"""Quickstart: train the paper's Baseline ranker on synthetic Taobao logs,
+apply the paper's full compression ladder, compare accuracy + size.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.compression_loop import LadderConfig, run_ladder, variant_stats
+from repro.data.metrics import ranking_metrics
+from repro.data.synthetic import TaobaoWorld, taobao_batches, taobao_eval_candidates
+from repro.distributed.sharding import RECSYS_RULES, adapt_rules
+from repro.launch.mesh import make_test_mesh
+from repro.models.common import init_params
+from repro.models.recsys import api
+from repro.training.optimizer import get_optimizer
+from repro.training.train_loop import make_train_step
+
+
+def main():
+    mesh = make_test_mesh()
+    rules = adapt_rules(RECSYS_RULES, mesh)
+
+    # The paper's Baseline (taobao_ssa) at laptop vocab scale
+    cfg = get_config("taobao_ssa")
+    cfg = dataclasses.replace(
+        cfg, fields=tuple(dataclasses.replace(f, vocab=min(f.vocab, 10_000)) for f in cfg.fields)
+    )
+    world = TaobaoWorld(10_000, 10_000, 5_000)
+
+    print("== 1. train the teacher ==")
+    params = init_params(api.param_defs(cfg), jax.random.key(0))
+    opt = get_optimizer("adamw", 2e-3)
+    step = jax.jit(make_train_step(lambda p, b: api.loss(p, b, cfg, rules), opt))
+    state = opt.init(params)
+    gen = ({k: jnp.asarray(v) for k, v in b.items()}
+           for b in taobao_batches(cfg, 512, 10**6, world=world, seed=1))
+    for i, b in zip(range(100), gen):
+        params, state, m = step(params, state, b)
+        if i % 25 == 0:
+            print(f"  step {i:3d}  loss {float(m['loss']):.4f}")
+
+    print("== 2. compression ladder (prune -> finetune -> quantize -> QAT, + distill) ==")
+    def batch_fn():
+        for b in taobao_batches(cfg, 512, 10**6, world=world, seed=3):
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+
+    ladder = run_ladder(params, cfg, rules, batch_fn,
+                        LadderConfig(finetune_steps=15, qat_steps=15, distill_steps=30))
+
+    print("== 3. evaluate (candidate set 50, as in the paper) ==")
+    ev = taobao_eval_candidates(cfg, n_queries=256, n_cand=50, world=world)
+    jb = {k: jnp.asarray(v) for k, v in ev["batch"].items()}
+    stats = variant_stats(ladder)
+    print(f"{'variant':18s} {'params':>10s} {'size':>10s} {'HR@10':>7s} {'NDCG@50':>8s} {'MRR':>7s}")
+    for name, v in ladder.items():
+        scores = np.asarray(api.serve(v["params"], jb, v["cfg"], rules))
+        m = ranking_metrics(scores.reshape(256, 50), ev["pos_idx"], k=50)
+        m10 = ranking_metrics(scores.reshape(256, 50), ev["pos_idx"], k=10)
+        s = stats[name]
+        print(f"{name:18s} {s['params']/1e6:9.2f}M {s['bytes']/2**20:9.2f}M "
+              f"{m10['hit_rate']:7.3f} {m['ndcg']:8.3f} {m['mrr']:7.3f}")
+
+
+if __name__ == "__main__":
+    main()

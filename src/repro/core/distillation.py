@@ -1,0 +1,98 @@
+"""C3 — attention-map knowledge distillation (paper §III.A, Formula 3).
+
+L_KD = KL(S_teacher ‖ S_student) over attention maps, plus soft-label
+distillation on the task logits. The student is a lighter taobao_ssa:
+fewer encoder layers and C1 low-rank/grouped projections, initialized from
+the teacher via SVD truncation (core/lightweight.low_rank_factorize).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecSysConfig
+from repro.core.lightweight import low_rank_factorize, to_grouped
+from repro.models.common import init_params
+from repro.models.recsys import taobao_ssa
+from repro.models.recsys.rec_layers import bce_with_logits
+
+
+def make_student_cfg(cfg: RecSysConfig) -> RecSysConfig:
+    """~30% fewer parameters: half the encoder depth (paper: 'fewer layers')."""
+    return dataclasses.replace(cfg, n_attn_layers=max(1, cfg.n_attn_layers // 2))
+
+
+def init_student_from_teacher(
+    teacher_params: Dict, student_cfg: RecSysConfig, rng, *, rank: int = 16,
+    grouped_ffn: int = 4,
+) -> Dict:
+    """Student params: tables/tower shared-initialized from the teacher;
+    encoder projections low-rank factorized (C1) from evenly-spaced teacher
+    layers; FFN w1 grouped (C1 grouped linear)."""
+    defs = taobao_ssa.param_defs(student_cfg)
+    student = init_params(defs, rng)
+    # copy shared structure
+    for k in ("tables", "pos"):
+        student[k] = jax.tree.map(lambda a: a, teacher_params[k])
+    for name in list(student.keys()):
+        if name.startswith("tower"):
+            student[name] = teacher_params[name]
+    # layer map: student layer l <- teacher layer floor(l * Lt / Ls)
+    lt = sum(1 for k in teacher_params if k.startswith("enc"))
+    ls = student_cfg.n_attn_layers
+    for l in range(ls):
+        tl = (l * lt) // ls
+        tenc = teacher_params[f"enc{tl}"]
+        senc = dict(tenc)
+        for proj in ("wq", "wk", "wv", "wo"):
+            senc[proj] = low_rank_factorize(tenc[proj], rank)
+        senc["w1"] = to_grouped(tenc["w1"], grouped_ffn)
+        student[f"enc{l}"] = senc
+    return student
+
+
+def attention_kl(t_probs, s_probs, eps: float = 1e-9) -> jax.Array:
+    """Formula 3: KL(teacher ‖ student), mean over batch/heads/queries.
+    Head counts may differ — both are head-averaged first (map-level KD)."""
+    tm = jnp.mean(t_probs, axis=1)  # [B, L, L]
+    sm = jnp.mean(s_probs, axis=1)
+    kl = jnp.sum(tm * (jnp.log(tm + eps) - jnp.log(sm + eps)), axis=-1)
+    return jnp.mean(kl)
+
+
+def distill_loss(
+    student_params,
+    teacher_params,
+    batch,
+    student_cfg: RecSysConfig,
+    teacher_cfg: RecSysConfig,
+    rules,
+    *,
+    alpha_attn: float = 1.0,
+    alpha_soft: float = 0.5,
+    temperature: float = 2.0,
+) -> Tuple[jax.Array, Dict]:
+    t_logits, t_attn = taobao_ssa.logits_and_attn(
+        jax.lax.stop_gradient(teacher_params), batch, teacher_cfg, rules,
+        collect_attn=True,
+    )
+    s_logits, s_attn = taobao_ssa.logits_and_attn(
+        student_params, batch, student_cfg, rules, collect_attn=True
+    )
+    task = bce_with_logits(s_logits, batch["label"])
+
+    # student layer l distils teacher layer (l * Lt / Ls) — last maps last
+    lt, ls = len(t_attn), len(s_attn)
+    kd = jnp.zeros((), jnp.float32)
+    for l in range(ls):
+        kd += attention_kl(t_attn[min((l * lt) // ls, lt - 1)], s_attn[l])
+    kd = kd / max(ls, 1)
+
+    t_soft = jax.nn.sigmoid(jax.lax.stop_gradient(t_logits) / temperature)
+    soft = bce_with_logits(s_logits / temperature, t_soft)
+
+    total = task + alpha_attn * kd + alpha_soft * soft
+    return total, {"task": task, "attn_kl": kd, "soft": soft}

@@ -1,0 +1,114 @@
+"""C1 — lightweight projection representations (paper §III.A).
+
+Every compressible linear in the framework is a *representation-dispatched*
+apply: the parameter leaf decides the compute path. The compression passes
+(core/pruning.py, core/quantization.py, core/compression_loop.py) transform
+parameter trees between representations; model code never changes.
+
+Representations:
+  dense      : jnp.ndarray [d_in, d_out]
+  masked     : {"w": [d_in,d_out], "mask": same}          (C4 pruning)
+  lowrank    : {"a": [d_in,r], "b": [r,d_out]}            (C1 low-rank heads)
+  grouped    : {"gw": [k, d_in/k, d_out/k]}               (C1 grouped linear)
+  dwsep      : {"dw": [3, d_in], "pw": [d_in, d_out]}     (C1 depthwise-separable,
+                sequence inputs only)
+  int8       : {"q": int8 [d_in,d_out], "s": f32 [d_out]} (C5 dynamic-range quant,
+                per-output-channel scale)
+  int8 + mask: {"q","s","mask"}                           (C4+C5 combined)
+"""
+from __future__ import annotations
+
+from typing import Dict, Union
+
+import jax
+import jax.numpy as jnp
+
+Rep = Union[jax.Array, Dict[str, jax.Array]]
+
+
+def linear(p: Rep, x: jax.Array) -> jax.Array:
+    """Apply a compressible linear on the last axis of x."""
+    if isinstance(p, (jax.Array, jnp.ndarray)) or not isinstance(p, dict):
+        return x @ p
+    if "q" in p:  # int8 dynamic-range weights
+        w = p["q"].astype(jnp.float32) * p["s"][None, :]
+        if "mask" in p:
+            w = w * p["mask"]
+        return (x.astype(jnp.float32) @ w).astype(x.dtype)
+    if "mask" in p:
+        return x @ (p["w"] * p["mask"])
+    if "a" in p:  # low-rank
+        return (x @ p["a"]) @ p["b"]
+    if "gw" in p:  # grouped
+        k, gin, gout = p["gw"].shape
+        xg = x.reshape(x.shape[:-1] + (k, gin))
+        out = jnp.einsum("...ki,kio->...ko", xg, p["gw"])
+        return out.reshape(x.shape[:-1] + (k * gout,))
+    if "dw" in p:  # depthwise(3) over seq + pointwise
+        dw, pw = p["dw"], p["pw"]
+        pad = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(1, 1), (0, 0)])
+        y = (
+            pad[..., :-2, :] * dw[0]
+            + pad[..., 1:-1, :] * dw[1]
+            + pad[..., 2:, :] * dw[2]
+        )
+        return y @ pw
+    raise ValueError(f"unknown linear representation: {list(p.keys())}")
+
+
+def weight_view(p: Rep) -> jax.Array:
+    """Effective dense [d_in, d_out] weight of any representation (for
+    analysis, distillation init, and test oracles)."""
+    if not isinstance(p, dict):
+        return p
+    if "q" in p:
+        w = p["q"].astype(jnp.float32) * p["s"][None, :]
+        return w * p["mask"] if "mask" in p else w
+    if "mask" in p:
+        return p["w"] * p["mask"]
+    if "a" in p:
+        return p["a"] @ p["b"]
+    if "gw" in p:
+        k, gin, gout = p["gw"].shape
+        blocks = [
+            jnp.pad(p["gw"][i], ((0, 0), (i * gout, (k - 1 - i) * gout)))
+            for i in range(k)
+        ]
+        return jnp.concatenate(blocks, axis=0)
+    raise ValueError(f"no dense view for: {list(p.keys())}")
+
+
+def nbytes(p: Rep) -> int:
+    """Storage footprint of a representation (paper Fig. 7 resource accounting).
+    Masked weights count only surviving entries (sparse storage)."""
+    if not isinstance(p, dict):
+        return p.size * p.dtype.itemsize
+    if "q" in p:
+        base = p["q"].size * 1 + p["s"].size * 4
+        if "mask" in p:
+            nz = int(jnp.sum(p["mask"]))
+            base = nz * 1 + p["s"].size * 4  # paper accounting: survivors only
+        return base
+    if "mask" in p:
+        nz = int(jnp.sum(p["mask"]))
+        return nz * 4  # paper's Table-I accounting: surviving params x 4B
+    return sum(v.size * v.dtype.itemsize for v in p.values())
+
+
+def low_rank_factorize(w: jax.Array, rank: int):
+    """SVD truncation of a dense weight -> lowrank rep (C1)."""
+    u, s, vt = jnp.linalg.svd(w.astype(jnp.float32), full_matrices=False)
+    r = min(rank, s.shape[0])
+    a = u[:, :r] * s[None, :r]
+    return {"a": a.astype(w.dtype), "b": vt[:r].astype(w.dtype)}
+
+
+def to_grouped(w: jax.Array, k: int):
+    """Keep only the block-diagonal groups of a dense weight (C1 grouped
+    linear). Used at *construction* time for student models — information
+    off the diagonal is discarded by design."""
+    d_in, d_out = w.shape
+    assert d_in % k == 0 and d_out % k == 0
+    gin, gout = d_in // k, d_out // k
+    blocks = [w[i * gin : (i + 1) * gin, i * gout : (i + 1) * gout] for i in range(k)]
+    return {"gw": jnp.stack(blocks)}

@@ -1,0 +1,119 @@
+"""C4 — dynamic-threshold iterative pruning (paper §III.B, Formulas 5-7).
+
+Stage 1 of the paper's closed loop:
+  θ⁽⁰⁾ from the target ratio p (Formula 5: the p-quantile of |w|),
+  M⁽ᵏ⁾ = 1[|w| ≥ θ⁽ᵏ⁾]     (Formula 6),
+  W⁽ᵏ⁾ = W⁽ᵏ⁻¹⁾ ⊙ M⁽ᵏ⁾     (Formula 7), fine-tune between rounds.
+
+TPU adaptation (DESIGN.md §5): unstructured masks preserve the paper's
+accuracy semantics but do NOT speed up MXU matmuls, so a block-structured
+variant prunes (bs x bs) weight blocks by L1 norm — those matmuls skip zero
+blocks via kernels/block_pruned_matmul. Both variants share Formula 5-7
+semantics (the block score is the block's aggregate magnitude).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def magnitude_threshold(w: jax.Array, p: float) -> jax.Array:
+    """Formula 5: θ s.t. |{|w| < θ}| / nm = p (the p-quantile of |w|)."""
+    return jnp.quantile(jnp.abs(w).reshape(-1).astype(jnp.float32), p)
+
+
+def prune_mask(w: jax.Array, p: float) -> jax.Array:
+    """Formula 6 mask at the dynamic threshold."""
+    theta = magnitude_threshold(w, p)
+    return (jnp.abs(w) >= theta).astype(w.dtype)
+
+
+def block_prune_mask(w: jax.Array, p: float, block: int = 128) -> jax.Array:
+    """Structured variant: score (bs x bs) blocks by mean |w|, prune the
+    lowest-p fraction of blocks, expand back to elementwise mask."""
+    n, m = w.shape
+    pn, pm = (-n) % block, (-m) % block
+    wp = jnp.pad(jnp.abs(w), ((0, pn), (0, pm)))
+    nb, mb = wp.shape[0] // block, wp.shape[1] // block
+    scores = wp.reshape(nb, block, mb, block).mean(axis=(1, 3))  # [nb, mb]
+    theta = jnp.quantile(scores.reshape(-1), p)
+    bmask = (scores >= theta).astype(w.dtype)
+    full = jnp.broadcast_to(bmask[:, None, :, None], (nb, block, mb, block))
+    return full.reshape(nb * block, mb * block)[:n, :m]
+
+
+def _prunable(path: Tuple, leaf) -> bool:
+    """Default selector: 2-D float weights outside embedding tables."""
+    keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    if any(k in ("tables", "table", "linear", "embed", "lm_head", "pos") for k in keys):
+        return False
+    return (
+        isinstance(leaf, jax.Array)
+        and leaf.ndim == 2
+        and jnp.issubdtype(leaf.dtype, jnp.floating)
+    )
+
+
+def prune_tree(
+    params,
+    ratio: float,
+    *,
+    structured: bool = False,
+    block: int = 128,
+    selector: Optional[Callable] = None,
+):
+    """One pruning round over a parameter tree. Dense leaves become
+    {"w", "mask"} reps (core/lightweight.py dispatch); already-masked reps
+    get their masks tightened (Formula 7: masks compose multiplicatively)."""
+    sel = selector or _prunable
+    mask_fn = (lambda w: block_prune_mask(w, ratio, block)) if structured else (
+        lambda w: prune_mask(w, ratio)
+    )
+
+    def visit(path, leaf):
+        if isinstance(leaf, dict) and "mask" in leaf and "w" in leaf:
+            # Formula 7: tighten the mask — threshold over SURVIVORS only
+            # (the quantile must ignore already-pruned zeros), i.e. total
+            # below-threshold fraction z + p(1−z) for current sparsity z.
+            w = leaf["w"] * leaf["mask"]
+            z = 1.0 - jnp.mean(leaf["mask"].astype(jnp.float32))
+            eff = jnp.clip(z + ratio * (1.0 - z), 0.0, 1.0)
+            if structured:
+                new_mask = block_prune_mask(w, float(eff), block) * leaf["mask"]
+            else:
+                theta = jnp.quantile(jnp.abs(w).reshape(-1).astype(jnp.float32), eff)
+                new_mask = (jnp.abs(w) >= theta).astype(w.dtype) * leaf["mask"]
+            return {"w": leaf["w"], "mask": new_mask}
+        if sel(path, leaf):
+            return {"w": leaf, "mask": mask_fn(leaf)}
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(
+        visit, params, is_leaf=lambda x: isinstance(x, dict) and "mask" in x
+    )
+
+
+def sparsity(params) -> float:
+    """Fraction of pruned weights among maskable leaves."""
+    zero, total = 0.0, 0.0
+
+    def visit(leaf):
+        nonlocal zero, total
+        if isinstance(leaf, dict) and "mask" in leaf:
+            zero += float(jnp.sum(leaf["mask"] == 0))
+            total += leaf["mask"].size
+
+    jax.tree.map(
+        visit, params, is_leaf=lambda x: isinstance(x, dict) and "mask" in x
+    )
+    return zero / max(total, 1.0)
+
+
+def prune_schedule(target: float, rounds: int) -> list:
+    """Per-round incremental ratios reaching `target` total sparsity
+    (paper: K=3 rounds to ~40%). Each round prunes the same fraction of the
+    *surviving* weights: 1-(1-target)^(1/K)."""
+    per = 1.0 - (1.0 - target) ** (1.0 / rounds)
+    return [per] * rounds

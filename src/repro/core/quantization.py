@@ -1,0 +1,130 @@
+"""C5 — dynamic-range quantization + QAT (paper §III.B, Formulas 8-9).
+
+Stage 2 of the paper's closed loop:
+  s = (max W − min W) / (2^{b−1} − 1)                      (Formula 8)
+  ŵ = clip(round(w/s)·s, min W, max W)                     (Formula 9)
+  QAT: fake-quant nodes in the forward pass, straight-through gradients.
+
+Storage representations (dispatched by core/lightweight.py):
+  weights  -> {"q": int8 [din,dout], "s": f32 [dout]}  per-output-channel
+  tables   -> {"q": int8 [V,d],      "s": f32 [V]}     per-row (gather-then-
+              dequantize: 4x less HBM traffic on the embedding hot path)
+The int8 x int8 -> int32 MXU kernel lives in kernels/int8_matmul.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dynamic_range_step(w: jax.Array, bits: int = 8) -> jax.Array:
+    """Formula 8 step size over the whole tensor."""
+    return (jnp.max(w) - jnp.min(w)) / (2.0 ** (bits - 1) - 1.0)
+
+
+def fake_quant(w: jax.Array, bits: int = 8) -> jax.Array:
+    """Formula 9: quantize-dequantize (float in, float out)."""
+    s = jnp.maximum(dynamic_range_step(w, bits), 1e-12)
+    return jnp.clip(jnp.round(w / s) * s, jnp.min(w), jnp.max(w))
+
+
+def ste_quant(w: jax.Array, bits: int = 8) -> jax.Array:
+    """QAT node: fake-quant forward, identity (straight-through) backward."""
+    return w + jax.lax.stop_gradient(fake_quant(w, bits) - w)
+
+
+def quantize_weight(w: jax.Array, bits: int = 8) -> dict:
+    """Per-output-channel symmetric int8 rep {"q", "s"}."""
+    assert bits == 8, "int8 storage path (other widths use fake_quant)"
+    s = jnp.maximum(jnp.max(jnp.abs(w), axis=0) / 127.0, 1e-12)  # [dout]
+    q = jnp.clip(jnp.round(w / s[None, :]), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": s.astype(jnp.float32)}
+
+
+def quantize_table(t: jax.Array) -> dict:
+    """Per-row int8 rep for embedding tables."""
+    s = jnp.maximum(jnp.max(jnp.abs(t), axis=1) / 127.0, 1e-12)  # [V]
+    q = jnp.clip(jnp.round(t / s[:, None]), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": s.astype(jnp.float32)}
+
+
+def dequantize(rep: dict) -> jax.Array:
+    if rep["s"].ndim == 1 and rep["q"].shape[0] == rep["s"].shape[0]:
+        return rep["q"].astype(jnp.float32) * rep["s"][:, None]
+    return rep["q"].astype(jnp.float32) * rep["s"][None, :]
+
+
+def _path_keys(path):
+    return [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+
+
+def _is_table_path(path) -> bool:
+    return any(k in ("tables", "table", "linear", "embed") for k in _path_keys(path))
+
+
+# arrays used positionally by models (not through the linear dispatch)
+_QUANT_EXCLUDE = ("pos",)
+
+
+def quantize_tree(params, *, tables: bool = True, weights: bool = True):
+    """Whole-model post-training quantization. Masked reps keep their mask
+    ({"q","s","mask"} = pruned+quantized, the paper's combined variant)."""
+
+    def visit(path, leaf):
+        if isinstance(leaf, dict) and "w" in leaf and "mask" in leaf:
+            if not weights:
+                return leaf
+            rep = quantize_weight(leaf["w"] * leaf["mask"])
+            rep["mask"] = leaf["mask"]
+            return rep
+        if not isinstance(leaf, jax.Array) or not jnp.issubdtype(
+            leaf.dtype, jnp.floating
+        ):
+            return leaf
+        if leaf.ndim != 2 or any(k in _QUANT_EXCLUDE for k in _path_keys(path)):
+            return leaf
+        if _is_table_path(path):
+            return quantize_table(leaf) if tables else leaf
+        return quantize_weight(leaf) if weights else leaf
+
+    return jax.tree_util.tree_map_with_path(
+        visit, params, is_leaf=lambda x: isinstance(x, dict) and ("w" in x or "q" in x)
+    )
+
+
+def qat_params(params, bits: int = 8):
+    """Insert STE fake-quant on every 2-D float weight (Formula 9 forward,
+    full-precision backward). Call inside the loss: loss(qat_params(p), ...)."""
+
+    def visit(path, leaf):
+        if isinstance(leaf, dict) and "w" in leaf and "mask" in leaf:
+            return {"w": ste_quant(leaf["w"] * leaf["mask"], bits), "mask": leaf["mask"]}
+        if (
+            isinstance(leaf, jax.Array)
+            and leaf.ndim == 2
+            and jnp.issubdtype(leaf.dtype, jnp.floating)
+        ):
+            return ste_quant(leaf, bits)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(
+        visit, params, is_leaf=lambda x: isinstance(x, dict) and "mask" in x
+    )
+
+
+def model_bytes(params) -> int:
+    """Fig-7 storage accounting across representations."""
+    from repro.core.lightweight import nbytes
+
+    total = 0
+    for leaf in jax.tree.leaves(
+        params, is_leaf=lambda x: isinstance(x, dict) and ("q" in x or "w" in x or "a" in x or "gw" in x)
+    ):
+        if isinstance(leaf, dict) or (hasattr(leaf, "size") and hasattr(leaf, "dtype")):
+            try:
+                total += nbytes(leaf)
+            except ValueError:
+                total += sum(v.size * v.dtype.itemsize for v in jax.tree.leaves(leaf))
+    return total

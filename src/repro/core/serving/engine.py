@@ -1,0 +1,209 @@
+"""Elastic inference engine: discrete-event loop tying together the
+batcher, least-loaded router, autoscaler, warm pool, tiered rate limiter
+and SLO monitor (paper §IV.B). Service times come from LatencyModels
+calibrated on real jitted executables (replica.py), so "Distilled+int8 vs
+Baseline under a traffic spike" is an experiment, not an assertion.
+
+Events: ARRIVAL -> admit (rate limit) -> enqueue (priority bypass skips
+batching) -> router picks least-loaded replica when a batch closes
+(max_batch or max_wait) -> SERVICE_DONE records latency -> SCALE_TICK
+drives the autoscaler from sliding-window utilisation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.serving.autoscaler import AutoScaler, ScalerConfig
+from repro.core.serving.metrics import SLOMonitor
+from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
+from repro.core.serving.replica import Replica, ReplicaSpec
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 64
+    max_wait_s: float = 0.005
+    slo_p99_s: float = 0.100
+    scale_tick_s: float = 1.0
+    n_replicas: int = 2
+    autoscale: bool = True
+    priority_bypass: bool = True
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    t_arrive: float
+    tier: str
+    priority: bool = False
+
+
+class ElasticEngine:
+    def __init__(
+        self,
+        spec: ReplicaSpec,
+        cfg: EngineConfig,
+        tiers: Optional[Dict[str, TierPolicy]] = None,
+        scaler_cfg: Optional[ScalerConfig] = None,
+    ):
+        self.spec = spec
+        self.cfg = cfg
+        self.limiter = HybridRateLimiter(
+            tiers or {"tier0": TierPolicy(1e9, 1e9), "tier1": TierPolicy(1e9, 1e9)}
+        )
+        self.scaler = AutoScaler(scaler_cfg or ScalerConfig(min_replicas=cfg.n_replicas))
+        self.monitor = SLOMonitor()
+        self.replicas: List[Replica] = [
+            Replica(i, spec, ready_at=0.0) for i in range(cfg.n_replicas)
+        ]
+        self._registry: Dict[int, Replica] = {r.rid: r for r in self.replicas}
+        self._rid = itertools.count(len(self.replicas))
+
+    # ---- router ----
+    def _pick_replica(self, now: float) -> Replica:
+        return min(self.replicas, key=lambda r: r.load(now))
+
+    def _utilisation(self, now: float, horizon: float) -> float:
+        # booting replicas are excluded — counting them as busy makes the
+        # scaler chase its own pending capacity (observed 25-replica
+        # overshoot under cold starts)
+        ready = [r for r in self.replicas if r.ready_at <= now]
+        if not ready:
+            return 1.0
+        busy = sum(min(max(r.busy_until - now, 0.0), horizon) for r in ready)
+        return busy / (horizon * len(ready))
+
+    # ---- simulation ----
+    def run(
+        self,
+        arrivals: List[Request],
+        until: Optional[float] = None,
+    ) -> Dict:
+        cfg = self.cfg
+        events: List[Tuple[float, int, str, object]] = []
+        seq = itertools.count()
+        for r in arrivals:
+            heapq.heappush(events, (r.t_arrive, next(seq), "arrive", r))
+        if cfg.autoscale:
+            heapq.heappush(events, (cfg.scale_tick_s, next(seq), "scale", None))
+
+        queue: List[Request] = []
+        batch_deadline: Optional[float] = None
+        trace = {"t": [], "p99": [], "qps": [], "replicas": [], "queue": []}
+        horizon = until or (arrivals[-1].t_arrive + 5.0 if arrivals else 5.0)
+
+        def flush(now: float):
+            nonlocal batch_deadline
+            while queue:
+                take = queue[: cfg.max_batch]
+                del queue[: cfg.max_batch]
+                rep = self._pick_replica(now)
+                done = rep.start_batch(now, len(take))
+                heapq.heappush(events, (done, next(seq), "done", (rep.rid, take, now)))
+                if len(queue) < cfg.max_batch:
+                    break
+            batch_deadline = None
+
+        while events:
+            now, _, kind, payload = heapq.heappop(events)
+            if now > horizon and kind in ("scale",):
+                continue
+            if kind == "arrive":
+                r: Request = payload  # type: ignore
+                self.monitor.admitted += 1
+                if not self.limiter.admit(now, r.tier):
+                    self.monitor.rejected += 1
+                    continue
+                if cfg.priority_bypass and r.priority:
+                    rep = self._pick_replica(now)
+                    done = rep.start_batch(now, 1)
+                    heapq.heappush(events, (done, next(seq), "done", (rep.rid, [r], now)))
+                    continue
+                queue.append(r)
+                if len(queue) >= cfg.max_batch:
+                    flush(now)
+                elif batch_deadline is None:
+                    batch_deadline = now + cfg.max_wait_s
+                    heapq.heappush(events, (batch_deadline, next(seq), "timeout", None))
+            elif kind == "timeout":
+                if batch_deadline is not None and now >= batch_deadline and queue:
+                    flush(now)
+            elif kind == "done":
+                rep_id, batch, started = payload  # type: ignore
+                rep = self._registry[rep_id]
+                rep.in_flight -= 1
+                for r in batch:
+                    self.monitor.record(now, now - r.t_arrive)
+            elif kind == "scale":
+                stats = self.monitor.percentiles(now)
+                util = self._utilisation(now, cfg.scale_tick_s)
+                self.limiter.adapt(stats["p99"], cfg.slo_p99_s)
+                want = self.scaler.desired(now, len(self.replicas), util)
+                while want > len(self.replicas):
+                    delay = self.scaler.take_start_delay(
+                        self.spec.warm_start_s, self.spec.cold_start_s
+                    )
+                    rep = Replica(next(self._rid), self.spec, ready_at=now + delay)
+                    self.replicas.append(rep)
+                    self._registry[rep.rid] = rep
+                # graceful scale-down: retire only drained replicas
+                idle = [r for r in self.replicas if r.in_flight == 0 and r.busy_until <= now]
+                while want < len(self.replicas) and len(self.replicas) > 1 and idle:
+                    victim = idle.pop()
+                    self.replicas.remove(victim)
+                    self.scaler.replenish()
+                trace["t"].append(now)
+                trace["p99"].append(stats["p99"])
+                trace["qps"].append(stats["qps"])
+                trace["replicas"].append(len(self.replicas))
+                trace["queue"].append(len(queue))
+                if now + cfg.scale_tick_s <= horizon:
+                    heapq.heappush(
+                        events, (now + cfg.scale_tick_s, next(seq), "scale", None)
+                    )
+
+        final = self.monitor.percentiles(horizon)
+        all_lat = np.array([l for _, l in self.monitor.lat]) if self.monitor.lat else np.zeros(1)
+        return {
+            "p50": final["p50"],
+            "p99": final["p99"],
+            "mean_latency": float(all_lat.mean()),
+            "completed": self.monitor.completed,
+            "rejected": self.monitor.rejected,
+            "throughput": self.monitor.completed / horizon,
+            "final_replicas": len(self.replicas),
+            "trace": trace,
+        }
+
+
+def poisson_arrivals(
+    rate_fn: Callable[[float], float],
+    horizon: float,
+    *,
+    seed: int = 0,
+    tiers: Tuple[str, ...] = ("tier0", "tier1"),
+    priority_frac: float = 0.02,
+) -> List[Request]:
+    """Inhomogeneous Poisson traffic via thinning; rate_fn(t) in QPS."""
+    rng = np.random.default_rng(seed)
+    peak = max(rate_fn(t) for t in np.linspace(0, horizon, 200)) + 1e-9
+    out, t, rid = [], 0.0, 0
+    while True:
+        t += rng.exponential(1.0 / peak)
+        if t >= horizon:
+            break
+        if rng.random() < rate_fn(t) / peak:
+            out.append(
+                Request(
+                    rid, t,
+                    tier=str(rng.choice(tiers)),
+                    priority=bool(rng.random() < priority_frac),
+                )
+            )
+            rid += 1
+    return out

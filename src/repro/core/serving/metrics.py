@@ -1,0 +1,35 @@
+"""SLO monitor: sliding-window latency percentiles, QPS, rejects."""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, Tuple
+
+import numpy as np
+
+
+class SLOMonitor:
+    def __init__(self, window_s: float = 10.0):
+        self.window_s = window_s
+        self.lat: Deque[Tuple[float, float]] = deque()  # (finish_time, latency)
+        self.admitted = 0
+        self.rejected = 0
+        self.completed = 0
+
+    def record(self, finish: float, latency: float):
+        self.completed += 1
+        self.lat.append((finish, latency))
+
+    def _trim(self, now: float):
+        while self.lat and self.lat[0][0] < now - self.window_s:
+            self.lat.popleft()
+
+    def percentiles(self, now: float) -> Dict[str, float]:
+        self._trim(now)
+        if not self.lat:
+            return {"p50": 0.0, "p99": 0.0, "qps": 0.0}
+        arr = np.array([l for _, l in self.lat])
+        return {
+            "p50": float(np.percentile(arr, 50)),
+            "p99": float(np.percentile(arr, 99)),
+            "qps": len(arr) / self.window_s,
+        }

@@ -1,0 +1,44 @@
+"""Hybrid token-bucket rate limiter (paper §IV.B): per-tier buckets plus a
+load-adaptive shed of the lowest tiers when the SLO is threatened."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass
+class TierPolicy:
+    rate: float  # tokens/s
+    burst: float
+
+
+class HybridRateLimiter:
+    def __init__(self, tiers: Dict[str, TierPolicy]):
+        self.tiers = tiers
+        self.tokens = {t: p.burst for t, p in tiers.items()}
+        self.last = 0.0
+        self.shed_level = 0  # 0 = admit all; k = shed k lowest tiers
+        self._order = sorted(tiers)  # lexical: tier0 < tier1 < ...
+
+    def _refill(self, now: float):
+        dt = max(now - self.last, 0.0)
+        self.last = now
+        for t, p in self.tiers.items():
+            self.tokens[t] = min(p.burst, self.tokens[t] + dt * p.rate)
+
+    def admit(self, now: float, tier: str) -> bool:
+        self._refill(now)
+        if self.shed_level and tier in self._order[-self.shed_level:]:
+            return False
+        if self.tokens.get(tier, 0.0) >= 1.0:
+            self.tokens[tier] -= 1.0
+            return True
+        return False
+
+    def adapt(self, p99: float, slo: float):
+        """Load feedback: shed lowest tier when p99 breaches the SLO,
+        recover when comfortably below."""
+        if p99 > slo and self.shed_level < len(self._order) - 1:
+            self.shed_level += 1
+        elif p99 < 0.6 * slo and self.shed_level > 0:
+            self.shed_level -= 1

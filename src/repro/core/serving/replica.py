@@ -1,0 +1,78 @@
+"""Model replicas: compiled executables + calibrated latency models.
+
+A replica serves batches through a real jitted function. For the
+discrete-event simulator, per-batch-size service times are CALIBRATED once
+by timing the real executable (on this host's CPU) at a ladder of batch
+sizes, then interpolated — so the elastic-scheduling experiments reflect
+the actual relative costs of the five Table-I variants, not made-up
+constants. Cold/warm start costs model XLA compile + weight load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class LatencyModel:
+    """Piecewise-linear service time in seconds vs batch size."""
+
+    sizes: np.ndarray
+    times: np.ndarray
+
+    def __call__(self, batch: int) -> float:
+        return float(np.interp(batch, self.sizes, self.times))
+
+    @staticmethod
+    def calibrate(
+        fn: Callable[[int], None],
+        sizes: Sequence[int] = (1, 8, 32, 128, 512),
+        reps: int = 3,
+    ) -> "LatencyModel":
+        """fn(batch) runs one real (blocking) inference at that batch size."""
+        ts = []
+        for b in sizes:
+            fn(b)  # compile / warm
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                fn(b)
+            ts.append((time.perf_counter() - t0) / reps)
+        return LatencyModel(np.asarray(sizes, np.float64), np.asarray(ts))
+
+    @staticmethod
+    def analytic(base_s: float, per_item_s: float) -> "LatencyModel":
+        sizes = np.array([1, 2048], np.float64)
+        return LatencyModel(sizes, base_s + per_item_s * sizes)
+
+
+@dataclasses.dataclass
+class ReplicaSpec:
+    variant: str  # which Table-I variant this pool serves
+    latency: LatencyModel
+    cold_start_s: float = 8.0  # load weights + compile
+    warm_start_s: float = 0.25  # pre-initialized pool activation
+
+
+class Replica:
+    def __init__(self, rid: int, spec: ReplicaSpec, ready_at: float):
+        self.rid = rid
+        self.spec = spec
+        self.ready_at = ready_at
+        self.busy_until = ready_at
+        self.in_flight = 0
+        self.served = 0
+
+    def load(self, now: float) -> float:
+        """Router signal: time until free."""
+        return max(self.busy_until - now, 0.0) + 0.001 * self.in_flight
+
+    def start_batch(self, now: float, batch: int) -> float:
+        start = max(now, self.busy_until, self.ready_at)
+        dur = self.spec.latency(batch)
+        self.busy_until = start + dur
+        self.in_flight += 1
+        self.served += batch
+        return self.busy_until

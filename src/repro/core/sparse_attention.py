@@ -1,0 +1,73 @@
+"""C2 — hybrid sparse attention (paper §III.A, Formula 4).
+
+Full attention inside a local window w ≪ L plus fixed/random global samples:
+nonzeros O(L·w) or O(L·log L), compute O(Lwd + L·logL·d). Three consumers:
+
+  * taobao_ssa encoder (`window=` mask in the model),
+  * LM long-context decode (models/layers.sparse_decode_attention),
+  * the Pallas windowed-attention kernel (kernels/local_attention), whose
+    oracle is `windowed_attention` below.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def local_global_mask(
+    L: int, window: int, n_global: int = 0, *, causal: bool = False,
+    seed: Optional[int] = None,
+) -> jax.Array:
+    """[L, L] boolean mask: |i−j| < window, plus n_global sampled key
+    columns attendable from everywhere (fixed strided pattern by default,
+    random with a seed — the paper allows either)."""
+    i = jnp.arange(L)[:, None]
+    j = jnp.arange(L)[None, :]
+    m = jnp.abs(i - j) < window
+    if n_global:
+        if seed is None:
+            cols = jnp.linspace(0, L - 1, n_global).astype(jnp.int32)
+        else:
+            cols = jax.random.choice(
+                jax.random.key(seed), L, (n_global,), replace=False
+            )
+        m = m | jnp.isin(j, cols)
+    if causal:
+        m = m & (j <= i)
+    return m
+
+
+def masked_attention(q, k, v, mask) -> jax.Array:
+    """Reference dense-masked attention. q,k,v: [B,H,L,dh]; mask [L,L]."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bhld,bhmd->bhlm", q, k) / math.sqrt(dh)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(v.dtype)
+    return jnp.einsum("bhlm,bhmd->bhld", p, v)
+
+
+def windowed_attention(q, k, v, window: int, *, causal: bool = False) -> jax.Array:
+    """Pure local-window attention — oracle for kernels/local_attention.
+    q,k,v: [B,H,L,dh]."""
+    L = q.shape[2]
+    return masked_attention(q, k, v, local_global_mask(L, window, 0, causal=causal))
+
+
+def hybrid_sparse_attention(
+    q, k, v, *, window: int, n_global: int = 0, causal: bool = False,
+    seed: Optional[int] = None,
+) -> jax.Array:
+    """The paper's full C2 pattern (window + sampled globals)."""
+    L = q.shape[2]
+    mask = local_global_mask(L, window, n_global, causal=causal, seed=seed)
+    return masked_attention(q, k, v, mask)
+
+
+def attention_flops(L: int, d: int, window: int, n_global: int) -> dict:
+    """Formula-4 accounting: dense O(L²d) vs sparse O(Lwd + L·ng·d)."""
+    dense = 4 * L * L * d
+    sparse = 4 * L * (min(window, L) + n_global) * d
+    return {"dense": dense, "sparse": sparse, "ratio": sparse / dense}

@@ -1,0 +1,62 @@
+"""Host-side input pipeline: deterministic seeding, prefetch, per-host
+sharding. At 1000-node scale every host materializes only its slice of the
+global batch; here the host count comes from jax.process_count() (1 in this
+container — the slicing logic is the same)."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator
+
+import jax
+import numpy as np
+
+
+def host_shard(batch: Dict[str, np.ndarray], *, process_index=None, process_count=None):
+    """Slice the leading axis to this host's shard."""
+    pi = jax.process_index() if process_index is None else process_index
+    pc = jax.process_count() if process_count is None else process_count
+    if pc == 1:
+        return batch
+
+    def sl(x):
+        n = x.shape[0]
+        per = n // pc
+        return x[pi * per : (pi + 1) * per]
+
+    return {k: sl(v) for k, v in batch.items()}
+
+
+def prefetch(it: Iterator, depth: int = 2) -> Iterator:
+    """Background-thread prefetch (overlaps host data gen with device step)."""
+    q: "queue.Queue" = queue.Queue(maxsize=depth)
+    _END = object()
+
+    def worker():
+        try:
+            for item in it:
+                q.put(item)
+        finally:
+            q.put(_END)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is _END:
+            return
+        yield item
+
+
+def device_put_batches(it: Iterator, sharding=None) -> Iterator:
+    for batch in it:
+        if sharding is None:
+            yield {k: jax.numpy.asarray(v) for k, v in batch.items()}
+        else:
+            yield {k: jax.device_put(v, sharding) for k, v in batch.items()}
+
+
+def seeded_batches(make: Callable[[int], Iterator], start_step: int) -> Iterator:
+    """Deterministic resume: the generator is re-created at the restart
+    step so replayed data matches what the failed run would have seen."""
+    return make(start_step)

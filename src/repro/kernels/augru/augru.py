@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: AUGRU (attention-update-gate GRU) recurrence.
+
+DIEN's interest-evolution layer is a strict sequential recurrence over the
+behaviour sequence (T=100): XLA cannot parallelize it over T, so per-step
+launch/HBM overhead dominates the stock lowering. This kernel keeps the
+hidden state in VMEM across the whole T loop: one grid step per batch
+block, `jax.lax.fori_loop` over time inside the kernel, the recurrent
+matmul [bb, g] x [g, 3g] hitting the MXU each step, and only (zx, att,
+mask) streaming in once.
+
+Grid: (B/bb,). VMEM: zx block [bb,T,3g], wh [g,3g], h scratch [bb,g].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(zx_ref, att_ref, mask_ref, wh_ref, h0_ref, out_ref, h_ref, *, T: int, g: int):
+    h_ref[...] = h0_ref[...]
+    wh = wh_ref[...]
+
+    def step(t, _):
+        h = h_ref[...]
+        z_t = zx_ref[:, t, :]  # [bb, 3g]
+        a_t = att_ref[:, t]  # [bb]
+        m_t = mask_ref[:, t]
+        zh = jax.lax.dot_general(
+            h, wh, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        r = jax.nn.sigmoid(z_t[:, :g] + zh[:, :g])
+        u = jax.nn.sigmoid(z_t[:, g : 2 * g] + zh[:, g : 2 * g])
+        c = jnp.tanh(z_t[:, 2 * g :] + r * zh[:, 2 * g :])
+        u = a_t[:, None] * u
+        h_new = (1.0 - u) * h + u * c
+        h_ref[...] = jnp.where(m_t[:, None], h_new, h)
+        return 0
+
+    jax.lax.fori_loop(0, T, step, 0)
+    out_ref[...] = h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "interpret"))
+def augru(zx, wh, h0, att, mask, *, bb: int = 128, interpret: bool = False):
+    """zx: f32 [B,T,3g]; wh: [g,3g]; h0: [B,g]; att,mask: [B,T] -> [B,g]."""
+    B, T, g3 = zx.shape
+    g = g3 // 3
+    assert B % bb == 0, (B, bb)
+    return pl.pallas_call(
+        functools.partial(_kernel, T=T, g=g),
+        grid=(B // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, T, 3 * g), lambda b: (b, 0, 0)),
+            pl.BlockSpec((bb, T), lambda b: (b, 0)),
+            pl.BlockSpec((bb, T), lambda b: (b, 0)),
+            pl.BlockSpec((g, 3 * g), lambda b: (0, 0)),
+            pl.BlockSpec((bb, g), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, g), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, g), zx.dtype),
+        scratch_shapes=[pltpu.VMEM((bb, g), jnp.float32)],
+        interpret=interpret,
+    )(zx, att.astype(zx.dtype), mask.astype(zx.dtype) > 0, wh, h0)

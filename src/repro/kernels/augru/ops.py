@@ -1,0 +1,15 @@
+"""Jitted wrapper for the AUGRU kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.augru.augru import augru
+from repro.kernels.augru.ref import augru_ref
+
+
+def augru_op(zx, wh, h0, att, mask, *, bb: int = 128):
+    B = zx.shape[0]
+    if B % bb:
+        return augru_ref(zx, wh, h0, att, mask)
+    return augru(zx, wh, h0, att, mask, bb=bb,
+                 interpret=jax.default_backend() == "cpu")

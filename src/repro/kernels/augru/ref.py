@@ -1,0 +1,32 @@
+"""Oracle for the AUGRU kernel: DIEN's attention-gated GRU recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def augru_ref(zx, wh, h0, att, mask):
+    """zx: [B,T,3g] precomputed input projections (x@Wx + b, gates [r,u,c]);
+    wh: [g,3g]; h0: [B,g]; att: [B,T] attention scalars; mask: [B,T].
+    Returns final hidden [B,g].
+
+    h_t = (1 - a_t·u_t) ∘ h_{t-1} + a_t·u_t ∘ tanh(zc + r ∘ (h Whc))
+    """
+    g = h0.shape[-1]
+
+    def step(h, inp):
+        z_t, a_t, m_t = inp
+        zh = h @ wh
+        r = jax.nn.sigmoid(z_t[:, :g] + zh[:, :g])
+        u = jax.nn.sigmoid(z_t[:, g : 2 * g] + zh[:, g : 2 * g])
+        c = jnp.tanh(z_t[:, 2 * g :] + r * zh[:, 2 * g :])
+        u = a_t[:, None] * u
+        h_new = (1.0 - u) * h + u * c
+        h = jnp.where(m_t[:, None], h_new, h)
+        return h, ()
+
+    h, _ = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(zx, 1, 0), jnp.moveaxis(att, 1, 0), jnp.moveaxis(mask, 1, 0)),
+    )
+    return h

@@ -1,0 +1,27 @@
+"""Jitted wrapper for the block-pruned matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_pruned_matmul.block_pruned_matmul import block_pruned_matmul
+from repro.kernels.block_pruned_matmul.ref import block_pruned_matmul_ref
+
+
+def pruned_linear(x, w, block_mask, *, block: int = 128):
+    """y = x @ (w ⊙ mask_blocks); kernel path when shapes tile at `block`."""
+    M, K = x.shape
+    N = w.shape[1]
+    if M % block or K % block or N % block:
+        return block_pruned_matmul_ref(x, w, block_mask, block=block)
+    return block_pruned_matmul(
+        x, w, block_mask.astype(jnp.int32), bm=block, bn=block, bk=block,
+        interpret=jax.default_backend() == "cpu",
+    )
+
+
+def density(block_mask) -> float:
+    """Surviving-block fraction — the kernel's MAC/DMA cost multiplier."""
+    import numpy as np
+
+    return float(np.mean(np.asarray(block_mask) != 0))

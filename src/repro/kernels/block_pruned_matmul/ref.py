@@ -1,0 +1,15 @@
+"""Oracle for the block-pruned matmul (C4 structured pruning compute path)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def block_pruned_matmul_ref(x, w, block_mask, *, block: int):
+    """x: f32 [M,K]; w: f32 [K,N]; block_mask: f32/bool [K//block, N//block].
+    y = x @ (w ⊙ expand(block_mask))."""
+    K, N = w.shape
+    mask = jnp.broadcast_to(
+        block_mask.astype(w.dtype)[:, None, :, None],
+        (K // block, block, N // block, block),
+    ).reshape(K, N)
+    return x @ (w * mask)

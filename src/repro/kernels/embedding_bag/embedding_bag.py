@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: EmbeddingBag (ragged gather + segment-sum).
+
+The recsys hot path (kernel taxonomy §RecSys): tables are 10⁶-10⁹ rows in
+HBM; only the looked-up rows may move. The row ids are SCALAR-PREFETCHED
+(pltpu.PrefetchScalarGridSpec) so the BlockSpec index_map can address the
+table by data value — each grid step DMAs exactly one [1, d] row into VMEM.
+Consecutive grid steps of the same bag revisit one output block, which
+therefore stays resident in VMEM while the bag accumulates (init at entry
+j==0, add for j>0). Per-entry weights ride along in a second prefetched
+operand — this is how per-sample-weighted EmbeddingBag (and the FM
+first-order term) runs without a second pass.
+
+Grid: (B * nnz,) — entry-per-step; bags are contiguous runs of nnz steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, w_ref, row_ref, out_ref, *, nnz: int):
+    i = pl.program_id(0)
+    j = i % nnz
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += row_ref[...] * w_ref[i]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(table, idx, weights, *, interpret: bool = False):
+    """table: f32 [V, d]; idx: int32 [B, nnz]; weights: f32 [B, nnz].
+    Returns f32 [B, d] — Σ_j weights[b,j] * table[idx[b,j]]."""
+    B, nnz = idx.shape
+    V, d = table.shape
+    flat_idx = idx.reshape(-1)
+    flat_w = weights.reshape(-1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # flat_idx, flat_w live in SMEM
+        grid=(B * nnz,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, idx_s, w_s: (idx_s[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx_s, w_s: (i // nnz, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, nnz=nnz),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, d), table.dtype),
+        interpret=interpret,
+    )(flat_idx, flat_w, table)

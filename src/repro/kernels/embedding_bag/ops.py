@@ -1,0 +1,18 @@
+"""Jitted wrapper for the EmbeddingBag kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def embedding_bag_op(table, idx, weights=None):
+    """table [V,d], idx [B,nnz], weights [B,nnz] or None -> [B,d]."""
+    if weights is None:
+        weights = jnp.ones(idx.shape, table.dtype)
+    return embedding_bag(
+        table, idx, weights.astype(table.dtype),
+        interpret=jax.default_backend() == "cpu",
+    )

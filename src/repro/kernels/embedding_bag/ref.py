@@ -1,0 +1,9 @@
+"""Oracle for the embedding-bag kernel: the system's segment_sum path."""
+from __future__ import annotations
+
+from repro.models.recsys.embedding import embedding_bag as _bag
+
+
+def embedding_bag_ref(table, idx, weights=None):
+    """table: [V,d]; idx: [B,nnz]; weights: [B,nnz] (None = all ones)."""
+    return _bag(table, idx, mask=weights, combiner="sum")

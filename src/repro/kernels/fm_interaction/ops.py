@@ -1,0 +1,14 @@
+"""Jitted wrapper for the fused FM interaction."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fm_interaction.fm_interaction import fm_interaction_kernel
+from repro.kernels.fm_interaction.ref import fm_interaction_ref
+
+
+def fm_interaction_op(e, *, bb: int = 256):
+    B = e.shape[0]
+    if B % bb:
+        return fm_interaction_ref(e)
+    return fm_interaction_kernel(e, bb=bb, interpret=jax.default_backend() == "cpu")

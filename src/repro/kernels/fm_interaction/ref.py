@@ -1,0 +1,9 @@
+"""Oracle for the fused FM second-order kernel."""
+from __future__ import annotations
+
+from repro.models.recsys.fm import fm_interaction
+
+
+def fm_interaction_ref(e):
+    """e: [B, F, k] -> [B]: ½ Σ_d [(Σ_f e)² − Σ_f e²]."""
+    return fm_interaction(e)

@@ -1,0 +1,31 @@
+"""Jitted public wrapper: quantized linear y = x_q @ w_q with dequant.
+
+On CPU hosts the Pallas body runs under interpret=True (bit-exact
+semantics); on TPU it compiles to the MXU int8 path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_matmul.int8_matmul import int8_matmul
+from repro.kernels.int8_matmul.ref import int8_matmul_ref, quantize_activations
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def quantized_linear(x, w_rep, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """x: f32 [M, K]; w_rep: {"q": int8 [K,N], "s": f32 [N]} (C5 storage rep).
+    Dynamically quantizes activations per-row and runs the int8 kernel when
+    shapes tile evenly; falls back to the oracle otherwise."""
+    M, K = x.shape
+    N = w_rep["q"].shape[1]
+    x_q, x_s = quantize_activations(x)
+    if M % bm or N % bn or K % bk:
+        return int8_matmul_ref(x_q, w_rep["q"], x_s, w_rep["s"])
+    return int8_matmul(
+        x_q, w_rep["q"], x_s, w_rep["s"], bm=bm, bn=bn, bk=bk,
+        interpret=_interpret(),
+    )

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the W8A8 int8 matmul with dequant epilogue."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def int8_matmul_ref(a_q, b_q, a_scale, b_scale):
+    """a_q: int8 [M,K]; b_q: int8 [K,N]; a_scale: f32 [M]; b_scale: f32 [N].
+    Returns f32 [M,N] = (a_q·b_q in int32) * a_scale[:,None] * b_scale[None,:].
+    """
+    acc = lax.dot_general(
+        a_q, b_q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    return acc.astype(jnp.float32) * a_scale[:, None] * b_scale[None, :]
+
+
+def quantize_activations(x):
+    """Per-row dynamic int8 quantization of activations (C5 'dynamic-range-
+    aware quantization along the Value branch')."""
+    s = jnp.maximum(jnp.max(jnp.abs(x), axis=-1) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / s[..., None]), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: sliding-window attention (paper C2, Formula 4).
+
+Each query block attends only key blocks within the window — compute and
+HBM traffic are O(L·w·d) instead of O(L²d). Flash-style streaming softmax:
+(running max, normalizer, weighted accumulator) live in VMEM scratch across
+the relative-key-block sweep; normalization happens once at the last step.
+
+Grid: (BH, L/bq, n_rel) with n_rel = 2·wb+1 (bidirectional) or wb+1
+(causal) relative key blocks, wb = ceil(window/bk). Out-of-range and
+out-of-window positions are masked inside the kernel; the key index_map
+clamps to valid blocks (masked anyway).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bk: int, wb: int, n_rel: int, window: int, causal: bool,
+            n_kb: int):
+    qb = pl.program_id(1)
+    r = pl.program_id(2)
+
+    @pl.when(r == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # relative key blocks: causal [qb-wb, qb], bidirectional [qb-wb, qb+wb]
+    kb = qb - wb + r
+
+    dh = q_ref.shape[-1]
+    q = q_ref[0] * (dh ** -0.5)  # [bq, dh]
+    k = k_ref[0]  # [bk, dh]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [bq, bk]
+
+    qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = (jnp.abs(qpos - kpos) < window) & (kb >= 0) & (kb < n_kb)
+    if causal:
+        valid &= kpos <= qpos
+    s = jnp.where(valid, s, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(r == n_rel - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "causal", "bq", "bk", "interpret")
+)
+def local_attention(
+    q, k, v, *, window: int, causal: bool = False, bq: int = 128, bk: int = 128,
+    interpret: bool = False,
+):
+    """q,k,v: [BH, L, dh]; L % bq == 0 == L % bk. O(L·window·dh) per head."""
+    BH, L, dh = q.shape
+    wb = -(-window // bk)
+    n_rel = wb + 1 if causal else 2 * wb + 1
+    n_kb = L // bk
+    grid = (BH, L // bq, n_rel)
+
+    def k_index(bh, qb, r):
+        kb = qb - wb + r
+        return (bh, jnp.clip(kb, 0, n_kb - 1), 0)
+
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, bq=bq, bk=bk, wb=wb, n_rel=n_rel, window=window,
+            causal=causal, n_kb=n_kb,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda bh, qb, r: (bh, qb, 0)),
+            pl.BlockSpec((1, bk, dh), k_index),
+            pl.BlockSpec((1, bk, dh), k_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda bh, qb, r: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, L, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,24 @@
+"""Jitted wrapper: windowed attention over [B, H, L, dh] tensors."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.local_attention.local_attention import local_attention
+from repro.kernels.local_attention.ref import local_attention_ref
+
+
+def windowed_attention_op(q, k, v, *, window: int, causal: bool = False,
+                          bq: int = 128, bk: int = 128):
+    """q,k,v: [B,H,L,dh]. Kernel path when L tiles evenly; oracle otherwise."""
+    B, H, L, dh = q.shape
+    qf = q.reshape(B * H, L, dh)
+    kf = k.reshape(B * H, L, dh)
+    vf = v.reshape(B * H, L, dh)
+    if L % bq or L % bk:
+        out = local_attention_ref(qf, kf, vf, window=window, causal=causal)
+    else:
+        out = local_attention(
+            qf, kf, vf, window=window, causal=causal, bq=bq, bk=bk,
+            interpret=jax.default_backend() == "cpu",
+        )
+    return out.reshape(B, H, L, dh)

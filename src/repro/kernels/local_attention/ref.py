@@ -1,0 +1,12 @@
+"""Oracle for the windowed-attention kernel: dense masked attention."""
+from __future__ import annotations
+
+from repro.core.sparse_attention import windowed_attention
+
+
+def local_attention_ref(q, k, v, *, window: int, causal: bool = False):
+    """q,k,v: [BH, L, dh] -> [BH, L, dh] (per-head layout)."""
+    out = windowed_attention(
+        q[:, None], k[:, None], v[:, None], window, causal=causal
+    )
+    return out[:, 0]

@@ -1,0 +1,150 @@
+"""Roofline analysis from compiled artifacts (no hardware required).
+
+Inputs: `compiled.cost_analysis()` (FLOPs, bytes), `compiled.as_text()`
+(post-SPMD HLO -> per-device collective bytes), `compiled.memory_analysis()`.
+
+Collective cost model (ring algorithms, per-device bytes over the slowest
+link): all-gather -> output bytes x (n-1)/n ~= output bytes;
+all-reduce -> 2x input; reduce-scatter -> input; all-to-all -> input;
+collective-permute -> input.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9  # per link, one direction
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[\w.\-]+)\s+=\s+(?P<type>.*?)\s+(?P<op>[a-z][\w\-]*)\("
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum byte sizes of all array shapes in an HLO type string
+    (handles tuples like (f32[8,4], bf16[2])). Scalars like f32[] count 0-dim."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective traffic by op kind (link-bytes model above).
+
+    Two passes: (1) symbol table %name -> output bytes for every
+    instruction; (2) for each collective, input bytes = sum of operand
+    sizes resolved through the table. HLO dumps reference operands by
+    name only, so the table is required.
+    """
+    sizes: Dict[str, int] = {}
+    defs = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.group("name"), m.group("type"), m.group("op")
+        sizes[name] = _shape_bytes(type_str)
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLL_OPS:
+            args = line[m.end():]
+            args = args.split(", replica_groups")[0].split(", channel_id")[0]
+            operands = _OPERAND_RE.findall(args)
+            defs.append((base, name, operands))
+
+    out: Dict[str, float] = {k: 0.0 for k in _COLL_OPS}
+    counts: Dict[str, int] = {k: 0 for k in _COLL_OPS}
+    seen_started = set()
+    for op, name, operands in defs:
+        if name in seen_started:
+            continue  # -done twin of an async pair
+        seen_started.add(name)
+        in_bytes = sum(sizes.get(o, 0) for o in operands)
+        out_bytes = sizes.get(name, 0)
+        if op == "all-gather":
+            out[op] += out_bytes
+        elif op == "all-reduce":
+            out[op] += 2 * in_bytes
+        else:
+            out[op] += in_bytes
+        counts[op] += 1
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["counts"] = counts  # type: ignore
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per-device HLO flops
+    hbm_bytes: float  # per-device bytes accessed
+    coll_bytes: float  # per-device collective link bytes
+    n_chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "coll_bytes_per_device": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "n_chips": self.n_chips,
+        }
+
+
+def model_flops_lm(cfg, tokens: int, kind: str) -> float:
+    """6·N_active·D for train, 2·N_active·D for inference (+ attention)."""
+    n = cfg.active_param_count()
+    mult = 6 if kind == "train" else 2
+    return mult * n * tokens
+
+
+def mfu_ratio(model_flops: float, hlo_flops_total: float) -> float:
+    """MODEL_FLOPS / HLO_FLOPs — fraction of compiled compute that is
+    'useful'; <1 means remat/dispatch overhead, >1 means the analytic
+    count overestimates (e.g. MoE dropping)."""
+    return model_flops / max(hlo_flops_total, 1.0)

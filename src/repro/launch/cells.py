@@ -1,0 +1,417 @@
+"""Dry-run cell builder: (arch x shape x mesh) -> (fn, abstract args, shardings).
+
+Every one of the 40 assigned cells is constructed here from ShapeDtypeStructs
+(weak-type-correct, zero allocation). The same builders feed the roofline
+benchmarks and the smoke tests (at reduced scale with real arrays).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import GNNConfig, LMConfig, RecSysConfig, get_config
+from repro.configs.shapes import FAMILY_SHAPES, GNNShape, LMShape, RecSysShape
+from repro.distributed.sharding import FAMILY_RULES, adapt_rules, pspec
+from repro.models import transformer as tf
+from repro.models.common import abstract_params, param_pspecs
+from repro.models.gnn import nequip
+from repro.models.gnn.sampler import subgraph_sizes
+from repro.models.recsys import api as rec_api
+from repro.training import optimizer as opt_lib
+from repro.training.train_loop import make_train_step
+
+
+class Cell(NamedTuple):
+    name: str
+    fn: Any  # the pure step function
+    args: Tuple  # ShapeDtypeStruct pytrees
+    in_shardings: Tuple
+    out_shardings: Any
+    meta: Dict  # model flops info etc.
+    donate: Tuple = ()  # argnums donated (train: params+opt_state alias in place)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _ns(mesh, spec):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+# per-shape-kind n_chunks for the dry run (bounded live logits)
+
+
+def _int8_lm_defs(defs):
+    """C5 on the LM serve path: 2-D+ weight matrices -> int8 {"q","s"}
+    (per-out-channel scales); embedding/lm_head -> per-row scales. Norms and
+    biases stay fp. Abstract analogue of core/quantization for the dry-run."""
+    from repro.models.common import ParamDef, is_def
+
+    def visit(path, d):
+        if not is_def(d) or len(d.shape) < 2 or d.dtype == jnp.int8:
+            return d
+        keys = [getattr(k, "key", str(k)) for k in path]
+        name = keys[-1] if keys else ""
+        if "moe" in keys:  # MoE expert einsums keep bf16 (EP path)
+            return d
+        if name.startswith(("attn_norm", "ffn_norm", "b")) or "norm" in name:
+            return d
+        if name in ("embed", "lm_head"):
+            scale_axes = (d.mode_axes(True)[0],)
+            scale_shape = (d.shape[0],)
+        else:
+            scale_axes = (None,)
+            scale_shape = (d.shape[-1],)
+            if len(d.shape) == 3:  # layer-stacked: per (layer, out_channel)
+                scale_shape = (d.shape[0], d.shape[-1])
+                scale_axes = (d.mode_axes(True)[0], None)
+        return {
+            "q": ParamDef(d.shape, d.axes, jnp.int8, "zeros", serve_axes=d.serve_axes),
+            "s": ParamDef(scale_shape, scale_axes, jnp.float32, "ones"),
+        }
+
+    return jax.tree_util.tree_map_with_path(visit, defs, is_leaf=is_def)
+
+
+def _lm_cell(cfg: LMConfig, shape: LMShape, mesh: Mesh, rules, optimizer: str,
+             accum: int = 1) -> Cell:
+    B, S = shape.global_batch, shape.seq_len
+    defs = tf.param_defs(cfg)
+
+    if shape.kind == "train":
+        params = abstract_params(defs)
+        if cfg.train_layout == "tp":
+            # §Perf experiment: Megatron-TP weights (serve layout) during
+            # training — no per-layer weight all-gathers; activations are
+            # batch-sharded only (seq stays unsharded on the model axis).
+            rules = {**rules, "seq": None}
+            p_specs = param_pspecs(defs, rules, serve=True)
+        else:
+            p_specs = param_pspecs(defs, rules, serve=False)
+        opt = opt_lib.get_optimizer(optimizer)
+        opt_state = opt_lib.abstract_state(optimizer, params)
+        o_specs = opt_lib.state_pspecs(optimizer, p_specs, params)
+        batch = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        b_specs = {k: pspec(("batch", "seq"), rules) for k in batch}
+
+        loss_fn = lambda p, b: tf.loss(p, b, cfg, rules)
+        step = make_train_step(loss_fn, opt, grad_accum=accum)
+        metric_specs = {"ce": P(), "aux": P(), "grad_norm": P(), "loss": P()}
+        return Cell(
+            name=f"{cfg.name}:{shape.name}",
+            fn=step,
+            args=(params, opt_state, batch),
+            in_shardings=_ns(mesh, (p_specs, o_specs, b_specs)),
+            out_shardings=_ns(mesh, (p_specs, o_specs, metric_specs)),
+            meta={"tokens": B * S, "kind": "train"},
+            donate=(0, 1),
+        )
+
+    if cfg.int8_serve:
+        defs = _int8_lm_defs(defs)
+    params = abstract_params(defs)
+    p_specs = param_pspecs(defs, rules, serve=True)
+
+    if shape.kind == "prefill":
+        tokens = _sds((B, S), jnp.int32)
+        t_spec = pspec(("batch", "seq"), rules)
+        fn = lambda p, t: tf.prefill(p, t, cfg, rules)
+        cache_spec = pspec(tf.cache_axes(cfg, long_context=False), rules)
+        out_spec = (
+            NamedSharding(mesh, pspec(("batch", None), rules)),
+            (NamedSharding(mesh, cache_spec), NamedSharding(mesh, cache_spec)),
+        )
+        return Cell(
+            name=f"{cfg.name}:{shape.name}",
+            fn=fn,
+            args=(params, tokens),
+            in_shardings=_ns(mesh, (p_specs, t_spec)),
+            out_shardings=out_spec,
+            meta={"tokens": B * S, "kind": "prefill"},
+        )
+
+    assert shape.kind == "decode"
+    long_ctx = S >= 100_000
+    if long_ctx:
+        # batch=1: batch axes cannot shard; all parallelism goes to the
+        # KV sequence (split-K decode over (data, model)).
+        rules = {**rules, "batch": None}
+    hd = cfg.resolved_head_dim
+    cshape = tf.cache_shape(cfg, B, S)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    cache = (_sds(cshape, dt), _sds(cshape, dt))
+    c_spec = pspec(tf.cache_axes(cfg, long_context=long_ctx), rules)
+    token = _sds((B,), jnp.int32)
+    pos = _sds((B,), jnp.int32)
+    fn = lambda p, c, t, q: tf.decode(p, c, t, q, cfg, rules)
+    return Cell(
+        name=f"{cfg.name}:{shape.name}",
+        fn=fn,
+        args=(params, cache, token, pos),
+        in_shardings=_ns(
+            mesh, (p_specs, (c_spec, c_spec), pspec(("batch",), rules), pspec(("batch",), rules))
+        ),
+        out_shardings=(
+            NamedSharding(mesh, pspec(("batch", None), rules)),
+            (NamedSharding(mesh, c_spec), NamedSharding(mesh, c_spec)),
+        ),
+        meta={"tokens": B, "kind": "decode", "kv_len": S},
+        donate=(1,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def _rec_batch_specs(cfg: RecSysConfig, B: int, rules, with_label=True):
+    if cfg.interaction in ("fm", "self_attn"):
+        batch = {"sparse_idx": _sds((B, len(cfg.fields)), jnp.int32)}
+        specs = {"sparse_idx": pspec(("batch", None), rules)}
+    else:
+        L = cfg.seq_len
+        batch = {
+            "user": _sds((B,), jnp.int32),
+            "item": _sds((B,), jnp.int32),
+            "category": _sds((B,), jnp.int32),
+            "hist_item": _sds((B, L), jnp.int32),
+            "hist_category": _sds((B, L), jnp.int32),
+            "hist_len": _sds((B,), jnp.int32),
+        }
+        specs = {
+            k: pspec(("batch",) + (None,) * (len(v.shape) - 1), rules)
+            for k, v in batch.items()
+        }
+    if with_label:
+        batch["label"] = _sds((B,), jnp.float32)
+        specs["label"] = pspec(("batch",), rules)
+    return batch, specs
+
+
+def _full_mesh_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+
+
+def _quantize_table_defs(defs):
+    """§Perf/C5: re-declare row-sharded tables as int8 + per-row scales
+    (the abstract-params analogue of core/quantization.quantize_table)."""
+    from repro.models.common import ParamDef, is_def
+
+    def visit(d):
+        if is_def(d) and len(d.shape) == 2 and d.axes and d.axes[0] == "rows":
+            return {
+                "q": ParamDef(d.shape, d.axes, jnp.int8, "zeros"),
+                "s": ParamDef((d.shape[0],), (d.axes[0],), jnp.float32, "ones"),
+            }
+        return d
+
+    return jax.tree.map(visit, defs, is_leaf=is_def)
+
+
+def _rec_cell(cfg: RecSysConfig, shape: RecSysShape, mesh: Mesh, rules, optimizer: str) -> Cell:
+    if cfg.serve_full_mesh and shape.kind == "serve":
+        rules = {**rules, "batch": _full_mesh_axes(mesh)}
+    defs = rec_api.param_defs(cfg)
+    if cfg.quantized:
+        defs = _quantize_table_defs(defs)
+    params = abstract_params(defs)
+    p_specs = param_pspecs(defs, rules)
+
+    if shape.kind == "train":
+        opt = opt_lib.get_optimizer(optimizer)
+        opt_state = opt_lib.abstract_state(optimizer, params)
+        o_specs = opt_lib.state_pspecs(optimizer, p_specs, params)
+        batch, b_specs = _rec_batch_specs(cfg, shape.batch, rules)
+        loss_fn = lambda p, b: rec_api.loss(p, b, cfg, rules)
+        step = make_train_step(loss_fn, opt)
+        metric_specs = {"bce": P(), "grad_norm": P(), "loss": P()}
+        return Cell(
+            name=f"{cfg.name}:{shape.name}",
+            fn=step,
+            args=(params, opt_state, batch),
+            in_shardings=_ns(mesh, (p_specs, o_specs, b_specs)),
+            out_shardings=_ns(mesh, (p_specs, o_specs, metric_specs)),
+            meta={"examples": shape.batch, "kind": "train"},
+            donate=(0, 1),
+        )
+
+    if shape.kind == "serve":
+        batch, b_specs = _rec_batch_specs(cfg, shape.batch, rules, with_label=False)
+        fn = lambda p, b: rec_api.serve(p, b, cfg, rules)
+        return Cell(
+            name=f"{cfg.name}:{shape.name}",
+            fn=fn,
+            args=(params, batch),
+            in_shardings=_ns(mesh, (p_specs, b_specs)),
+            out_shardings=NamedSharding(mesh, pspec(("batch",), rules)),
+            meta={"examples": shape.batch, "kind": "serve"},
+        )
+
+    assert shape.kind == "retrieval"
+    # candidate axis shards over the full mesh -> pad 1,000,000 -> next
+    # multiple of 512 (the padded tail scores garbage ids, discarded host-side)
+    N = -(-shape.n_candidates // 512) * 512
+    # single-query scoring: the query batch (B=1) cannot shard — all
+    # parallelism goes to the candidate axis.
+    rules = {**rules, "batch": None}
+    query, q_specs = _rec_batch_specs(cfg, 1, rules, with_label=False)
+    if cfg.interaction not in ("fm", "self_attn"):
+        query["cand_category"] = _sds((N,), jnp.int32)
+        q_specs["cand_category"] = pspec(("candidates",), rules)
+    cand = _sds((N,), jnp.int32)
+    fn = lambda p, q, c: rec_api.retrieval(p, q, c, cfg, rules)
+    return Cell(
+        name=f"{cfg.name}:{shape.name}",
+        fn=fn,
+        args=(params, query, cand),
+        in_shardings=_ns(mesh, (p_specs, q_specs, pspec(("candidates",), rules))),
+        out_shardings=NamedSharding(mesh, pspec(("candidates",), rules)),
+        meta={"examples": N, "kind": "retrieval"},
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+_GNN_CLASSES = {"full_graph_sm": 7, "minibatch_lg": 41, "ogb_products": 47, "molecule": 1}
+
+
+def _pad512(n: int) -> int:
+    """Natural graph sizes rarely divide the mesh; inputs are padded with
+    masked nodes/edges (models honour edge_mask / node_mask / label_mask)."""
+    return -(-n // 512) * 512
+
+
+def _gnn_cell(cfg: GNNConfig, shape: GNNShape, mesh: Mesh, rules, optimizer: str) -> Cell:
+    if cfg.full_mesh_graph:
+        full = _full_mesh_axes(mesh)
+        rules = {**rules, "nodes": full, "edges": full}
+    n_classes = _GNN_CLASSES[shape.name]
+
+    if shape.kind == "minibatch":
+        n_nodes, n_edges = subgraph_sizes(shape.batch_nodes, shape.fanout)
+    elif shape.kind == "batched_small":
+        n_nodes = shape.n_nodes * shape.graph_batch
+        n_edges = shape.n_edges * shape.graph_batch
+    else:
+        n_nodes, n_edges = shape.n_nodes, shape.n_edges
+    n_nodes, n_edges = _pad512(n_nodes), _pad512(n_edges)
+
+    defs = nequip.param_defs(cfg, d_feat=shape.d_feat, n_classes=n_classes)
+    params = abstract_params(defs)
+    p_specs = param_pspecs(defs, rules)
+
+    graph: Dict[str, Any] = {
+        "positions": _sds((n_nodes, 3), jnp.float32),
+        "edge_src": _sds((n_edges,), jnp.int32),
+        "edge_dst": _sds((n_edges,), jnp.int32),
+    }
+    g_specs: Dict[str, P] = {
+        "positions": pspec(("nodes", None), rules),
+        "edge_src": pspec(("edges",), rules),
+        "edge_dst": pspec(("edges",), rules),
+    }
+    if shape.d_feat:
+        graph["features"] = _sds((n_nodes, shape.d_feat), jnp.float32)
+        g_specs["features"] = pspec(("nodes", None), rules)
+    else:
+        graph["species"] = _sds((n_nodes,), jnp.int32)
+        g_specs["species"] = pspec(("nodes",), rules)
+
+    graph["edge_mask"] = _sds((n_edges,), jnp.bool_)
+    g_specs["edge_mask"] = pspec(("edges",), rules)
+    if shape.kind == "batched_small":
+        graph["graph_ids"] = _sds((n_nodes,), jnp.int32)
+        graph["energies"] = _sds((shape.graph_batch,), jnp.float32)
+        graph["node_mask"] = _sds((n_nodes,), jnp.bool_)
+        g_specs["graph_ids"] = pspec(("nodes",), rules)
+        g_specs["energies"] = pspec(("batch",), rules)
+        g_specs["node_mask"] = pspec(("nodes",), rules)
+        loss_fn = lambda p, b: nequip.energy_loss(p, b, cfg, rules)
+        metric_names = ("mse",)
+    else:
+        graph["labels"] = _sds((n_nodes,), jnp.int32)
+        g_specs["labels"] = pspec(("nodes",), rules)
+        graph["label_mask"] = _sds((n_nodes,), jnp.bool_)
+        g_specs["label_mask"] = pspec(("nodes",), rules)
+        loss_fn = lambda p, b: nequip.node_class_loss(p, b, cfg, rules)
+        metric_names = ("nll",)
+
+    opt = opt_lib.get_optimizer(optimizer)
+    opt_state = opt_lib.abstract_state(optimizer, params)
+    o_specs = opt_lib.state_pspecs(optimizer, p_specs, params)
+    step = make_train_step(loss_fn, opt)
+    metric_specs = {m: P() for m in metric_names}
+    metric_specs.update({"grad_norm": P(), "loss": P()})
+    return Cell(
+        name=f"{cfg.name}:{shape.name}",
+        fn=step,
+        args=(params, opt_state, graph),
+        in_shardings=_ns(mesh, (p_specs, o_specs, g_specs)),
+        out_shardings=_ns(mesh, (p_specs, o_specs, metric_specs)),
+        meta={"nodes": n_nodes, "edges": n_edges, "kind": "train"},
+        donate=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Entry
+# ---------------------------------------------------------------------------
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    optimizer: str = "adamw",
+    overrides: Optional[Dict] = None,
+    accum: int = 1,
+) -> Cell:
+    cfg = get_config(arch, **(overrides or {}))
+    family = cfg.family
+    rules = adapt_rules(FAMILY_RULES[family], mesh)
+    shape = FAMILY_SHAPES[family][shape_name]
+
+    if family == "lm":
+        # long_500k runs the paper's C2 sparse attention (DESIGN.md §3)
+        if shape_name == "long_500k" and not (overrides or {}).get("sparse_attention") is False:
+            cfg = dataclasses.replace(cfg, sparse_attention=True)
+        return _lm_cell(cfg, shape, mesh, rules, optimizer, accum=accum)
+    if family == "recsys":
+        return _rec_cell(cfg, shape, mesh, rules, optimizer)
+    if family == "gnn":
+        return _gnn_cell(cfg, shape, mesh, rules, optimizer)
+    raise ValueError(family)
+
+
+def all_cells():
+    """The 40 assigned (arch, shape) names."""
+    from repro.configs.base import ARCH_NAMES
+
+    out = []
+    for arch in ARCH_NAMES:
+        if arch == "taobao_ssa":
+            continue  # the paper's own model is extra, not one of the 40
+        fam = get_config(arch).family
+        for shape_name in FAMILY_SHAPES[fam]:
+            out.append((arch, shape_name))
+    return out

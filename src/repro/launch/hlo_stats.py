@@ -1,0 +1,248 @@
+"""Trip-count-aware HLO statistics.
+
+`compiled.cost_analysis()` counts while-loop bodies ONCE — under
+scan-over-layers that under-reports flops/bytes/collectives by ~L x. This
+module parses the post-optimization HLO text, builds the computation call
+graph (fusion/call/while/conditional/reduce...), extracts loop trip counts
+from loop-condition constants, and accumulates:
+
+  * dot flops      : 2 x prod(output dims) x prod(contracting dims)
+  * HBM bytes      : per top-level op, operand + output buffer sizes
+                     (fusion internals excluded — they do not materialize)
+  * collective link bytes per kind (ring model, see analysis.py)
+
+all scaled by the product of enclosing trip counts. Also reports the
+top-k flop-heaviest computations for perf iteration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s+=\s+(?P<type>.*?)\s+(?P<op>[a-z][\w\-]*)\("
+)
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|condition|body|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?"
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONST_CMP_RE = re.compile(r"constant\((\d+)\)")
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "copy", "after-all", "partition-id", "replica-id",
+    "iota",
+}
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[List[List[int]], int]:
+    shapes, total = [], 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        ds = [int(d) for d in dims.split(",")] if dims else []
+        n = 1
+        for d in ds:
+            n *= d
+        shapes.append(ds)
+        total += n * _DTYPE_BYTES[dt]
+    return shapes, total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    op: str
+    type_str: str
+    line: str
+    out_bytes: int
+    out_shapes: List[List[int]]
+    callees: List[str]
+    operands: List[str]
+
+
+def _parse_computations(hlo: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            cur = mc.group(2)
+            comps[cur] = []
+            if mc.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mo = _OP_RE.match(line)
+        if not mo:
+            continue
+        type_str = mo.group("type")
+        shapes, out_bytes = _shape_elems_bytes(type_str)
+        callm = _CALL_ATTR_RE.findall(line)
+        callees = []
+        for grp in callm:
+            callees.extend(x.strip().lstrip("%") for x in grp.split(","))
+        args = line[mo.end():]
+        args = re.split(r"\),\s*[a-z_]+=", args + ")")[0]
+        operands = _OPERAND_RE.findall(args)
+        comps[cur].append(
+            Op(mo.group("name"), mo.group("op"), type_str, line, out_bytes,
+               shapes, callees, operands)
+        )
+    comps["__entry__"] = comps.get(entry, [])  # type: ignore
+    comps["__entry_name__"] = entry  # type: ignore
+    return comps
+
+
+def _trip_count(cond_ops: List[Op]) -> int:
+    """Largest integer constant in the loop-condition computation — for
+    scan/fori loops the bound appears as compare(counter, constant(N))."""
+    best = 1
+    for op in cond_ops:
+        for m in _CONST_CMP_RE.finditer(op.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: Op, sizes: Dict[str, int], shapes: Dict[str, List[List[int]]]) -> float:
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract_dims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+    lhs = op.operands[0] if op.operands else None
+    lhs_shape = shapes.get(lhs, [[]])[0] if lhs else []
+    out_elems = 1
+    for s in op.out_shapes[0] if op.out_shapes else []:
+        out_elems *= s
+    k = 1
+    for d in contract_dims:
+        if d < len(lhs_shape):
+            k *= lhs_shape[d]
+    return 2.0 * out_elems * k
+
+
+def analyze(hlo: str) -> Dict:
+    comps = _parse_computations(hlo)
+    entry_name = comps.pop("__entry_name__")  # type: ignore
+    comps.pop("__entry__")
+
+    # per-computation symbol tables
+    sym_bytes: Dict[str, Dict[str, int]] = {}
+    sym_shapes: Dict[str, Dict[str, List[List[int]]]] = {}
+    for cname, ops in comps.items():
+        sym_bytes[cname] = {o.name: o.out_bytes for o in ops}
+        sym_shapes[cname] = {o.name: o.out_shapes for o in ops}
+
+    # accumulate multipliers over the call graph (iterative worklist)
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry_name] = 1.0
+    order = [entry_name]
+    seen = {entry_name}
+    # BFS respecting that callee multipliers add from all callers
+    work = [entry_name]
+    while work:
+        cname = work.pop()
+        m = mult[cname]
+        for op in comps.get(cname, []):
+            if not op.callees:
+                continue
+            if op.op == "while":
+                body, cond = None, None
+                mb = re.search(r"body=%?([\w.\-]+)", op.line)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.line)
+                body = mb.group(1) if mb else None
+                cond = mc.group(1) if mc else None
+                trips = _trip_count(comps.get(cond, [])) if cond else 1
+                targets = [(body, m * trips), (cond, m * (trips + 1))]
+            else:
+                targets = [(c, m) for c in op.callees]
+            for tgt, tm in targets:
+                if tgt is None or tgt not in comps:
+                    continue
+                mult[tgt] += tm
+                work.append(tgt)
+
+    # computations whose ops materialize buffers: reached through ENTRY /
+    # while / call / conditional edges only. Fusion bodies and
+    # reduce/scatter/sort `to_apply` scalar lambdas do not touch HBM
+    # themselves — their traffic is accounted at the call site.
+    sequential = {entry_name}
+    work2 = [entry_name]
+    while work2:
+        cname = work2.pop()
+        for op in comps.get(cname, []):
+            if op.op in ("while", "call", "conditional"):
+                for tgt in op.callees:
+                    if tgt in comps and tgt not in sequential:
+                        sequential.add(tgt)
+                        work2.append(tgt)
+
+    # accumulate stats
+    flops = 0.0
+    bytes_hbm = 0.0
+    coll = {k: 0.0 for k in _COLL_OPS}
+    coll_counts = {k: 0 for k in _COLL_OPS}
+    per_comp_flops: Dict[str, float] = defaultdict(float)
+
+    for cname, ops in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        local_bytes = sym_bytes[cname]
+        local_shapes = sym_shapes[cname]
+        for op in ops:
+            if op.op in ("dot", "convolution"):
+                f = _dot_flops(op, local_bytes, local_shapes) * m
+                flops += f
+                per_comp_flops[cname] += f
+            base = op.op[:-6] if op.op.endswith("-start") else op.op
+            if base in _COLL_OPS:
+                in_b = sum(local_bytes.get(o, 0) for o in op.operands)
+                out_b = op.out_bytes
+                if base == "all-gather":
+                    coll[base] += out_b * m
+                elif base == "all-reduce":
+                    coll[base] += 2 * in_b * m
+                else:
+                    coll[base] += in_b * m
+                coll_counts[base] += max(int(m), 1)
+            if cname in sequential and op.op not in _SKIP_BYTES_OPS:
+                if op.op in ("gather", "dynamic-slice"):
+                    # HBM traffic of a gather is the TOUCHED rows (output)
+                    # plus indices — not the whole table operand.
+                    idx_b = sum(local_bytes.get(o, 0) for o in op.operands[1:])
+                    bytes_hbm += (2 * op.out_bytes + idx_b) * m
+                elif op.op in ("scatter", "dynamic-update-slice"):
+                    # read-modify-write of the touched region: ~2x update
+                    upd_b = sum(local_bytes.get(o, 0) for o in op.operands[1:])
+                    bytes_hbm += (2 * upd_b + op.out_bytes * 0) * m
+                else:
+                    in_b = sum(local_bytes.get(o, 0) for o in op.operands)
+                    bytes_hbm += (in_b + op.out_bytes) * m
+
+    top = sorted(per_comp_flops.items(), key=lambda kv: -kv[1])[:12]
+    coll["total"] = sum(coll[k] for k in _COLL_OPS)
+    return {
+        "flops": flops,
+        "bytes_hbm": bytes_hbm,
+        "collectives": coll,
+        "collective_counts": coll_counts,
+        "top_computations": [(n, f) for n, f in top],
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,91 @@
+"""Parameter-definition machinery shared by all model families.
+
+A model declares its parameters once as a pytree of `ParamDef`s (shape +
+logical axes + init). From that single declaration we derive:
+  - abstract params (ShapeDtypeStruct tree) for the AOT dry-run,
+  - real initialized params for smoke tests / the end-to-end driver,
+  - PartitionSpec / NamedSharding trees for pjit in_shardings.
+Keeping these three views in one place is what makes 40 (arch x shape)
+cells tractable without sharding-spec drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import pspec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axes for TRAINING (FSDP-style)
+    dtype: Any = jnp.float32
+    init: str = "fan_in"  # "fan_in" | "normal" | "zeros" | "ones" | "embed"
+    scale: float = 1.0
+    serve_axes: Optional[Tuple[Optional[str], ...]] = None  # TP-style, for serving
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+        if self.serve_axes is not None:
+            assert len(self.shape) == len(self.serve_axes)
+
+    def mode_axes(self, serve: bool) -> Tuple[Optional[str], ...]:
+        return self.serve_axes if (serve and self.serve_axes is not None) else self.axes
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def abstract_params(defs):
+    """ParamDef tree -> ShapeDtypeStruct tree (no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def
+    )
+
+
+def param_pspecs(defs, rules, serve: bool = False):
+    """ParamDef tree -> PartitionSpec tree (training or serving layout)."""
+    return jax.tree.map(
+        lambda d: pspec(d.mode_axes(serve), rules), defs, is_leaf=is_def
+    )
+
+
+def _init_one(d: ParamDef, key) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "embed":
+        std = d.scale * 0.02
+        return (jax.random.normal(key, d.shape) * std).astype(d.dtype)
+    if d.init == "normal":
+        return (jax.random.normal(key, d.shape) * d.scale * 0.02).astype(d.dtype)
+    if d.init == "fan_in":
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, d.shape) * std).astype(d.dtype)
+    raise ValueError(d.init)
+
+
+def init_params(defs, rng):
+    """ParamDef tree -> real arrays. Only call at smoke-test scale."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_one(d, k) for d, k in zip(leaves, keys)])
+
+
+def param_count(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return int(sum(np.prod(d.shape) for d in leaves))
+
+
+def param_bytes(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return int(sum(np.prod(d.shape) * jnp.dtype(d.dtype).itemsize for d in leaves))

@@ -1,0 +1,177 @@
+"""Minimal SO(3) irrep algebra for l <= 2 (NequIP substrate).
+
+Representation choice (DESIGN.md §3): l=0 scalars, l=1 as 3-vectors acted on
+by R, l=2 as 5-vectors in an orthonormal basis {Q_k} of symmetric-traceless
+3x3 matrices acted on by M -> R M Rᵀ. All Clebsch-Gordan coupling paths are
+then explicit vector/matrix algebra — manifestly equivariant, no Wigner
+machinery, and trivially testable (tests/test_gnn.py rotates inputs and
+checks outputs co-rotate). Parity is not tracked (SO(3), not O(3)); noted
+as a changed assumption in DESIGN.md.
+
+Feature container: dict {0: [..., C, 1], 1: [..., C, 3], 2: [..., C, 5]}.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_s2 = 1.0 / np.sqrt(2.0)
+_s6 = 1.0 / np.sqrt(6.0)
+
+# Orthonormal (Frobenius) basis of symmetric traceless 3x3 matrices.
+_Q = np.zeros((5, 3, 3), np.float32)
+_Q[0, 0, 1] = _Q[0, 1, 0] = _s2  # xy
+_Q[1, 1, 2] = _Q[1, 2, 1] = _s2  # yz
+_Q[2, 0, 2] = _Q[2, 2, 0] = _s2  # xz
+_Q[3, 0, 0], _Q[3, 1, 1] = _s2, -_s2  # x² − y²
+_Q[4, 0, 0] = _Q[4, 1, 1] = -_s6
+_Q[4, 2, 2] = 2 * _s6  # 2z² − x² − y²
+
+Q = jnp.asarray(_Q)  # [5,3,3]
+
+DIM = {0: 1, 1: 3, 2: 5}
+
+
+def to_matrix(t5: jax.Array) -> jax.Array:
+    """[..., 5] -> [..., 3, 3] symmetric traceless."""
+    return jnp.einsum("...k,kab->...ab", t5, Q)
+
+
+def to_vec5(m: jax.Array) -> jax.Array:
+    """[..., 3, 3] -> [..., 5] (projects onto the symmetric-traceless part)."""
+    return jnp.einsum("...ab,kab->...k", m, Q)
+
+
+def spherical_harmonics(r: jax.Array) -> Dict[int, jax.Array]:
+    """r: [..., 3] displacement -> {l: [..., 2l+1]} of the unit direction.
+    Constant normalisation factors only (they fold into learned weights)."""
+    n = r / jnp.clip(jnp.linalg.norm(r, axis=-1, keepdims=True), 1e-9)
+    y0 = jnp.ones(n.shape[:-1] + (1,), n.dtype)
+    y1 = n
+    outer = n[..., :, None] * n[..., None, :]
+    eye = jnp.eye(3, dtype=n.dtype)
+    y2 = to_vec5(outer - eye / 3.0)
+    return {0: y0, 1: y1, 2: y2}
+
+
+# ---------------------------------------------------------------------------
+# Tensor-product coupling paths  tp[l1][l2] -> {l_out: fn(a, b)}
+# a: [..., d1] feature; b: [..., d2] (broadcastable); out [..., d_out].
+# ---------------------------------------------------------------------------
+
+
+def _p000(a, b):
+    return a * b
+
+
+def _p011(a, b):
+    return a * b  # scalar [..,1] × vector [..,3]
+
+
+def _p022(a, b):
+    return a * b
+
+
+def _p101(a, b):
+    return a * b[..., :1] if b.shape[-1] == 1 else a * b
+
+
+def _p110(a, b):
+    return jnp.sum(a * b, axis=-1, keepdims=True)
+
+
+def _p111(a, b):
+    return jnp.cross(a, b)
+
+
+def _p112(a, b):
+    outer = 0.5 * (a[..., :, None] * b[..., None, :] + b[..., :, None] * a[..., None, :])
+    tr = (jnp.sum(a * b, axis=-1) / 3.0)[..., None, None]
+    return to_vec5(outer - tr * jnp.eye(3, dtype=a.dtype))
+
+
+def _p121(a, b):
+    """vector ⊗ 5-vec -> vector: M(b) · a."""
+    return jnp.einsum("...ab,...b->...a", to_matrix(b), a)
+
+
+def _p122(a, b):
+    """vector ⊗ 5-vec -> 5-vec: sym(ε a M)."""
+    M = to_matrix(b)
+    vxM = jnp.einsum("acd,...c,...db->...ab", _eps(), a, M)
+    sym = 0.5 * (vxM + jnp.swapaxes(vxM, -1, -2))
+    return to_vec5(sym)
+
+
+def _p220(a, b):
+    return jnp.sum(a * b, axis=-1, keepdims=True)  # Frobenius (basis orthonormal)
+
+
+def _p221(a, b):
+    Ma, Mb = to_matrix(a), to_matrix(b)
+    comm = Ma @ Mb - Mb @ Ma
+    return jnp.stack(
+        [comm[..., 1, 2] - comm[..., 2, 1],
+         comm[..., 2, 0] - comm[..., 0, 2],
+         comm[..., 0, 1] - comm[..., 1, 0]],
+        axis=-1,
+    ) * 0.5
+
+
+def _p222(a, b):
+    Ma, Mb = to_matrix(a), to_matrix(b)
+    anti = 0.5 * (Ma @ Mb + Mb @ Ma)
+    tr = jnp.trace(anti, axis1=-2, axis2=-1)[..., None, None] / 3.0
+    return to_vec5(anti - tr * jnp.eye(3, dtype=a.dtype))
+
+
+def _eps():
+    e = np.zeros((3, 3, 3), np.float32)
+    e[0, 1, 2] = e[1, 2, 0] = e[2, 0, 1] = 1
+    e[0, 2, 1] = e[2, 1, 0] = e[1, 0, 2] = -1
+    return jnp.asarray(e)
+
+
+def _swap(fn):
+    return lambda a, b: fn(b, a)
+
+
+# (l_feat, l_sh) -> {l_out: fn(feat, sh)}
+PATHS = {
+    (0, 0): {0: _p000},
+    (0, 1): {1: _p011},
+    (0, 2): {2: _p022},
+    (1, 0): {1: _p101},
+    (1, 1): {0: _p110, 1: _p111, 2: _p112},
+    (1, 2): {1: _p121, 2: _p122},
+    (2, 0): {2: lambda a, b: a * b},
+    (2, 1): {1: _swap(_p121), 2: _swap(_p122)},
+    (2, 2): {0: _p220, 1: _p221, 2: _p222},
+}
+
+N_PATHS = sum(len(v) for v in PATHS.values())  # 15
+
+
+def path_list():
+    """Deterministic ordering of (l_feat, l_sh, l_out)."""
+    out = []
+    for (lf, ls), outs in sorted(PATHS.items()):
+        for lo in sorted(outs):
+            out.append((lf, ls, lo, PATHS[(lf, ls)][lo]))
+    return out
+
+
+def rotate_features(feats: Dict[int, jax.Array], R: jax.Array) -> Dict[int, jax.Array]:
+    """Apply a rotation to an irrep feature dict (for equivariance tests)."""
+    out = {}
+    if 0 in feats:
+        out[0] = feats[0]
+    if 1 in feats:
+        out[1] = jnp.einsum("ab,...b->...a", R, feats[1])
+    if 2 in feats:
+        M = to_matrix(feats[2])
+        out[2] = to_vec5(jnp.einsum("ac,...cd,bd->...ab", R, M, R))
+    return out

@@ -1,0 +1,225 @@
+"""Shared neural-net layers for the LM family (pure functions over pytrees).
+
+Everything here is written against *global* array shapes; GSPMD partitions
+according to the logical-axis constraints applied by the caller.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x, scale, norm_type: str):
+    return rms_norm(x, scale) if norm_type == "rmsnorm" else layer_norm(x, scale)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (full + fractional / "2d" GLM variant)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, fraction: float, theta: float):
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, theta: float, fraction: float = 1.0):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int)."""
+    head_dim = x.shape[-1]
+    inv, rot = rope_freqs(head_dim, fraction, theta)
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., seq, rot/2]
+    cos = jnp.cos(ang)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    # re-interleave
+    out = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention — dense, query-chunked (flash-style), decode, sparse decode
+# ---------------------------------------------------------------------------
+
+
+def dense_attention(q, k, v, *, causal: bool, q_offset: int = 0):
+    """Reference full attention. q: [B,S,K,G,hd] (GQA-grouped);
+    k, v: [B,T,K,hd]. Returns [B,S,K,G,hd]."""
+    B, S, K, G, hd = q.shape
+    T = k.shape[1]
+    scale = hd**-0.5
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", q * scale, k, preferred_element_type=jnp.float32
+    )  # [B,K,G,S,T]
+    if causal:
+        qpos = jnp.arange(S) + q_offset
+        kpos = jnp.arange(T)
+        mask = kpos[None, :] <= qpos[:, None]  # [S,T]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out
+
+
+def flash_attention(q, k, v, *, causal: bool, kv_chunk: int = 1024, q_offset: int = 0,
+                    remat_step: bool = False):
+    """KV-chunked streaming-softmax attention (FlashAttention recurrence).
+
+    Scans over key/value chunks carrying (running max, normalizer, weighted
+    accumulator), so the live score buffer is [B,K,G,S,kv_chunk] instead of
+    [B,K,G,S,T]. The *query* dim S may be sequence-sharded (context
+    parallelism): every operation here is pointwise or contracts over the
+    chunked key dim, so GSPMD keeps S sharded throughout.
+
+    q: [B,S,K,G,hd]; k, v: [B,T,K,hd]. Returns [B,S,K,G,hd].
+    """
+    B, S, K, G, hd = q.shape
+    T = k.shape[1]
+    if T <= kv_chunk:
+        return dense_attention(q, k, v, causal=causal, q_offset=q_offset)
+    assert T % kv_chunk == 0, (T, kv_chunk)
+    nc = T // kv_chunk
+    scale = hd**-0.5
+    qs = (q * scale).astype(q.dtype)
+    qpos = q_offset + jnp.arange(S)  # global query positions
+
+    ks = jnp.moveaxis(k.reshape(B, nc, kv_chunk, K, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nc, kv_chunk, K, hd), 1, 0)
+    t0s = jnp.arange(nc) * kv_chunk
+
+    m0 = jnp.full((B, K, G, S), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S), jnp.float32)
+    a0 = jnp.zeros((B, K, G, S, hd), jnp.float32)
+
+    def step(carry, ck):
+        m, l, acc = carry
+        kc, vc, t0 = ck
+        s = jnp.einsum(
+            "bskgd,btkd->bkgst", qs, kc, preferred_element_type=jnp.float32
+        )  # [B,K,G,S,c]
+        if causal:
+            kpos = t0 + jnp.arange(kv_chunk)
+            mask = kpos[None, :] <= qpos[:, None]  # [S,c]
+            s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(v.dtype), vc)
+        acc_new = acc * alpha[..., None] + pv.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    if remat_step:
+        # without this, scan-for-grad saves the [B,K,G,S,c] score blocks of
+        # EVERY chunk for backward (~10 GiB/layer at 4k tokens) — remat of
+        # the step keeps only the (m, l, acc) carries (§Perf hillclimb 1)
+        step = jax.checkpoint(step, prevent_cse=False)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (ks, vs, t0s))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 3, 1).astype(q.dtype)  # [B,S,K,G,hd]
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """Single-token decode. q: [B,1,K,G,hd]; caches: [B,T,K,hd]; pos: [B]
+    index of the current token (attends to <= pos)."""
+    B, _, Kh, G, hd = q.shape
+    T = k_cache.shape[1]
+    scale = hd**-0.5
+    scores = jnp.einsum("bkgd,btkd->bkgt", q[:, 0] * scale, k_cache)
+    scores = scores.astype(jnp.float32)
+    valid = jnp.arange(T)[None] <= pos[:, None]  # [B,T]
+    scores = jnp.where(valid[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs.astype(v_cache.dtype), v_cache)
+    return out[:, None]  # [B,1,K,G,hd]
+
+
+def sparse_decode_attention(q, k_cache, v_cache, pos, *, window: int, n_global: int):
+    """The paper's C2 hybrid sparse attention at decode time: full attention
+    over the trailing `window` positions + `n_global` strided global samples
+    (fixed sparse pattern, Formula 4 -> O(w + n_global) per token).
+
+    q: [B,1,K,G,hd]; caches: [B,T,K,hd]; pos: [B].
+    """
+    B, _, Kh, G, hd = q.shape
+    T = k_cache.shape[1]
+    window = min(window, T)
+    n_global = min(n_global, T)
+    scale = hd**-0.5
+
+    # ---- trailing window: dynamic_slice per batch row at pos-window+1 ----
+    start = jnp.clip(pos - window + 1, 0, T - window)  # [B]
+
+    def slice_row(cache_row, s):
+        return jax.lax.dynamic_slice_in_dim(cache_row, s, window, axis=0)
+
+    k_win = jax.vmap(slice_row)(k_cache, start)  # [B,window,K,hd]
+    v_win = jax.vmap(slice_row)(v_cache, start)
+    win_pos = start[:, None] + jnp.arange(window)[None]  # [B,window]
+
+    # ---- strided global samples over [0, pos] ----
+    # fixed pattern: n_global evenly spaced positions in [0, pos]
+    frac = jnp.linspace(0.0, 1.0, n_global)
+    gpos = jnp.floor(frac[None] * jnp.maximum(pos[:, None], 1)).astype(jnp.int32)
+
+    def gather_row(cache_row, idx):
+        return jnp.take(cache_row, idx, axis=0)
+
+    k_glb = jax.vmap(gather_row)(k_cache, gpos)  # [B,n_global,K,hd]
+    v_glb = jax.vmap(gather_row)(v_cache, gpos)
+
+    k_sp = jnp.concatenate([k_win, k_glb], axis=1)  # [B,W+Gb,K,hd]
+    v_sp = jnp.concatenate([v_win, v_glb], axis=1)
+    sel_pos = jnp.concatenate([win_pos, gpos], axis=1)  # [B,W+Gb]
+
+    scores = jnp.einsum("bkgd,btkd->bkgt", q[:, 0] * scale, k_sp).astype(jnp.float32)
+    valid = sel_pos <= pos[:, None]
+    # avoid double-counting: global positions inside the window are masked
+    in_window = sel_pos >= start[:, None]
+    dup = jnp.concatenate(
+        [jnp.zeros((B, window), bool), in_window[:, window:]], axis=1
+    )
+    scores = jnp.where((valid & ~dup)[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs.astype(v_sp.dtype), v_sp)
+    return out[:, None]
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)

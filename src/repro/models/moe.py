@@ -1,0 +1,136 @@
+"""Mixture-of-Experts layer: top-k router + sort-based (dropping) dispatch.
+
+Dispatch strategy: flatten tokens, replicate each token top_k times, sort the
+(token, expert) entries by expert id, truncate each expert's queue at a
+static capacity C = ceil(top_k * T / E * capacity_factor), run the expert
+FFNs as one batched einsum over the [E, C, D] buffer, and scatter results
+back weighted by the router probabilities. This is the production
+capacity-based scheme (GShard/Switch semantics) expressed with gather/
+scatter instead of the O(T*E*C) one-hot einsum, so it lowers at 1M-token
+batch sizes. Expert weights are sharded experts->model (EP); the token
+buffer C->data — GSPMD inserts the dispatch collectives (baseline; a manual
+shard_map all-to-all variant lives in distributed/collectives.py, used by
+the §Perf hillclimb).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef
+from repro.models.layers import swiglu
+
+
+def moe_param_defs(cfg, n_moe_layers: int, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    L = n_moe_layers
+    # train: experts -> model (EP), one weight dim FSDP over (pod, data) —
+    # the shard_map EP path all-gathers that dim just-in-time (axis=1).
+    # serve: experts -> model, contraction dim -> data (tiny decode psum).
+    defs = {
+        "router": ParamDef(
+            (L, d, e), ("layers", None, None), dtype, "fan_in",
+        ),
+        "w_gate": ParamDef(
+            (L, e, d, f), ("layers", "experts", "expert_dp", None), dtype, "fan_in",
+            serve_axes=("layers", "experts", "moe_in", None),
+        ),
+        "w_up": ParamDef(
+            (L, e, d, f), ("layers", "experts", "expert_dp", None), dtype, "fan_in",
+            serve_axes=("layers", "experts", "moe_in", None),
+        ),
+        "w_down": ParamDef(
+            (L, e, f, d), ("layers", "experts", "expert_dp", None), dtype, "fan_in",
+            serve_axes=("layers", "experts", "moe_in", None),
+        ),
+    }
+    if cfg.n_shared_experts:
+        s = cfg.n_shared_experts * f
+        defs["shared_gate"] = ParamDef(
+            (L, d, s), ("layers", "expert_dp", None), dtype, "fan_in",
+            serve_axes=("layers", None, "ff"),
+        )
+        defs["shared_up"] = ParamDef(
+            (L, d, s), ("layers", "expert_dp", None), dtype, "fan_in",
+            serve_axes=("layers", None, "ff"),
+        )
+        defs["shared_down"] = ParamDef(
+            (L, s, d), ("layers", "expert_dp", None), dtype, "fan_in",
+            serve_axes=("layers", "tp_in", None),
+        )
+    return defs
+
+
+def capacity(n_tokens: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = math.ceil(top_k * n_tokens / n_experts * factor)
+    return max(8, int(c))
+
+
+def moe_ffn(x, layer_params, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> ([B, S, D], aux_loss scalar).
+
+    layer_params holds this layer's slices: router [D,E], w_* [E,D,F].
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    C = capacity(T, E, K, cfg.capacity_factor)
+
+    xt = x.reshape(T, D)
+    logits = jnp.einsum("td,de->te", xt, layer_params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # [T,E]
+    gate, expert_idx = jax.lax.top_k(probs, K)  # [T,K]
+    gate = gate / jnp.clip(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing auxiliary loss (Switch-style) ----
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=1), axis=0
+    )  # fraction of tokens per expert
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch with static capacity ----
+    flat_e = expert_idx.reshape(-1)  # [T*K] token-major
+    order = jnp.argsort(flat_e)  # stable in XLA for equal keys
+    sorted_e = flat_e[order]
+    first_of_e = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_in_e = jnp.arange(T * K) - first_of_e  # rank within expert queue
+    kept = pos_in_e < C
+    buf_slot = jnp.where(kept, sorted_e * C + pos_in_e, E * C)  # E*C = drop bin
+    sorted_tok = order // K
+
+    # gather tokens into the [E*C, D] buffer (dropped entries scattered off-end)
+    buffer = jnp.zeros((E * C, D), x.dtype)
+    buffer = buffer.at[buf_slot].set(xt[sorted_tok], mode="drop")
+    buffer = buffer.reshape(E, C, D)
+
+    # ---- expert FFNs: batched einsum over the expert dim (EP-sharded) ----
+    g = jnp.einsum("ecd,edf->ecf", buffer, layer_params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buffer, layer_params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, layer_params["w_down"]).reshape(E * C, D)
+
+    # ---- combine: each (token, k) entry reads back its buffer slot ----
+    entry_slot = jnp.zeros((T * K,), jnp.int32).at[order].set(
+        jnp.where(kept, buf_slot, -1).astype(jnp.int32), mode="drop"
+    )
+    entry_out = jnp.where(
+        (entry_slot >= 0)[:, None],
+        jnp.take(out_buf, jnp.clip(entry_slot, 0), axis=0),
+        0.0,
+    )  # [T*K, D]
+    weighted = entry_out.reshape(T, K, D) * gate[..., None].astype(x.dtype)
+    out = jnp.sum(weighted, axis=1)
+
+    # ---- shared expert (always-on, TP-sharded like a dense FFN) ----
+    if "shared_gate" in layer_params:
+        out = out + swiglu(
+            xt,
+            layer_params["shared_gate"],
+            layer_params["shared_up"],
+            layer_params["shared_down"],
+        )
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,93 @@
+"""AutoInt [arXiv:1810.11921]: multi-head self-attention over field embeddings.
+
+Layer l: Q,K,V projections of the [B, F, d_l] field matrix, softmax over the
+field axis, residual via a linear map, ReLU. After n layers the flattened
+field matrix feeds a linear scorer. This is the assigned arch where the
+paper's C1 (grouped/low-rank projections) and C5 (int8) apply most directly.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecSysConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import ParamDef
+from repro.models.recsys.embedding import unified_lookup, unified_offsets, unified_table_def
+from repro.models.recsys.rec_layers import bce_with_logits
+
+
+def _dims(cfg: RecSysConfig):
+    d_out = cfg.n_heads * cfg.d_attn
+    ins = [cfg.embed_dim] + [d_out] * (cfg.n_attn_layers - 1)
+    return ins, d_out
+
+
+def param_defs(cfg: RecSysConfig) -> Dict:
+    ins, d_out = _dims(cfg)
+    defs: Dict = {"table": unified_table_def(cfg)}
+    for l, d_in in enumerate(ins):
+        defs[f"attn{l}"] = {
+            "wq": ParamDef((d_in, d_out), (None, None), jnp.float32, "fan_in"),
+            "wk": ParamDef((d_in, d_out), (None, None), jnp.float32, "fan_in"),
+            "wv": ParamDef((d_in, d_out), (None, None), jnp.float32, "fan_in"),
+            "w_res": ParamDef((d_in, d_out), (None, None), jnp.float32, "fan_in"),
+        }
+    F = len(cfg.fields)
+    defs["w_out"] = ParamDef((F * d_out, 1), (None, None), jnp.float32, "fan_in")
+    defs["b_out"] = ParamDef((1,), (None,), jnp.float32, "zeros")
+    return defs
+
+
+def _interact(params, e, cfg: RecSysConfig):
+    """e: [B, F, d0] -> [B, F, d_out] through the attention stack."""
+    H, da = cfg.n_heads, cfg.d_attn
+    x = e
+    for l in range(cfg.n_attn_layers):
+        p = params[f"attn{l}"]
+        B, F, _ = x.shape
+        q = (x @ p["wq"]).reshape(B, F, H, da)
+        k = (x @ p["wk"]).reshape(B, F, H, da)
+        v = (x @ p["wv"]).reshape(B, F, H, da)
+        s = jnp.einsum("bfhd,bghd->bhfg", q, k) / jnp.sqrt(da)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhfg,bghd->bfhd", a, v).reshape(B, F, H * da)
+        x = jax.nn.relu(o + x @ p["w_res"])
+    return x
+
+
+def logits(params, batch, cfg: RecSysConfig, rules):
+    e = unified_lookup(params["table"], batch["sparse_idx"], cfg, rules)
+    x = _interact(params, e, cfg)
+    B = x.shape[0]
+    out = x.reshape(B, -1) @ params["w_out"] + params["b_out"]
+    return constrain(out[:, 0], ("batch",), rules)
+
+
+def loss(params, batch, cfg: RecSysConfig, rules):
+    lg = logits(params, batch, cfg, rules)
+    b = bce_with_logits(lg, batch["label"])
+    return b, {"bce": b}
+
+
+def serve(params, batch, cfg: RecSysConfig, rules):
+    return jax.nn.sigmoid(logits(params, batch, cfg, rules))
+
+
+def retrieval(params, query, cand_ids, cfg: RecSysConfig, rules):
+    """Broadcast the 38 user-field embeddings; swap the candidate field's
+    embedding per candidate; full attention stack over [N, F, d]."""
+    cand_field = max(range(len(cfg.fields)), key=lambda i: cfg.fields[i].vocab)
+    offs = unified_offsets(cfg)
+    e = unified_lookup(params["table"], query["sparse_idx"], cfg, rules)[0]  # [F,d]
+    v_c = jnp.take(params["table"], cand_ids + int(offs[cand_field]), axis=0)
+    v_c = constrain(v_c, ("candidates", None), rules)
+    N = v_c.shape[0]
+    eN = jnp.broadcast_to(e[None], (N,) + e.shape)
+    eN = eN.at[:, cand_field, :].set(v_c)
+    eN = constrain(eN, ("candidates", None, None), rules)
+    x = _interact(params, eN, cfg)
+    scores = (x.reshape(N, -1) @ params["w_out"] + params["b_out"])[:, 0]
+    return constrain(scores, ("candidates",), rules)

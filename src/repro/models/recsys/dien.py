@@ -1,0 +1,148 @@
+"""DIEN [arXiv:1809.03672]: GRU interest extraction + AUGRU interest evolution.
+
+Stage 1: standard GRU over behaviour units -> interest states h_t.
+Stage 2: attention score a_t = softmax(h_t W_a cand); AUGRU scales the
+update gate by a_t:  u_t' = a_t * u_t;  h_t = (1-u_t')∘h_{t-1} + u_t'∘h̃_t.
+The recurrence runs as `jax.lax.scan` over time (the AUGRU cell is also
+provided as a Pallas kernel candidate in kernels/, see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecSysConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import ParamDef
+from repro.models.recsys.embedding import field_lookup, named_table_defs
+from repro.models.recsys.rec_layers import bce_with_logits, mlp_apply, mlp_defs
+
+
+def _gru_defs(name: str, d_in: int, g: int) -> Dict:
+    return {
+        f"{name}_wx": ParamDef((d_in, 3 * g), (None, None), jnp.float32, "fan_in"),
+        f"{name}_wh": ParamDef((g, 3 * g), (None, None), jnp.float32, "fan_in"),
+        f"{name}_b": ParamDef((3 * g,), (None,), jnp.float32, "zeros"),
+    }
+
+
+def param_defs(cfg: RecSysConfig) -> Dict:
+    de = cfg.embed_dim
+    du = 2 * de
+    g = cfg.gru_dim
+    defs: Dict = {"tables": named_table_defs(cfg)}
+    defs.update(_gru_defs("gru1", du, g))
+    defs.update(_gru_defs("augru", g, g))
+    defs["w_att"] = ParamDef((g, du), (None, None), jnp.float32, "fan_in")
+    defs.update(mlp_defs("tower", de + du + g, cfg.mlp_dims))
+    return defs
+
+
+def _gru_cell(params, name, h, x, a=None):
+    """Gates in [r, u, c] layout; a (optional) scales the update gate."""
+    g = h.shape[-1]
+    zx = x @ params[f"{name}_wx"] + params[f"{name}_b"]
+    zh = h @ params[f"{name}_wh"]
+    r = jax.nn.sigmoid(zx[..., :g] + zh[..., :g])
+    u = jax.nn.sigmoid(zx[..., g : 2 * g] + zh[..., g : 2 * g])
+    c = jnp.tanh(zx[..., 2 * g :] + r * zh[..., 2 * g :])
+    if a is not None:
+        u = a[..., None] * u  # AUGRU: attentional update gate
+    return (1.0 - u) * h + u * c
+
+
+def _run_gru(params, name, xs, mask, g, att=None):
+    """xs: [B,L,d] time scan; mask: [B,L]; att: [B,L] or None -> [B,L,g] states."""
+    B, L, _ = xs.shape
+
+    def step(h, inp):
+        if att is None:
+            x_t, m_t = inp
+            h_new = _gru_cell(params, name, h, x_t)
+        else:
+            x_t, m_t, a_t = inp
+            h_new = _gru_cell(params, name, h, x_t, a_t)
+        h = jnp.where(m_t[:, None], h_new, h)
+        return h, h
+
+    xs_t = jnp.moveaxis(xs, 1, 0)  # [L,B,d]
+    mask_t = jnp.moveaxis(mask, 1, 0)
+    inputs = (xs_t, mask_t) if att is None else (xs_t, mask_t, jnp.moveaxis(att, 1, 0))
+    h0 = jnp.zeros((B, g), xs.dtype)
+    h_last, hs = jax.lax.scan(step, h0, inputs)
+    return h_last, jnp.moveaxis(hs, 0, 1)  # [B,L,g]
+
+
+def _behaviour_emb(params, batch, cfg, rules, hist: bool):
+    t = params["tables"]
+    if hist:
+        it = field_lookup(t, cfg, "hist_item", batch["hist_item"], rules)
+        ca = field_lookup(t, cfg, "hist_category", batch["hist_category"], rules)
+    else:
+        it = field_lookup(t, cfg, "item", batch["item"], rules)
+        ca = field_lookup(t, cfg, "category", batch["category"], rules)
+    return jnp.concatenate([it, ca], axis=-1)
+
+
+def _interest(params, hist, mask, cand, cfg):
+    """hist [B,L,du], cand [B,du] -> final evolved interest [B,g]."""
+    g = cfg.gru_dim
+    _, h1 = _run_gru(params, "gru1", hist, mask, g)  # [B,L,g]
+    att_logits = jnp.einsum("blg,gd,bd->bl", h1, params["w_att"], cand)
+    att_logits = jnp.where(mask, att_logits, -1e30)
+    att = jax.nn.softmax(att_logits.astype(jnp.float32), axis=-1).astype(h1.dtype)
+    h_final, _ = _run_gru(params, "augru", h1, mask, g, att=att)
+    return h_final
+
+
+def logits(params, batch, cfg: RecSysConfig, rules):
+    user = field_lookup(params["tables"], cfg, "user", batch["user"], rules)
+    hist = _behaviour_emb(params, batch, cfg, rules, hist=True)
+    cand = _behaviour_emb(params, batch, cfg, rules, hist=False)
+    mask = jnp.arange(hist.shape[1])[None] < batch["hist_len"][:, None]
+    interest = _interest(params, hist, mask, cand, cfg)
+    x = jnp.concatenate([user, cand, interest], axis=-1)
+    out = mlp_apply(params, "tower", x, len(cfg.mlp_dims))[:, 0]
+    return constrain(out, ("batch",), rules)
+
+
+def loss(params, batch, cfg: RecSysConfig, rules):
+    lg = logits(params, batch, cfg, rules)
+    b = bce_with_logits(lg, batch["label"])
+    return b, {"bce": b}
+
+
+def serve(params, batch, cfg: RecSysConfig, rules):
+    return jax.nn.sigmoid(logits(params, batch, cfg, rules))
+
+
+def retrieval(params, query, cand_ids, cfg: RecSysConfig, rules):
+    """GRU stage-1 runs once; candidate-dependent AUGRU batched over N."""
+    t = params["tables"]
+    user = field_lookup(t, cfg, "user", query["user"], rules)[0]
+    hist = _behaviour_emb(params, query, cfg, rules, hist=True)  # [1,L,du]
+    L = hist.shape[1]
+    mask = jnp.arange(L)[None] < query["hist_len"][:, None]  # [1,L]
+
+    it = jnp.take(t["item"], cand_ids, axis=0)
+    ca = jnp.take(t["category"], query["cand_category"], axis=0)
+    cand = jnp.concatenate([it, ca], axis=-1)
+    cand = constrain(cand, ("candidates", None), rules)
+    N = cand.shape[0]
+
+    g = cfg.gru_dim
+    _, h1 = _run_gru(params, "gru1", hist, mask, g)  # [1,L,g]
+    att_logits = jnp.einsum("lg,gd,nd->nl", h1[0], params["w_att"], cand)
+    att_logits = jnp.where(mask, att_logits, -1e30)
+    att = jax.nn.softmax(att_logits.astype(jnp.float32), axis=-1).astype(h1.dtype)
+
+    h1N = jnp.broadcast_to(h1, (N, L, g))
+    maskN = jnp.broadcast_to(mask, (N, L))
+    h_final, _ = _run_gru(params, "augru", h1N, maskN, g, att=att)
+
+    userN = jnp.broadcast_to(user[None], (N, user.shape[0]))
+    x = jnp.concatenate([userN, cand, h_final], axis=-1)
+    scores = mlp_apply(params, "tower", x, len(cfg.mlp_dims))[:, 0]
+    return constrain(scores, ("candidates",), rules)

@@ -1,0 +1,93 @@
+"""DIN [arXiv:1706.06978]: target attention over the behaviour sequence.
+
+Behaviour unit = item_emb ⊕ category_emb (2·de). Attention features per
+(candidate, step): [h, c, h−c, h·c] -> MLP(80,40) -> masked softmax ->
+weighted sum. Tower: [user, cand, pooled] -> MLP(200,80) -> logit.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecSysConfig
+from repro.distributed.sharding import constrain
+from repro.models.recsys.embedding import field_lookup, named_table_defs
+from repro.models.recsys.rec_layers import bce_with_logits, mlp_apply, mlp_defs
+
+
+def param_defs(cfg: RecSysConfig) -> Dict:
+    de = cfg.embed_dim
+    du = 2 * de  # behaviour-unit dim
+    defs: Dict = {"tables": named_table_defs(cfg)}
+    defs.update(mlp_defs("attn", 4 * du, cfg.attn_mlp_dims))
+    tower_in = de + du + du  # user + candidate + pooled
+    defs.update(mlp_defs("tower", tower_in, cfg.mlp_dims))
+    return defs
+
+
+def _behaviour_emb(params, batch, cfg, rules, hist: bool):
+    t = params["tables"]
+    if hist:
+        it = field_lookup(t, cfg, "hist_item", batch["hist_item"], rules)
+        ca = field_lookup(t, cfg, "hist_category", batch["hist_category"], rules)
+    else:
+        it = field_lookup(t, cfg, "item", batch["item"], rules)
+        ca = field_lookup(t, cfg, "category", batch["category"], rules)
+    return jnp.concatenate([it, ca], axis=-1)  # [..., 2de]
+
+
+def target_attention(params, hist, cand, hist_mask, cfg):
+    """hist: [B,L,du]; cand: [B,du] -> pooled [B,du]."""
+    B, L, du = hist.shape
+    c = jnp.broadcast_to(cand[:, None, :], hist.shape)
+    feats = jnp.concatenate([hist, c, hist - c, hist * c], axis=-1)  # [B,L,4du]
+    att = mlp_apply(params, "attn", feats, len(cfg.attn_mlp_dims))[..., 0]  # [B,L]
+    att = jnp.where(hist_mask, att, -1e30)
+    w = jax.nn.softmax(att.astype(jnp.float32), axis=-1).astype(hist.dtype)
+    return jnp.einsum("bl,bld->bd", w, hist)
+
+
+def logits(params, batch, cfg: RecSysConfig, rules):
+    user = field_lookup(params["tables"], cfg, "user", batch["user"], rules)
+    hist = _behaviour_emb(params, batch, cfg, rules, hist=True)  # [B,L,du]
+    cand = _behaviour_emb(params, batch, cfg, rules, hist=False)  # [B,du]
+    mask = jnp.arange(hist.shape[1])[None] < batch["hist_len"][:, None]
+    pooled = target_attention(params, hist, cand, mask, cfg)
+    x = jnp.concatenate([user, cand, pooled], axis=-1)
+    out = mlp_apply(params, "tower", x, len(cfg.mlp_dims))[:, 0]
+    return constrain(out, ("batch",), rules)
+
+
+def loss(params, batch, cfg: RecSysConfig, rules):
+    lg = logits(params, batch, cfg, rules)
+    b = bce_with_logits(lg, batch["label"])
+    return b, {"bce": b}
+
+
+def serve(params, batch, cfg: RecSysConfig, rules):
+    return jax.nn.sigmoid(logits(params, batch, cfg, rules))
+
+
+def retrieval(params, query, cand_ids, cfg: RecSysConfig, rules):
+    """One user, N candidate items: history encoded once, target attention
+    batched over candidates (the N dim is sharded over the mesh)."""
+    t = params["tables"]
+    user = field_lookup(t, cfg, "user", query["user"], rules)[0]  # [de]
+    hist = _behaviour_emb(params, query, cfg, rules, hist=True)[0]  # [L,du]
+    mask = jnp.arange(hist.shape[0])[None] < query["hist_len"][:, None]  # [1,L]
+
+    it = jnp.take(t["item"], cand_ids, axis=0)
+    ca_ids = query["cand_category"]
+    ca = jnp.take(t["category"], ca_ids, axis=0)
+    cand = jnp.concatenate([it, ca], axis=-1)  # [N,du]
+    cand = constrain(cand, ("candidates", None), rules)
+
+    N = cand.shape[0]
+    histN = jnp.broadcast_to(hist[None], (N,) + hist.shape)
+    pooled = target_attention(params, histN, cand, jnp.broadcast_to(mask, (N, hist.shape[0])), cfg)
+    userN = jnp.broadcast_to(user[None], (N, user.shape[0]))
+    x = jnp.concatenate([userN, cand, pooled], axis=-1)
+    scores = mlp_apply(params, "tower", x, len(cfg.mlp_dims))[:, 0]
+    return constrain(scores, ("candidates",), rules)

@@ -1,0 +1,136 @@
+"""Sparse embedding substrate for the recsys family.
+
+JAX has no native EmbeddingBag and no CSR sparse — the lookup-and-reduce is
+built here from `jnp.take` + `jax.ops.segment_sum`, as part of the system
+(kernel_taxonomy §RecSys). Two layouts:
+
+  * unified table — all equal-dim fields concatenated into ONE [sum_vocab, d]
+    table with static per-field offsets: a single gather serves a whole
+    example row ([B, n_fields] indices). This is the production layout
+    (FBGEMM TBE-style) and makes the table the explicit hot path; rows are
+    sharded over the `model` mesh axis.
+  * named tables — per-field tables for heterogeneous dims (user 16-d vs
+    item 64-d in taobao_ssa), with `shares=` aliasing (history reuses the
+    item table).
+
+A Pallas VMEM-tiled version of the bag lookup lives in
+kernels/embedding_bag; the functions here are the pure-jnp system path and
+the kernel's oracle.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FieldSpec, RecSysConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Unified-table layout (equal-dim fields: fm / autoint)
+# ---------------------------------------------------------------------------
+
+
+def unified_offsets(cfg: RecSysConfig) -> np.ndarray:
+    """Static row offsets of each field inside the unified table."""
+    offs = np.zeros(len(cfg.fields), np.int64)
+    acc = 0
+    for i, f in enumerate(cfg.fields):
+        offs[i] = acc
+        acc += f.vocab
+    return offs
+
+
+def _pad_rows(rows: int, multiple: int = 512) -> int:
+    """Row-sharded tables must divide the full (pod x data x model) mesh;
+    pad rows up — padding rows are never addressed by real ids."""
+    return -(-rows // multiple) * multiple
+
+
+def unified_table_def(cfg: RecSysConfig, extra_dim: int = 0) -> ParamDef:
+    rows = _pad_rows(cfg.table_rows())
+    d = (extra_dim or cfg.embed_dim)
+    return ParamDef((rows, d), ("rows", None), jnp.float32, "embed")
+
+
+def _take_rows(table, rows):
+    """Gather rows from a table in any representation (fp32 dense or C5
+    int8-quantized {"q": int8 [V,d], "s": f32 [V]} with per-row scales —
+    dequantization happens *after* the gather, so HBM traffic is 1/4)."""
+    if isinstance(table, dict):
+        q = jnp.take(table["q"], rows, axis=0)
+        s = jnp.take(table["s"], rows, axis=0)
+        return q.astype(jnp.float32) * s[..., None]
+    return jnp.take(table, rows, axis=0)
+
+
+def unified_lookup(table, sparse_idx, cfg: RecSysConfig, rules):
+    """sparse_idx: [B, n_fields] per-field local ids -> [B, n_fields, d]."""
+    offs = jnp.asarray(unified_offsets(cfg), jnp.int32)
+    rows = sparse_idx + offs[None, :]
+    out = _take_rows(table, rows)
+    return constrain(out, ("batch", None, None), rules)
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag: multi-hot gather + segment reduce
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag(
+    table: jax.Array,
+    idx: jax.Array,
+    mask: Optional[jax.Array] = None,
+    combiner: str = "sum",
+) -> jax.Array:
+    """torch.nn.EmbeddingBag equivalent.
+
+    table: [V, d]; idx: [B, nnz] int32; mask: [B, nnz] (1 = valid).
+    Implemented as flat gather + segment_sum over row ids so the reduce is
+    expressed with the canonical JAX scatter primitive (not just a masked
+    sum) — this is the reference the Pallas kernel is tested against.
+    """
+    B, nnz = idx.shape
+    flat = _take_rows(table, idx.reshape(-1))  # [B*nnz, d]
+    if mask is not None:
+        flat = flat * mask.reshape(-1, 1).astype(flat.dtype)
+    seg = jnp.repeat(jnp.arange(B, dtype=jnp.int32), nnz)
+    out = jax.ops.segment_sum(flat, seg, num_segments=B)
+    if combiner == "mean":
+        denom = (
+            jnp.clip(mask.sum(axis=1), 1)[:, None].astype(out.dtype)
+            if mask is not None
+            else jnp.full((B, 1), nnz, out.dtype)
+        )
+        out = out / denom
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Named per-field tables (din / dien / taobao_ssa)
+# ---------------------------------------------------------------------------
+
+
+def named_table_defs(cfg: RecSysConfig) -> Dict[str, ParamDef]:
+    defs = {}
+    for f in cfg.owned_fields():
+        d = cfg.field_dim(f)
+        defs[f.name] = ParamDef((_pad_rows(f.vocab), d), ("rows", None), jnp.float32, "embed")
+    return defs
+
+
+def table_for(params_tables, cfg: RecSysConfig, field_name: str):
+    f = {f.name: f for f in cfg.fields}[field_name]
+    return params_tables[f.shares or f.name]
+
+
+def field_lookup(params_tables, cfg: RecSysConfig, field_name: str, idx, rules):
+    """Single- or multi-hot lookup for one named field."""
+    t = table_for(params_tables, cfg, field_name)
+    out = _take_rows(t, idx)
+    axes = ("batch",) + (None,) * (out.ndim - 1)
+    return constrain(out, axes, rules)

@@ -1,0 +1,82 @@
+"""Factorization Machine [Rendle ICDM'10].
+
+logit = w0 + Σᵢ wᵢ + ½ Σ_d [(Σᵢ vᵢ)² − Σᵢ vᵢ²]_d   (the O(nk) sum-square trick)
+
+The first-order term is an EmbeddingBag (dim-1) over the unified table; the
+second-order term's fused form is also provided as a Pallas kernel
+(kernels/fm_interaction) with this module as its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecSysConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import ParamDef
+from repro.models.recsys.embedding import (
+    embedding_bag,
+    unified_lookup,
+    unified_offsets,
+    unified_table_def,
+)
+from repro.models.recsys.rec_layers import bce_with_logits
+
+
+def param_defs(cfg: RecSysConfig):
+    return {
+        "table": unified_table_def(cfg),  # [rows, k] second-order factors
+        "linear": unified_table_def(cfg, extra_dim=1),  # [rows, 1] first-order
+        "bias": ParamDef((), (), jnp.float32, "zeros"),
+    }
+
+
+def fm_interaction(e: jax.Array) -> jax.Array:
+    """e: [B, F, k] -> [B] second-order term via the sum-square identity."""
+    s = jnp.sum(e, axis=1)  # Σ vᵢxᵢ
+    sq = jnp.sum(jnp.square(e), axis=1)  # Σ (vᵢxᵢ)²
+    return 0.5 * jnp.sum(jnp.square(s) - sq, axis=-1)
+
+
+def logits(params, batch, cfg: RecSysConfig, rules):
+    idx = batch["sparse_idx"]  # [B, F] local ids
+    e = unified_lookup(params["table"], idx, cfg, rules)  # [B,F,k]
+    offs = jnp.asarray(unified_offsets(cfg), jnp.int32)
+    rows = idx + offs[None, :]
+    first = embedding_bag(params["linear"], rows)[:, 0]  # [B]
+    out = params["bias"] + first + fm_interaction(e)
+    return constrain(out, ("batch",), rules)
+
+
+def loss(params, batch, cfg: RecSysConfig, rules):
+    lg = logits(params, batch, cfg, rules)
+    return bce_with_logits(lg, batch["label"]), {"bce": bce_with_logits(lg, batch["label"])}
+
+
+def serve(params, batch, cfg: RecSysConfig, rules):
+    return jax.nn.sigmoid(logits(params, batch, cfg, rules))
+
+
+def retrieval(params, query, cand_ids, cfg: RecSysConfig, rules):
+    """Score one query against N candidates of the designated candidate
+    field (largest-vocab field). FM factorizes: score(c) = const +
+    ⟨Σ_{f≠c} v_f, v_c⟩ + w_c, so it is one [N,k] @ [k] batched dot."""
+    cand_field = max(range(len(cfg.fields)), key=lambda i: cfg.fields[i].vocab)
+    offs = unified_offsets(cfg)
+
+    idx = query["sparse_idx"]  # [1, F] — candidate slot ignored
+    e = unified_lookup(params["table"], idx, cfg, rules)[0]  # [F,k]
+    mask = jnp.arange(e.shape[0]) != cand_field
+    e_user = jnp.sum(e * mask[:, None], axis=0)  # [k]
+
+    rows = cand_ids + int(offs[cand_field])
+    v_c = jnp.take(params["table"], rows, axis=0)  # [N,k]
+    v_c = constrain(v_c, ("candidates", None), rules)
+    w_c = jnp.take(params["linear"], rows, axis=0)[:, 0]
+
+    dot = v_c @ e_user
+    # (e_u+v_c)² − (sq_u+v_c²) = (e_u²−sq_u) + 2⟨e_u,v_c⟩ — v_c² cancels.
+    sq_u = jnp.sum(jnp.square(e * mask[:, None]), axis=0)
+    const = 0.5 * jnp.sum(jnp.square(e_user) - sq_u)
+    scores = const + dot + w_c
+    return constrain(scores, ("candidates",), rules)

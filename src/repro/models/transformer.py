@@ -1,0 +1,474 @@
+"""LM-family transformer: dense + MoE, GQA + RoPE, train/prefill/decode.
+
+One code path serves all five assigned LM architectures. Layers are stacked
+and scanned (`jax.lax.scan`) so the HLO stays small at 40+ layers and remat
+policy applies uniformly. Workloads:
+
+  loss(params, batch)                 -> scalar CE (+ MoE aux)    [train_4k]
+  prefill(params, tokens)             -> (last_logits, kv_cache)  [prefill_32k]
+  decode(params, cache, token, pos)   -> (logits, new_cache)      [decode_32k, long_500k]
+
+Sharding: ParamDef.axes (FSDP, training) / .serve_axes (Megatron-TP,
+serving); activations constrained token-sharded (batch x seq) for train and
+prefill, KV-seq-sharded for decode (split-K flash-decode, psum combine via
+GSPMD softmax over the sharded key axis).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.distributed.sharding import constrain
+from repro.models import moe as moe_lib
+from repro.models.common import ParamDef
+from repro.models.layers import (
+    apply_norm,
+    apply_rope,
+    decode_attention,
+    dense_attention,
+    flash_attention,
+    sparse_decode_attention,
+    swiglu,
+)
+
+
+def _dtype(cfg: LMConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _mm(x, w):
+    """Representation-dispatched matmul over the last axis of x.
+
+    Dense array, or C5 int8 {"q": int8 [din,dout], "s": f32 [dout]} — long-
+    context decode is WEIGHT-read-bound (EXPERIMENTS §Perf), so int8 weights
+    quarter the dominant HBM term; on TPU the MXU runs the int8 pairs
+    natively (kernels/int8_matmul is the fused tile-level version)."""
+    if isinstance(w, dict):
+        deq = (w["q"].astype(jnp.bfloat16) * w["s"].astype(jnp.bfloat16)[None, :])
+        return jnp.einsum("...d,dh->...h", x, deq.astype(x.dtype))
+    return jnp.einsum("...d,dh->...h", x, w)
+
+
+def _take_rows(table, tokens):
+    """Embedding gather over dense or int8 {"q","s"} tables (per-row scales;
+    dequantize AFTER the gather — 4x less lookup traffic)."""
+    if isinstance(table, dict):
+        q = jnp.take(table["q"], tokens, axis=0)
+        s = jnp.take(table["s"], tokens, axis=0)
+        return q.astype(jnp.float32) * s[..., None]
+    return jnp.take(table, tokens, axis=0)
+
+
+def _moe_layout(cfg: LMConfig) -> Tuple[int, int, int]:
+    """(n_super, n_dense_per_super, n_moe_per_super)."""
+    if cfg.n_experts == 0:
+        return cfg.n_layers, 1, 0
+    if cfg.moe_interleave == 1:
+        return cfg.n_layers, 0, 1
+    assert cfg.moe_interleave == 2 and cfg.n_layers % 2 == 0
+    return cfg.n_layers // 2, 1, 1
+
+
+# ---------------------------------------------------------------------------
+# Parameter declaration
+# ---------------------------------------------------------------------------
+
+
+_FSDP_WAYS = 512  # full multi-pod mesh; also divides the 256-chip single pod
+
+
+def _fsdp_axes(shape, candidates):
+    """Put 'fsdp' on the first candidate dim divisible by the full mesh
+    (jit in_shardings require exact divisibility); replicate if none fits."""
+    axes = [None] * len(shape)
+    for dim in candidates:
+        if shape[dim] % _FSDP_WAYS == 0:
+            axes[dim] = "fsdp"
+            break
+    return tuple(axes)
+
+
+def _wdef(shape, lead, candidates, dt, serve_axes):
+    axes = (lead,) + _fsdp_axes(shape[1:], candidates) if lead else _fsdp_axes(shape, candidates)
+    return ParamDef(shape, axes, dt, "fan_in", serve_axes=serve_axes)
+
+
+def param_defs(cfg: LMConfig) -> Dict:
+    dt = _dtype(cfg)
+    D, H, K = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    L, V, F = cfg.n_layers, cfg.vocab_size, cfg.d_ff
+
+    attn = {
+        "attn_norm": ParamDef((L, D), ("layers", None), dt, "ones"),
+        "wq": _wdef((L, D, H * hd), "layers", (0, 1), dt, ("layers", "tp_in", None)),
+        "wk": _wdef((L, D, K * hd), "layers", (0, 1), dt, ("layers", "tp_in", None)),
+        "wv": _wdef((L, D, K * hd), "layers", (0, 1), dt, ("layers", "tp_in", None)),
+        "wo": _wdef((L, H * hd, D), "layers", (0, 1), dt, ("layers", "tp_in", None)),
+    }
+    if cfg.use_bias:
+        attn["bq"] = ParamDef((L, H * hd), ("layers", None), dt, "zeros")
+        attn["bk"] = ParamDef((L, K * hd), ("layers", None), dt, "zeros")
+        attn["bv"] = ParamDef((L, K * hd), ("layers", None), dt, "zeros")
+    if not cfg.parallel_block:
+        attn["ffn_norm"] = ParamDef((L, D), ("layers", None), dt, "ones")
+
+    n_super, n_dense, n_moe = _moe_layout(cfg)
+    defs: Dict = {"attn": attn}
+    if n_dense:
+        Ld = n_super * n_dense if cfg.n_experts == 0 else n_super
+        defs["ffn"] = {
+            "w_gate": _wdef((Ld, D, F), "layers", (0, 1), dt, ("layers", None, "ff")),
+            "w_up": _wdef((Ld, D, F), "layers", (0, 1), dt, ("layers", None, "ff")),
+            "w_down": _wdef((Ld, F, D), "layers", (0, 1), dt, ("layers", "tp_in", None)),
+        }
+    if n_moe:
+        defs["moe"] = moe_lib.moe_param_defs(cfg, n_super, dt)
+
+    if cfg.pad_vocab:
+        # §Perf: pad V to a mesh multiple so the table FSDP-shards on the
+        # VOCAB dim — otherwise (e.g. llama4's 202048, olmoe's 50304) it
+        # falls back to sharding D, and every logits einsum contracts a
+        # sharded dim -> an all-reduce of the full [tokens, V] logits.
+        V = -(-V // _FSDP_WAYS) * _FSDP_WAYS
+    emb_axes = _fsdp_axes((V, D), (0, 1))
+    defs["embed"] = ParamDef((V, D), emb_axes, dt, "embed", serve_axes=("vocab", None))
+    defs["final_norm"] = ParamDef((D,), (None,), dt, "ones")
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((V, D), emb_axes, dt, "embed",
+                                   serve_axes=("vocab", None))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(x, p, cfg: LMConfig, positions):
+    """x: [B,S,D] -> q [B,S,K,G,hd] (rope'd), k,v [B,S,K,hd] (rope'd k)."""
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    G = H // K
+    q = _mm(x, p["wq"])
+    k = _mm(x, p["wk"])
+    v = _mm(x, p["wv"])
+    if cfg.use_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    q = q.reshape(B, S, K, G, hd)
+    return q, k, v
+
+
+def _attention_train(x, p, cfg: LMConfig, rules):
+    """Full-sequence attention (train/prefill). Returns (attn_out, (k, v))."""
+    B, S, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    # context parallelism: queries stay seq-sharded; K/V gathered (small GQA)
+    q = constrain(q, ("batch", "seq", None, None, None), rules)
+    k = constrain(k, ("batch", None, None, None), rules)
+    v = constrain(v, ("batch", None, None, None), rules)
+    if cfg.attn_impl == "dense":
+        out = dense_attention(q, k, v, causal=True)
+    else:
+        out = flash_attention(q, k, v, causal=True, kv_chunk=cfg.q_chunk,
+                              remat_step=cfg.flash_remat)
+    out = out.reshape(B, S, cfg.n_heads * cfg.resolved_head_dim)
+    out = _mm(out, p["wo"])
+    return out, (k, v)
+
+
+def _attention_decode(x, p, cfg: LMConfig, k_cache, v_cache, pos, rules):
+    """One-token decode with cache update. x: [B,1,D]; caches [B,T,K,hd]."""
+    B = x.shape[0]
+    T = k_cache.shape[1]
+    q, k_new, v_new = _project_qkv(x, p, cfg, pos[:, None])
+
+    upd = lambda cache, new: jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0)
+    )(cache, new, pos)
+    k_cache = upd(k_cache, k_new)
+    v_cache = upd(v_cache, v_new)
+
+    if cfg.sparse_attention:
+        out = sparse_decode_attention(
+            q, k_cache, v_cache, pos, window=cfg.attn_window, n_global=cfg.attn_n_global
+        )
+    else:
+        out = decode_attention(q, k_cache, v_cache, pos)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.resolved_head_dim)
+    out = _mm(out, p["wo"])
+    return out, (k_cache, v_cache)
+
+
+def _ffn_dense(x, p):
+    if any(isinstance(p[k], dict) for k in ("w_gate", "w_up", "w_down")):
+        g = _mm(x, p["w_gate"])
+        u = _mm(x, p["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        return _mm(h, p["w_down"])
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+
+
+def _layer(x, attn_p, ffn_p, moe_p, cfg: LMConfig, rules, decode_state=None):
+    """One transformer layer. decode_state: None | (k_cache, v_cache, pos)."""
+    h = apply_norm(x, attn_p["attn_norm"], cfg.norm_type)
+    if decode_state is None:
+        attn_out, kv = _attention_train(h, attn_p, cfg, rules)
+    else:
+        k_cache, v_cache, pos = decode_state
+        attn_out, kv = _attention_decode(h, attn_p, cfg, k_cache, v_cache, pos, rules)
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.parallel_block:
+        # command-r: shared-norm parallel attention + FFN
+        assert moe_p is None, "parallel_block with MoE not used by any assigned arch"
+        x = x + attn_out + _ffn_dense(h, ffn_p)
+    else:
+        x = x + attn_out
+        h2 = apply_norm(x, attn_p["ffn_norm"], cfg.norm_type)
+        if moe_p is not None:
+            # decode (tiny token counts) stays on the auto-sharded path;
+            # train/prefill use the shard_map expert-parallel all-to-all.
+            if cfg.moe_impl == "ep" and decode_state is None:
+                from repro.distributed.expert_parallel import moe_ffn_ep
+
+                ffn_out, aux = moe_ffn_ep(h2, moe_p, cfg, rules)
+            else:
+                ffn_out, aux = moe_lib.moe_ffn(h2, moe_p, cfg)
+        else:
+            ffn_out = _ffn_dense(h2, ffn_p)
+        x = x + ffn_out
+    axes = ("batch", "seq", None) if decode_state is None else ("batch", None, None)
+    x = constrain(x, axes, rules)
+    return x, kv, aux
+
+
+def _super_layer(x, params_slice, cfg: LMConfig, rules, decode_state=None):
+    """One scan step: dense layer and/or MoE layer according to the layout.
+
+    params_slice: {"attn": [per-super stacked slices], "ffn":?, "moe":?}
+    For interleave=2 the attn slices carry a leading dim of 2.
+    """
+    n_super, n_dense, n_moe = _moe_layout(cfg)
+    kvs = []
+    aux_total = jnp.zeros((), jnp.float32)
+
+    sub = 0
+    attn_all = params_slice["attn"]
+    per_super = n_dense + n_moe if cfg.n_experts and cfg.moe_interleave == 2 else 1
+
+    def attn_slice(i):
+        if per_super == 1:
+            return attn_all
+        return jax.tree.map(lambda a: a[i], attn_all)
+
+    ds = decode_state
+
+    def dstate(i):
+        if ds is None:
+            return None
+        k_cache, v_cache, pos = ds
+        if per_super == 1:
+            return (k_cache, v_cache, pos)
+        return (k_cache[i], v_cache[i], pos)
+
+    if cfg.n_experts == 0:
+        x, kv, aux = _layer(x, attn_slice(0), params_slice.get("ffn"), None, cfg, rules, dstate(0))
+        kvs.append(kv)
+        aux_total += aux
+    elif cfg.moe_interleave == 1:
+        x, kv, aux = _layer(x, attn_slice(0), None, params_slice["moe"], cfg, rules, dstate(0))
+        kvs.append(kv)
+        aux_total += aux
+    else:  # dense then MoE (llama4 interleave)
+        x, kv, aux = _layer(x, attn_slice(0), params_slice["ffn"], None, cfg, rules, dstate(0))
+        kvs.append(kv)
+        aux_total += aux
+        x, kv, aux = _layer(x, attn_slice(1), None, params_slice["moe"], cfg, rules, dstate(1))
+        kvs.append(kv)
+        aux_total += aux
+
+    if per_super == 1:
+        kv_out = kvs[0]
+    else:
+        kv_out = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
+    return x, kv_out, aux_total
+
+
+def _stack_for_scan(params, cfg: LMConfig):
+    """Reshape the [L, ...] attention stack to [n_super, per_super, ...]."""
+    n_super, n_dense, n_moe = _moe_layout(cfg)
+    per_super = 2 if (cfg.n_experts and cfg.moe_interleave == 2) else 1
+    scanned = {"attn": params["attn"]}
+    if per_super == 2:
+        scanned["attn"] = jax.tree.map(
+            lambda a: a.reshape((n_super, 2) + a.shape[1:]), params["attn"]
+        )
+    if "ffn" in params:
+        scanned["ffn"] = params["ffn"]
+    if "moe" in params:
+        scanned["moe"] = params["moe"]
+    return scanned, n_super, per_super
+
+
+# ---------------------------------------------------------------------------
+# Trunk: embedding -> scanned layers -> final norm
+# ---------------------------------------------------------------------------
+
+
+def trunk(params, tokens, cfg: LMConfig, rules):
+    """tokens [B,S] -> hidden [B,S,D], aux loss, kv caches [L,B,S,K,hd]x2."""
+    x = _take_rows(params["embed"], tokens).astype(_dtype(cfg))
+    x = constrain(x, ("batch", "seq", None), rules)
+
+    scanned, n_super, per_super = _stack_for_scan(params, cfg)
+
+    def body(x, layer_params):
+        x, kv, aux = _super_layer(x, layer_params, cfg, rules)
+        return x, (kv, aux)
+
+    if cfg.remat and cfg.remat_policy != "none":
+        if cfg.remat_policy == "dots":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                prevent_cse=False,
+            )
+        else:
+            body = jax.checkpoint(body, prevent_cse=False)
+
+    x, (kvs, auxes) = jax.lax.scan(body, x, scanned)
+    x = apply_norm(x, params["final_norm"], cfg.norm_type)
+    x = constrain(x, ("batch", "seq", None), rules)
+    k_all, v_all = kvs  # [n_super(, per_super), B, S, K, hd]
+    if per_super == 2:
+        k_all = k_all.reshape((-1,) + k_all.shape[2:])
+        v_all = v_all.reshape((-1,) + v_all.shape[2:])
+    return x, jnp.sum(auxes), (k_all, v_all)
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps
+# ---------------------------------------------------------------------------
+
+
+def _output_table(params):
+    return params.get("lm_head", params["embed"])
+
+
+def _logits(x, table):
+    if isinstance(table, dict):
+        deq = table["q"].astype(jnp.bfloat16) * table["s"].astype(jnp.bfloat16)[:, None]
+        return jnp.einsum("bsd,vd->bsv", x, deq.astype(x.dtype),
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum("bsd,vd->bsv", x, table, preferred_element_type=jnp.float32)
+
+
+def chunked_cross_entropy(x, table, labels, n_chunks: int = 8):
+    """Streaming-logsumexp CE over vocab chunks; avoids the [B,S,V] buffer.
+
+    x: [B,S,D]; table: [V,D]; labels: [B,S] int32. Returns mean CE.
+    """
+    B, S, D = x.shape
+    V = table.shape[0]
+    while V % n_chunks:
+        n_chunks //= 2
+    vc = V // n_chunks
+    chunks = table.reshape(n_chunks, vc, D)
+    v0s = jnp.arange(n_chunks) * vc
+
+    m0 = jnp.full((B, S), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, S), jnp.float32)
+    d0 = jnp.zeros((B, S), jnp.float32)
+
+    def step(carry, ck):
+        m, l, dot = carry
+        emb_c, v0 = ck
+        logits = jnp.einsum(
+            "bsd,vd->bsv", x, emb_c, preferred_element_type=jnp.float32
+        )
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        l = l * jnp.exp(m - m_new) + jnp.sum(jnp.exp(logits - m_new[..., None]), -1)
+        local = labels - v0
+        in_c = (local >= 0) & (local < vc)
+        picked = jnp.take_along_axis(
+            logits, jnp.clip(local, 0, vc - 1)[..., None], axis=-1
+        )[..., 0]
+        dot = dot + jnp.where(in_c, picked, 0.0)
+        return (m_new, l, dot), None
+
+    (m, l, dot), _ = jax.lax.scan(step, (m0, l0, d0), (chunks, v0s))
+    ce = (m + jnp.log(jnp.maximum(l, 1e-30))) - dot
+    return jnp.mean(ce)
+
+
+def loss(params, batch, cfg: LMConfig, rules) -> Tuple[jax.Array, Dict]:
+    """Next-token CE + MoE load-balance aux."""
+    x, aux, _ = trunk(params, batch["tokens"], cfg, rules)
+    ce = chunked_cross_entropy(x, _output_table(params), batch["labels"])
+    total = ce + 0.01 * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+def prefill(params, tokens, cfg: LMConfig, rules):
+    """Full-sequence forward; returns last-position logits + KV caches."""
+    x, _, (k_all, v_all) = trunk(params, tokens, cfg, rules)
+    last = x[:, -1:, :]
+    logits = _logits(last, _output_table(params))
+    return logits[:, 0], (k_all, v_all)
+
+
+def decode(params, cache, token, pos, cfg: LMConfig, rules):
+    """One decode step. cache: (k [L,B,T,K,hd], v [L,B,T,K,hd]);
+    token: [B] int32; pos: [B] current positions. Returns (logits, cache)."""
+    k_all, v_all = cache
+    B = token.shape[0]
+    x = _take_rows(params["embed"], token[:, None]).astype(_dtype(cfg))
+    x = constrain(x, ("batch", None, None), rules)
+
+    scanned, n_super, per_super = _stack_for_scan(params, cfg)
+    if per_super == 2:
+        k_sc = k_all.reshape((n_super, 2) + k_all.shape[1:])
+        v_sc = v_all.reshape((n_super, 2) + v_all.shape[1:])
+    else:
+        k_sc, v_sc = k_all, v_all
+
+    def body(x, inputs):
+        layer_params, k_cache, v_cache = inputs
+        x, (k_new, v_new), _ = _super_layer(
+            x, layer_params, cfg, rules, decode_state=(k_cache, v_cache, pos)
+        )
+        return x, (k_new, v_new)
+
+    x, (k_out, v_out) = jax.lax.scan(body, x, (scanned, k_sc, v_sc))
+    if per_super == 2:
+        k_out = k_out.reshape((-1,) + k_out.shape[2:])
+        v_out = v_out.reshape((-1,) + v_out.shape[2:])
+    x = apply_norm(x, params["final_norm"], cfg.norm_type)
+    logits = _logits(x, _output_table(params))
+    return logits[:, 0], (k_out, v_out)
+
+
+# ---------------------------------------------------------------------------
+# Cache / batch constructors (shapes only — used by dryrun input_specs too)
+# ---------------------------------------------------------------------------
+
+
+def cache_shape(cfg: LMConfig, batch: int, seq_len: int):
+    hd = cfg.resolved_head_dim
+    return (cfg.n_layers, batch, seq_len, cfg.n_kv_heads, hd)
+
+
+def cache_axes(cfg: LMConfig, long_context: bool):
+    kv = "long_kv_seq" if long_context else "kv_seq"
+    return ("layers", "batch", kv, "kv_heads", "head_dim")

@@ -1,0 +1,251 @@
+"""Optimizers (mini-optax, self-contained): SGD-M, AdamW, Adam8bit.
+
+Adam8bit stores first/second moments block-wise quantized to int8
+(bitsandbytes-style) — 4 bytes/param of optimizer state instead of 8. On a
+400B-param model that is the difference between fitting and not fitting
+16 GB/chip under full state sharding, and it is squarely in the spirit of
+the paper's C5 (dynamic-range quantization applied to the training system).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+# ---------------------------------------------------------------------------
+# SGD with momentum
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr: float, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params):
+        mu = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads
+        )
+        updates = jax.tree.map(lambda m: -lr * m, mu)
+        return updates, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"],
+            grads,
+        )
+        bc1 = 1 - b1**c
+        bc2 = 1 - b2**c
+
+        def upd(m_, v_, p):
+            step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return -lr * step
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adam8bit — block-wise int8 moments (paper C5 applied to optimizer state)
+# ---------------------------------------------------------------------------
+
+_BLOCK = 256
+
+
+def _quantize_blockwise(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (f32) -> (int8 codes of x.shape, f32 scales [..., n_blocks]).
+
+    Blocks run along the LAST axis only, so every leading dim — and
+    therefore any sharding on it (FSDP weight shards, expert dims) — is
+    preserved. A global flatten here destroys GSPMD sharding and triggers
+    involuntary full rematerialization (measured: llama4 train temp
+    30.9 GiB -> 5.8 TiB with the flattened variant — see §Perf)."""
+    *lead, n = x.shape
+    pad = (-n) % _BLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    blocks = x.reshape(*lead, -1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / safe[..., None]), -127, 127).astype(jnp.int8)
+    q = q.reshape(*lead, n + pad)[..., :n]
+    return q, scale
+
+
+def _dequantize_blockwise(q: jax.Array, scale: jax.Array) -> jax.Array:
+    *lead, n = q.shape
+    pad = (-n) % _BLOCK
+    x = q.astype(jnp.float32)
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    blocks = x.reshape(*lead, -1, _BLOCK) * scale[..., None]
+    return blocks.reshape(*lead, n + pad)[..., :n]
+
+
+def _n_blocks(shape) -> Tuple[int, ...]:
+    if not shape:
+        return (1,)
+    return tuple(shape[:-1]) + (-(-shape[-1] // _BLOCK),)
+
+
+def adam8bit(
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        def zq(p):
+            return {
+                "q": jnp.zeros(p.shape, jnp.int8),
+                "s": jnp.zeros(_n_blocks(p.shape), jnp.float32),
+            }
+
+        return {
+            "m": jax.tree.map(zq, params),
+            "v": jax.tree.map(zq, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1**c
+        bc2 = 1 - b2**c
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+
+        def leaf_update(g, mq, vq, p):
+            g = g.astype(jnp.float32)
+            m = b1 * _dequantize_blockwise(mq["q"], mq["s"]) + (1 - b1) * g
+            # v is stored as sqrt(v): int8's 1/127 resolution underflows the
+            # small-v tail otherwise (tiny v -> code 0 -> 1/eps step blowup)
+            v_prev = jnp.square(_dequantize_blockwise(vq["q"], vq["s"]))
+            v = b2 * v_prev + (1 - b2) * jnp.square(g)
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            mq2, ms2 = _quantize_blockwise(m)
+            vq2, vs2 = _quantize_blockwise(jnp.sqrt(v))
+            return -lr * step, {"q": mq2, "s": ms2}, {"q": vq2, "s": vs2}
+
+        new_m, new_v, upds = [], [], []
+        for g, mq, vq, p in zip(flat_g, flat_m, flat_v, flat_p):
+            if g.ndim >= 3 and g.shape[0] <= 64:
+                # layer-stacked leaf: scan the update over the layer dim so
+                # the fp32 dequant temporaries are one slice, not the whole
+                # stack (llama4 experts: 2 GB -> 85 MB per-device temps)
+                upd, m2, v2 = jax.lax.map(
+                    lambda args: leaf_update(*args), (g, mq, vq, p)
+                )
+            else:
+                upd, m2, v2 = leaf_update(g, mq, vq, p)
+            upds.append(upd)
+            new_m.append(m2)
+            new_v.append(v2)
+
+        return (
+            treedef.unflatten(upds),
+            {
+                "m": treedef.unflatten(new_m),
+                "v": treedef.unflatten(new_v),
+                "count": count,
+            },
+        )
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr: float = 1e-4, **kw) -> Optimizer:
+    return {"sgd": sgd, "adamw": adamw, "adam8bit": adam8bit}[name](lr, **kw)
+
+
+# ---------------------------------------------------------------------------
+# State shape/sharding views (for the AOT dry-run)
+# ---------------------------------------------------------------------------
+
+
+def abstract_state(opt_name: str, abstract_params) -> Any:
+    """Optimizer-state ShapeDtypeStructs matching `init` without allocating."""
+    opt = get_optimizer(opt_name)
+    return jax.eval_shape(opt.init, abstract_params)
+
+
+def state_pspecs(opt_name: str, params_pspecs, abstract_params=None) -> Any:
+    """PartitionSpecs for the optimizer state given param pspecs.
+
+    Moments inherit the param sharding. Adam8bit's [..., n_blocks] scales
+    keep every leading-dim sharding and un-shard only the blocked LAST
+    axis — `abstract_params` supplies tensor ranks (PartitionSpecs trim
+    trailing Nones, so rank is not recoverable from the spec alone).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    if opt_name == "sgd":
+        return {"mu": params_pspecs}
+    if opt_name == "adamw":
+        return {"m": params_pspecs, "v": params_pspecs, "count": P()}
+    if opt_name == "adam8bit":
+        def scale_spec(spec: P, ndim: int) -> P:
+            parts = list(spec)
+            if len(parts) == ndim and parts:
+                parts[-1] = None  # only the true last axis loses sharding
+            return P(*parts)
+
+        if abstract_params is not None:
+            qtree = jax.tree.map(
+                lambda spec, p: {"q": spec, "s": scale_spec(spec, len(p.shape))},
+                params_pspecs, abstract_params,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+        else:
+            qtree = jax.tree.map(
+                lambda spec: {"q": spec, "s": spec}, params_pspecs,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+        return {"m": qtree, "v": qtree, "count": P()}
+    raise ValueError(opt_name)

@@ -1,0 +1,93 @@
+"""train_step factories for every architecture family.
+
+The factory returns a pure `train_step(params, opt_state, batch)` suitable
+for `jax.jit(..., in_shardings=..., out_shardings=...)` — the same function
+is jitted at smoke scale (1 device) and AOT-lowered at production-mesh scale
+by launch/dryrun.py.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import Optimizer
+
+
+def make_train_step(
+    loss_fn: Callable,
+    optimizer: Optimizer,
+    *,
+    grad_accum: int = 1,
+    grad_clip: float = 1.0,
+) -> Callable:
+    """loss_fn(params, batch) -> (scalar, metrics dict)."""
+
+    def one_grad(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if grad_accum > 1:
+            # microbatch over the leading batch axis
+            def micro(carry, mb):
+                loss_a, grads_a = carry
+                loss, metrics, grads = one_grad(params, mb)
+                grads_a = jax.tree.map(jnp.add, grads_a, grads)
+                return (loss_a + loss, grads_a), metrics
+
+            split = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum) + x.shape[1:]),
+                batch,
+            )
+            zero_g = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+            (loss, grads), metrics = jax.lax.scan(micro, (0.0, zero_g), split)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            loss, metrics, grads = one_grad(params, batch)
+
+        if grad_clip:
+            gnorm = jnp.sqrt(
+                sum(
+                    jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree.leaves(grads)
+                )
+            )
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+            metrics = {**metrics, "grad_norm": gnorm}
+
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates
+        )
+        return params, opt_state, {**metrics, "loss": loss}
+
+    return train_step
+
+
+def fit(
+    train_step,
+    params,
+    opt_state,
+    batches,
+    *,
+    log_every: int = 50,
+    callback=None,
+) -> Tuple[Dict, Dict, list]:
+    """Simple host loop for examples/tests; returns (params, state, history)."""
+    step_fn = jax.jit(train_step)
+    history = []
+    for step, batch in enumerate(batches):
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or callback:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": step, **m})
+            if callback:
+                callback(step, m)
+    return params, opt_state, history

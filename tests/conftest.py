@@ -1,0 +1,64 @@
+import os
+
+# Tests run on the real 1-device CPU platform — the 512-device dry-run env
+# is confined to launch/dryrun.py (never imported here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import dataclasses
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def test_mesh():
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+@pytest.fixture(scope="session")
+def lm_rules(test_mesh):
+    from repro.distributed.sharding import LM_RULES, adapt_rules
+
+    return adapt_rules(LM_RULES, test_mesh)
+
+
+@pytest.fixture(scope="session")
+def rec_rules(test_mesh):
+    from repro.distributed.sharding import RECSYS_RULES, adapt_rules
+
+    return adapt_rules(RECSYS_RULES, test_mesh)
+
+
+@pytest.fixture(scope="session")
+def gnn_rules(test_mesh):
+    from repro.distributed.sharding import GNN_RULES, adapt_rules
+
+    return adapt_rules(GNN_RULES, test_mesh)
+
+
+def reduced_lm(name: str, **over):
+    """Tiny config of the same family as an assigned LM arch."""
+    from repro.configs.base import get_config
+
+    cfg = get_config(name)
+    return dataclasses.replace(
+        cfg, n_layers=2 if cfg.n_experts == 0 or cfg.moe_interleave == 1 else 2,
+        d_model=64, n_heads=4, n_kv_heads=min(cfg.n_kv_heads, 2), d_ff=96,
+        vocab_size=256, head_dim=16,
+        n_experts=min(cfg.n_experts, 8) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        **over,
+    )
+
+
+def reduced_recsys(name: str):
+    from repro.configs.base import get_config
+
+    cfg = get_config(name)
+    fields = tuple(
+        dataclasses.replace(f, vocab=min(f.vocab, 1000)) for f in cfg.fields
+    )
+    return dataclasses.replace(cfg, fields=fields)

@@ -1,0 +1,155 @@
+"""Property + unit tests for the paper's C1/C4/C5 machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lightweight, pruning, quantization
+
+
+# ---------------------------------------------------------------------------
+# C4 pruning (Formulas 5-7)
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    p=st.floats(0.05, 0.9),
+    n=st.integers(8, 64),
+    m=st.integers(8, 64),
+    seed=st.integers(0, 10_000),
+)
+def test_prune_ratio_property(p, n, m, seed):
+    """Formula 5: the realized sparsity matches the target ratio."""
+    w = jax.random.normal(jax.random.key(seed), (n, m))
+    mask = pruning.prune_mask(w, p)
+    realized = 1.0 - float(jnp.mean(mask))
+    assert abs(realized - p) < 0.12  # quantile granularity on small tensors
+    # Formula 6: the mask keeps exactly the large-magnitude entries
+    theta = pruning.magnitude_threshold(w, p)
+    np.testing.assert_array_equal(mask, (jnp.abs(w) >= theta).astype(w.dtype))
+
+
+def test_iterative_prune_composes():
+    """Formula 7: K tightening rounds reach the target on survivors."""
+    params = {"layer": {"w0": jax.random.normal(jax.random.key(0), (64, 64))}}
+    tree = params
+    for r in pruning.prune_schedule(0.4, 3):
+        tree = pruning.prune_tree(tree, r)
+    s = pruning.sparsity(tree)
+    assert 0.33 < s < 0.47, s
+    # masks are binary and only ever shrink
+    mask = tree["layer"]["w0"]["mask"]
+    assert set(np.unique(np.asarray(mask))) <= {0.0, 1.0}
+
+
+def test_block_prune_structure():
+    w = jax.random.normal(jax.random.key(0), (256, 256))
+    mask = pruning.block_prune_mask(w, 0.5, block=128)
+    blocks = np.asarray(mask).reshape(2, 128, 2, 128)
+    for i in range(2):
+        for j in range(2):
+            vals = np.unique(blocks[i, :, j, :])
+            assert len(vals) == 1  # whole block kept or dropped
+
+
+def test_prune_skips_tables():
+    params = {"tables": {"item": jnp.ones((50, 8))}, "tower_w0": jnp.ones((8, 8))}
+    out = pruning.prune_tree(params, 0.5)
+    assert isinstance(out["tables"]["item"], jax.Array)
+    assert isinstance(out["tower_w0"], dict) and "mask" in out["tower_w0"]
+
+
+# ---------------------------------------------------------------------------
+# C5 quantization (Formulas 8-9)
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=25)
+@given(seed=st.integers(0, 10_000), bits=st.sampled_from([4, 8]))
+def test_fake_quant_error_bound(seed, bits):
+    """Formula 9 error is bounded by s/2 inside the clip range."""
+    w = jax.random.normal(jax.random.key(seed), (32, 32))
+    s = float(quantization.dynamic_range_step(w, bits))
+    wq = quantization.fake_quant(w, bits)
+    assert float(jnp.abs(wq - w).max()) <= s / 2 + 1e-6
+
+
+def test_int8_weight_roundtrip():
+    w = jax.random.normal(jax.random.key(0), (64, 32))
+    rep = quantization.quantize_weight(w)
+    assert rep["q"].dtype == jnp.int8
+    err = jnp.abs(quantization.dequantize(rep) - w)
+    per_col_scale = jnp.max(jnp.abs(w), axis=0) / 127.0
+    assert (err <= per_col_scale[None, :] * 0.51 + 1e-6).all()
+
+
+def test_table_quantization_per_row():
+    t = jax.random.normal(jax.random.key(0), (100, 16)) * jnp.arange(1, 101)[:, None]
+    rep = quantization.quantize_table(t)
+    deq = quantization.dequantize(rep)
+    rel = jnp.abs(deq - t) / jnp.maximum(jnp.abs(t).max(axis=1, keepdims=True), 1e-9)
+    assert float(rel.max()) < 0.01  # per-row scales keep big rows accurate
+
+
+def test_ste_gradient_is_straight_through():
+    w = jax.random.normal(jax.random.key(0), (16, 16))
+    g = jax.grad(lambda w_: jnp.sum(quantization.ste_quant(w_) * 3.0))(w)
+    np.testing.assert_allclose(g, 3.0 * jnp.ones_like(w), rtol=1e-6)
+
+
+def test_quantize_tree_combined_reps():
+    params = {
+        "tables": {"item": jnp.ones((32, 8))},
+        "tower_w0": {"w": jax.random.normal(jax.random.key(0), (16, 16)),
+                     "mask": (jax.random.uniform(jax.random.key(1), (16, 16)) > 0.4).astype(jnp.float32)},
+    }
+    q = quantization.quantize_tree(params)
+    assert "q" in q["tables"]["item"] and q["tables"]["item"]["s"].shape == (32,)
+    assert {"q", "s", "mask"} <= set(q["tower_w0"])  # pruned+quantized rep
+
+
+# ---------------------------------------------------------------------------
+# C1 lightweight representations
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rep_kind", ["dense", "masked", "lowrank", "grouped", "int8"])
+def test_linear_dispatch_consistency(rep_kind):
+    w = jax.random.normal(jax.random.key(0), (32, 64))
+    x = jax.random.normal(jax.random.key(1), (4, 32))
+    if rep_kind == "dense":
+        rep = w
+    elif rep_kind == "masked":
+        rep = {"w": w, "mask": (jax.random.uniform(jax.random.key(2), w.shape) > 0.3).astype(w.dtype)}
+    elif rep_kind == "lowrank":
+        rep = lightweight.low_rank_factorize(w, rank=32)  # full rank -> exact
+    elif rep_kind == "grouped":
+        rep = lightweight.to_grouped(w, 4)
+    else:
+        from repro.core.quantization import quantize_weight
+
+        rep = quantize_weight(w)
+    out = lightweight.linear(rep, x)
+    ref = x @ lightweight.weight_view(rep)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_low_rank_truncation_error_decreases():
+    w = jax.random.normal(jax.random.key(0), (64, 64))
+    errs = []
+    for r in (4, 16, 48):
+        rep = lightweight.low_rank_factorize(w, r)
+        errs.append(float(jnp.linalg.norm(lightweight.weight_view(rep) - w)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_nbytes_accounting():
+    w = jnp.ones((100, 100))
+    assert lightweight.nbytes(w) == 40_000
+    masked = {"w": w, "mask": jnp.concatenate([jnp.ones((50, 100)), jnp.zeros((50, 100))])}
+    assert lightweight.nbytes(masked) == 20_000  # survivors x 4B
+    from repro.core.quantization import quantize_weight
+
+    assert lightweight.nbytes(quantize_weight(w)) == 100 * 100 + 100 * 4

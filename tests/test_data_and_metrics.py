@@ -1,0 +1,80 @@
+"""Synthetic data generators + ranking metrics."""
+import numpy as np
+import pytest
+
+from conftest import reduced_recsys
+from repro.data.metrics import auc, ranking_metrics
+from repro.data.synthetic import (
+    TaobaoWorld, criteo_batches, lm_token_batches, molecule_batch,
+    random_graph, taobao_batches, taobao_eval_candidates,
+)
+
+
+def test_ranking_metrics_known():
+    scores = np.array([[3.0, 2.0, 1.0], [1.0, 2.0, 3.0]])
+    pos = np.array([0, 0])  # q0: rank 0; q1: rank 2
+    m = ranking_metrics(scores, pos, k=2)
+    assert m["hit_rate"] == 0.5
+    assert m["mrr"] == pytest.approx((1.0 + 1 / 3) / 2)
+    assert m["ndcg"] == pytest.approx((1.0 + 0.0) / 2)
+
+
+def test_auc_known():
+    assert auc(np.array([0.9, 0.8, 0.2, 0.1]), np.array([1, 1, 0, 0])) == 1.0
+    assert auc(np.array([0.1, 0.2, 0.8, 0.9]), np.array([1, 1, 0, 0])) == 0.0
+    assert 0.4 < auc(np.random.default_rng(0).random(500),
+                     np.random.default_rng(1).integers(0, 2, 500)) < 0.6
+
+
+def test_taobao_batches_shapes_and_determinism():
+    cfg = reduced_recsys("taobao_ssa")
+    w = TaobaoWorld(1000, 1000, 1000)
+    b1 = next(taobao_batches(cfg, 32, 1, world=w, seed=5))
+    b2 = next(taobao_batches(cfg, 32, 1, world=w, seed=5))
+    assert b1["hist_item"].shape == (32, cfg.seq_len)
+    np.testing.assert_array_equal(b1["user"], b2["user"])
+    assert set(np.unique(b1["label"])) <= {0.0, 1.0}
+    # labels balanced by construction
+    assert 0.3 < b1["label"].mean() < 0.7
+
+
+def test_taobao_labels_learnable_signal():
+    """Affinity-aligned candidates are labeled positive more often."""
+    cfg = reduced_recsys("taobao_ssa")
+    w = TaobaoWorld(1000, 1000, 1000)
+    b = next(taobao_batches(cfg, 4096, 1, world=w, seed=2))
+    aff = w.affinity(b["user"], b["item"])
+    pos_aff = aff[b["label"] > 0.5].mean()
+    neg_aff = aff[b["label"] < 0.5].mean()
+    assert pos_aff > neg_aff + 0.1
+
+
+def test_eval_candidates():
+    cfg = reduced_recsys("taobao_ssa")
+    ev = taobao_eval_candidates(cfg, n_queries=8, n_cand=10)
+    assert ev["batch"]["item"].shape == (80,)
+    assert ev["pos_idx"].shape == (8,) and (ev["pos_idx"] < 10).all()
+
+
+def test_criteo_batches():
+    cfg = reduced_recsys("fm")
+    b = next(criteo_batches(cfg, 64, 1))
+    assert b["sparse_idx"].shape == (64, 39)
+    vocabs = np.array([f.vocab for f in cfg.fields])
+    assert (b["sparse_idx"] < vocabs[None, :]).all()
+
+
+def test_graph_generators():
+    g = random_graph(100, 4, d_feat=16)
+    assert g["features"].shape == (100, 16)
+    assert g["edge_src"].max() < 100
+    mb = molecule_batch(4, n_nodes=10, n_edges=20)
+    assert mb["positions"].shape == (40, 3)
+    assert mb["graph_ids"].max() == 3
+    assert mb["edge_src"].min() >= 0 and mb["edge_src"].max() < 40
+
+
+def test_lm_token_batches():
+    b = next(lm_token_batches(128, 4, 16, 1))
+    assert b["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])

@@ -1,0 +1,132 @@
+"""NequIP substrate tests: CG-path equivariance (property-based over random
+rotations), model invariance, sampler correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.spatial.transform import Rotation
+
+from repro.configs.base import get_config
+from repro.models.common import init_params
+from repro.models.gnn import nequip
+from repro.models.gnn.irreps import (
+    DIM, path_list, rotate_features, spherical_harmonics, to_matrix, to_vec5,
+)
+from repro.models.gnn.sampler import CSRGraph, sample_subgraph, subgraph_sizes
+
+
+def test_vec5_matrix_roundtrip():
+    t = jax.random.normal(jax.random.key(0), (10, 5))
+    np.testing.assert_allclose(to_vec5(to_matrix(t)), t, rtol=1e-5, atol=1e-6)
+    m = to_matrix(t)
+    np.testing.assert_allclose(m, jnp.swapaxes(m, -1, -2), atol=1e-6)  # symmetric
+    np.testing.assert_allclose(jnp.trace(m, axis1=-2, axis2=-1), 0.0, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 100_000))
+def test_all_cg_paths_equivariant(seed):
+    """Every coupling path commutes with rotations (the NequIP invariant)."""
+    R = jnp.asarray(Rotation.random(random_state=seed).as_matrix(), jnp.float32)
+    feats = {
+        l: jax.random.normal(jax.random.key(seed + l), (3, 2, DIM[l])) for l in (0, 1, 2)
+    }
+    vecs = jax.random.normal(jax.random.key(seed + 7), (3, 3))
+    sh = spherical_harmonics(vecs)
+    shR = spherical_harmonics(vecs @ R.T)
+    featsR = rotate_features(feats, R)
+    for lf, ls, lo, fn in path_list():
+        a = fn(feats[lf], sh[ls][:, None, :])
+        b = fn(featsR[lf], shR[ls][:, None, :])
+        aR = rotate_features({lo: a}, R)[lo]
+        np.testing.assert_allclose(
+            aR, b, rtol=2e-4, atol=2e-4,
+            err_msg=f"path ({lf},{ls})->{lo} not equivariant",
+        )
+
+
+@settings(deadline=None, max_examples=5)
+@given(seed=st.integers(0, 1000))
+def test_model_rotation_invariance(seed, gnn_rules):
+    cfg = get_config("nequip")
+    N, E = 16, 40
+    pos = jax.random.normal(jax.random.key(seed), (N, 3)) * 2
+    src = jax.random.randint(jax.random.key(seed + 1), (E,), 0, N)
+    dst = jax.random.randint(jax.random.key(seed + 2), (E,), 0, N)
+    species = jax.random.randint(jax.random.key(seed + 3), (N,), 0, 8)
+    params = init_params(nequip.param_defs(cfg, n_classes=3), jax.random.key(0))
+    g = {"positions": pos, "edge_src": src, "edge_dst": dst, "species": species}
+    out1 = nequip.forward(params, g, cfg, gnn_rules)
+    R = jnp.asarray(Rotation.random(random_state=seed).as_matrix(), jnp.float32)
+    out2 = nequip.forward(params, dict(g, positions=pos @ R.T), cfg, gnn_rules)
+    np.testing.assert_allclose(out1, out2, rtol=5e-4, atol=5e-4)
+
+
+def test_translation_invariance(gnn_rules):
+    cfg = get_config("nequip")
+    N, E = 12, 30
+    pos = jax.random.normal(jax.random.key(0), (N, 3))
+    src = jax.random.randint(jax.random.key(1), (E,), 0, N)
+    dst = jax.random.randint(jax.random.key(2), (E,), 0, N)
+    species = jax.random.randint(jax.random.key(3), (N,), 0, 8)
+    params = init_params(nequip.param_defs(cfg, n_classes=2), jax.random.key(0))
+    g = {"positions": pos, "edge_src": src, "edge_dst": dst, "species": species}
+    out1 = nequip.forward(params, g, cfg, gnn_rules)
+    out2 = nequip.forward(params, dict(g, positions=pos + 5.0), cfg, gnn_rules)
+    np.testing.assert_allclose(out1, out2, rtol=1e-4, atol=1e-5)
+
+
+def test_cutoff_kills_long_edges(gnn_rules):
+    """Messages through edges beyond the cutoff radius vanish."""
+    cfg = get_config("nequip")
+    pos = jnp.array([[0.0, 0, 0], [100.0, 0, 0], [1.0, 0, 0]])
+    params = init_params(nequip.param_defs(cfg, n_classes=2), jax.random.key(0))
+    g1 = {
+        "positions": pos,
+        "edge_src": jnp.array([1], jnp.int32),  # far node -> node 0
+        "edge_dst": jnp.array([0], jnp.int32),
+        "species": jnp.array([1, 2, 3], jnp.int32),
+    }
+    g2 = dict(g1, edge_src=jnp.array([1], jnp.int32) * 0 + 1,
+              edge_dst=jnp.array([0], jnp.int32))
+    out_far = nequip.forward(params, g1, cfg, gnn_rules)
+    # same graph but with NO edges at all (mask the only edge)
+    g3 = dict(g1, edge_mask=jnp.array([False]))
+    out_none = nequip.forward(params, g3, cfg, gnn_rules)
+    np.testing.assert_allclose(out_far, out_none, rtol=1e-4, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    n_seeds=st.integers(2, 16),
+    f1=st.integers(1, 6),
+    f2=st.integers(1, 4),
+    seed=st.integers(0, 1000),
+)
+def test_sampler_shapes_and_bounds(n_seeds, f1, f2, seed):
+    rng = np.random.default_rng(seed)
+    N = 100
+    src = rng.integers(0, N, 400)
+    dst = rng.integers(0, N, 400)
+    g = CSRGraph.from_edges(src, dst, N)
+    sub = sample_subgraph(g, rng.integers(0, N, n_seeds), (f1, f2), rng)
+    nn, ne = subgraph_sizes(n_seeds, (f1, f2))
+    assert sub["node_ids"].shape == (nn,)
+    assert sub["edge_src"].shape == (ne,)
+    assert sub["edge_src"].max() < nn and sub["edge_dst"].max() < nn
+    assert sub["seed_mask"].sum() == n_seeds
+
+
+def test_sampled_neighbors_are_real_neighbors():
+    rng = np.random.default_rng(0)
+    N = 50
+    src = rng.integers(0, N, 300)
+    dst = rng.integers(0, N, 300)
+    g = CSRGraph.from_edges(src, dst, N)
+    in_nbrs = {i: set(src[dst == i]) for i in range(N)}
+    nodes = rng.integers(0, N, 20)
+    samp = g.sample_neighbors(nodes, 5, rng)
+    for node, row in zip(nodes, samp):
+        allowed = in_nbrs[node] | {node}  # isolated nodes self-loop
+        assert set(row.tolist()) <= allowed

@@ -1,0 +1,85 @@
+"""C2 sparse attention: mask properties, equivalences, Formula-4 accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparse_attention import (
+    attention_flops, hybrid_sparse_attention, local_global_mask,
+    masked_attention, windowed_attention,
+)
+from repro.models.layers import (
+    decode_attention, dense_attention, flash_attention, sparse_decode_attention,
+)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    L=st.integers(8, 64),
+    w=st.integers(1, 64),
+    ng=st.integers(0, 8),
+    causal=st.booleans(),
+)
+def test_mask_properties(L, w, ng, causal):
+    m = np.asarray(local_global_mask(L, w, ng, causal=causal))
+    # diagonal always attendable
+    assert m.diagonal().all()
+    if causal:
+        assert not np.triu(m, 1).any()
+    elif ng == 0:
+        # pure window is symmetric; global COLUMNS (BigBird-style) are not
+        np.testing.assert_array_equal(m, m.T)
+    # every row has at least one key
+    assert m.any(axis=1).all()
+    # window rows: position j within |i-j|<w attendable (causal: j<=i)
+    i, j = L // 2, max(0, L // 2 - min(w - 1, L // 2))
+    assert m[i, j]
+
+
+def test_window_ge_L_equals_dense():
+    B, H, L, dh = 2, 2, 32, 16
+    q, k, v = (jax.random.normal(jax.random.key(i), (B, H, L, dh)) for i in range(3))
+    out_w = windowed_attention(q, k, v, window=L)
+    s = jnp.einsum("bhld,bhmd->bhlm", q, k) / np.sqrt(dh)
+    p = jax.nn.softmax(s, -1)
+    dense = jnp.einsum("bhlm,bhmd->bhld", p, v)
+    np.testing.assert_allclose(out_w, dense, rtol=1e-5, atol=1e-5)
+
+
+def test_flash_equals_dense_gqa():
+    B, S, K, G, hd = 2, 64, 2, 2, 16
+    q = jax.random.normal(jax.random.key(0), (B, S, K, G, hd))
+    k = jax.random.normal(jax.random.key(1), (B, S, K, hd))
+    v = jax.random.normal(jax.random.key(2), (B, S, K, hd))
+    o1 = dense_attention(q, k, v, causal=True)
+    o2 = flash_attention(q, k, v, causal=True, kv_chunk=16)
+    np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-5)
+
+
+def test_sparse_decode_covers_window():
+    """With window >= pos+1 and no dedup issues, sparse decode == dense decode."""
+    B, T, K, G, hd = 2, 32, 2, 2, 8
+    q = jax.random.normal(jax.random.key(0), (B, 1, K, G, hd))
+    kc = jax.random.normal(jax.random.key(1), (B, T, K, hd))
+    vc = jax.random.normal(jax.random.key(2), (B, T, K, hd))
+    pos = jnp.array([10, 31])
+    dense = decode_attention(q, kc, vc, pos)
+    sparse = sparse_decode_attention(q, kc, vc, pos, window=T, n_global=4)
+    np.testing.assert_allclose(dense, sparse, rtol=1e-4, atol=1e-5)
+
+
+def test_hybrid_includes_global_columns():
+    L = 32
+    m_local = np.asarray(local_global_mask(L, 4, 0))
+    m_hybrid = np.asarray(local_global_mask(L, 4, 8))
+    assert m_hybrid.sum() > m_local.sum()
+    gained = m_hybrid & ~m_local
+    cols = np.unique(np.where(gained)[1])
+    assert len(cols) <= 8  # only the sampled global columns
+
+
+def test_formula4_accounting():
+    acc = attention_flops(L=32768, d=64, window=4096, n_global=1024)
+    assert acc["sparse"] / acc["dense"] == pytest.approx((4096 + 1024) / 32768)
+    assert acc["ratio"] < 0.16  # paper: 'cuts overall compute'

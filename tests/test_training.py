@@ -1,0 +1,181 @@
+"""Optimizers, checkpointing, fault tolerance, grad compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.grad_compression import (
+    compress_psum_mean, init_residuals, make_compressed_allreduce,
+)
+from repro.training import checkpoint
+from repro.training.fault_tolerance import FTConfig, HeartbeatMonitor, ResilientTrainer
+from repro.training.optimizer import (
+    _dequantize_blockwise, _quantize_blockwise, abstract_state, get_optimizer,
+    state_pspecs,
+)
+from repro.training.train_loop import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+def _quadratic_problem():
+    target = jax.random.normal(jax.random.key(0), (32, 16))
+
+    def loss_fn(params, batch):
+        l = jnp.mean(jnp.square(params["w"] - target))
+        return l, {}
+
+    return {"w": jnp.zeros((32, 16))}, loss_fn
+
+
+@pytest.mark.parametrize("name", ["sgd", "adamw", "adam8bit"])
+def test_optimizers_converge(name):
+    params, loss_fn = _quadratic_problem()
+    opt = get_optimizer(name, 0.05 if name != "sgd" else 0.2)
+    step = jax.jit(make_train_step(loss_fn, opt, grad_clip=0.0))
+    state = opt.init(params)
+    first = None
+    n_steps = 60 if name != "sgd" else 400  # plain SGD-M needs more steps
+    for i in range(n_steps):
+        params, state, m = step(params, state, {})
+        first = first or float(m["loss"])
+    assert float(m["loss"]) < 0.02 * first
+
+
+def test_adam8bit_matches_adamw_closely():
+    params, loss_fn = _quadratic_problem()
+    trajs = {}
+    for name in ("adamw", "adam8bit"):
+        p = jax.tree.map(lambda x: x, params)
+        opt = get_optimizer(name, 0.05)
+        step = jax.jit(make_train_step(loss_fn, opt, grad_clip=0.0))
+        st = opt.init(p)
+        for _ in range(30):
+            p, st, m = step(p, st, {})
+        trajs[name] = float(m["loss"])
+    assert abs(trajs["adam8bit"] - trajs["adamw"]) < 0.25 * trajs["adamw"] + 1e-3
+
+
+def test_blockwise_quant_roundtrip():
+    x = jax.random.normal(jax.random.key(0), (1000,)) * 10
+    q, s = _quantize_blockwise(x)
+    err = jnp.abs(_dequantize_blockwise(q, s) - x)
+    per_block_scale = jnp.repeat(s, 256)[:1000]
+    assert (err <= per_block_scale * 0.51 + 1e-6).all()
+
+
+def test_abstract_state_matches_init():
+    params = {"w": jnp.zeros((10, 4)), "b": jnp.zeros((4,))}
+    for name in ("sgd", "adamw", "adam8bit"):
+        opt = get_optimizer(name)
+        real = opt.init(params)
+        abstract = abstract_state(name, params)
+        assert jax.tree.structure(real) == jax.tree.structure(abstract)
+        from jax.sharding import PartitionSpec as P
+
+        specs = state_pspecs(name, jax.tree.map(lambda _: P(), params))
+        assert jax.tree.structure(specs, is_leaf=lambda x: isinstance(x, P)) \
+            == jax.tree.structure(real)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing + fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((7,), jnp.int32)},
+    }
+    checkpoint.save(tmp_path, 5, tree, extra={"note": "x"})
+    assert checkpoint.latest_step(tmp_path) == 5
+    out = checkpoint.restore(tmp_path, 5, tree)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b), tree, out)
+
+
+def test_checkpoint_atomicity(tmp_path):
+    tree = {"a": jnp.ones((4,))}
+    checkpoint.save(tmp_path, 1, tree)
+    # a stale tmp dir from a crashed writer must not be visible
+    (tmp_path / "step_00000002.tmp").mkdir()
+    assert checkpoint.latest_step(tmp_path) == 1
+
+
+def test_resilient_trainer_resumes_after_crash(tmp_path):
+    params, loss_fn = _quadratic_problem()
+    opt = get_optimizer("adamw", 0.05)
+    step = jax.jit(make_train_step(loss_fn, opt, grad_clip=0.0))
+    cfg = FTConfig(ckpt_dir=str(tmp_path), ckpt_every=10)
+    mk = lambda start: iter(lambda: {}, None)  # infinite empty batches
+
+    trainer = ResilientTrainer(step, cfg, make_batches=mk)
+    state = opt.init(params)
+    with pytest.raises(RuntimeError):
+        trainer.run(params, state, 50, crash_at=25)
+    assert checkpoint.latest_step(tmp_path) == 20  # last periodic ckpt
+
+    p2, s2, restarts, last = trainer.run(params, state, 50)
+    assert restarts == 1 and last == 50
+
+
+def test_heartbeat_and_straggler_detection():
+    cfg = FTConfig(heartbeat_s=1.0, dead_after=3, straggler_factor=2.0,
+                   straggler_patience=2)
+    mon = HeartbeatMonitor(["w0", "w1", "w2"], cfg)
+    for t in range(10):
+        mon.beat("w0", float(t), 0.1)
+        mon.beat("w1", float(t), 0.1)
+        mon.beat("w2", float(t), 0.5)  # persistently 5x slower
+    assert mon.dead_workers(20.0) == ["w0", "w1", "w2"]  # all silent by t=20
+    mon.beat("w0", 20.0)
+    assert "w0" not in mon.dead_workers(20.5)
+    assert mon.stragglers() == []  # first strike
+    assert mon.stragglers() == ["w2"]  # patience reached
+    mon.evict("w2")
+    assert "w2" not in mon.last_beat
+
+
+def test_elastic_restore_different_sharding(tmp_path, test_mesh):
+    """Checkpoint written replicated restores under an explicit sharding —
+    the 512->256 re-mesh path (device_put with a NamedSharding)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    checkpoint.save(tmp_path, 1, tree)
+    sh = {"w": NamedSharding(test_mesh, P("data", None))}
+    out = checkpoint.restore(tmp_path, 1, tree, shardings=sh)
+    assert out["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(out["w"], tree["w"])
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+
+def test_grad_compression_error_feedback_unbiased():
+    """On a constant gradient, error feedback makes the time-averaged
+    compressed gradient converge to the true one."""
+    g = jax.random.normal(jax.random.key(0), (300,)) * 3.0
+    res = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    steps = 50
+    for _ in range(steps):
+        mean, res = compress_psum_mean(g, res, ())  # no axes: single device
+        acc = acc + mean
+    avg = acc / steps
+    np.testing.assert_allclose(avg, g, rtol=2e-2, atol=2e-2)
+
+
+def test_grad_compression_tree_api():
+    grads = {"a": jnp.ones((10,)), "b": {"c": jnp.full((5,), 2.0)}}
+    res = init_residuals(grads)
+    fn = make_compressed_allreduce(())
+    means, new_res = fn(grads, res)
+    assert jax.tree.structure(means) == jax.tree.structure(grads)
+    # single step error bounded by quantization granularity
+    np.testing.assert_allclose(means["a"], grads["a"], rtol=0.02, atol=0.02)
