@@ -34,9 +34,9 @@ PAPER_TABLE1 = {
 
 @lru_cache(maxsize=1)
 def bench_world():
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh()
     rules = adapt_rules(RECSYS_RULES, mesh)
     cfg = get_config("taobao_ssa")
     fields = tuple(

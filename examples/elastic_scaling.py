@@ -1,22 +1,43 @@
-"""Elastic-scheduling study (paper §IV.B): the same traffic spike served
-with (a) fixed replicas, (b) autoscaling, (c) autoscaling + warm pool +
-priority bypass — demonstrating each mechanism's contribution.
+"""Elastic-scheduling study (paper §IV.B) on the multi-pool engine: the
+same traffic spike served by (a) a fixed single pool, (b) an autoscaled
+pool, (c) autoscaling + warm pool + priority bypass, then the refactor's
+new scenarios — (d) a heterogeneous baseline+distilled fleet behind each
+router policy, and (e) ranking traffic as a RecPipe-style cascade vs the
+baseline pool alone, under one shared capacity budget.
 
     PYTHONPATH=src python examples/elastic_scaling.py
 """
 from repro.core.serving.autoscaler import ScalerConfig
-from repro.core.serving.engine import ElasticEngine, EngineConfig, poisson_arrivals
+from repro.core.serving.cascade import CascadeConfig
+from repro.core.serving.engine import (
+    ElasticEngine, EngineConfig, PoolSpec, ServingSystem, poisson_arrivals,
+)
+from repro.core.serving.pool import PoolConfig
 from repro.core.serving.rate_limiter import TierPolicy
 from repro.core.serving.replica import LatencyModel, ReplicaSpec
+from repro.core.serving.router import make_router
 
 SPIKE = lambda t: 120.0 if t < 15 else (1100.0 if t < 40 else 150.0)
+RANK_SPIKE = lambda t: 25.0 if t < 15 else (110.0 if t < 40 else 35.0)
+
+BASELINE = lambda: ReplicaSpec("baseline", LatencyModel.analytic(0.018, 0.0008),
+                               cold_start_s=5.0, warm_start_s=0.2)
+DISTILLED = lambda: ReplicaSpec("distilled", LatencyModel.analytic(0.004, 0.0001),
+                                cold_start_s=2.0, warm_start_s=0.2)
 
 
-def scenario(name, *, autoscale, warm_pool, bypass, cold=5.0):
-    spec = ReplicaSpec(
-        "model", LatencyModel.analytic(0.018, 0.0008),
-        cold_start_s=cold, warm_start_s=0.2,
-    )
+def report(name, res):
+    tr = res["trace"]
+    print(f"{name:38s} p50={res['p50']*1e3:8.1f}ms p99={res['p99']*1e3:8.1f}ms "
+          f"thpt={res['throughput']:6.0f}/s shed={res['rejected']:6d} "
+          f"slo={res['slo_attainment']:.3f} "
+          f"max_repl={max(tr['replicas'], default=0)}")
+    return res
+
+
+def single_pool(name, *, autoscale, warm_pool, bypass, cold=5.0):
+    spec = ReplicaSpec("model", LatencyModel.analytic(0.018, 0.0008),
+                       cold_start_s=cold, warm_start_s=0.2)
     eng = ElasticEngine(
         spec,
         EngineConfig(n_replicas=2, autoscale=autoscale, slo_p99_s=0.15,
@@ -25,20 +46,58 @@ def scenario(name, *, autoscale, warm_pool, bypass, cold=5.0):
         scaler_cfg=ScalerConfig(min_replicas=2, warm_pool_size=4 if warm_pool else 0),
     )
     arrivals = poisson_arrivals(SPIKE, 60.0, seed=0, priority_frac=0.03)
-    res = eng.run(arrivals, until=60.0)
-    tr = res["trace"]
-    print(f"{name:34s} p50={res['p50']*1e3:8.1f}ms p99={res['p99']*1e3:8.1f}ms "
-          f"thpt={res['throughput']:6.0f}/s shed={res['rejected']:6d} "
-          f"max_repl={max(tr['replicas']) if tr['replicas'] else 2}")
-    return res
+    return report(name, eng.run(arrivals, until=60.0))
+
+
+def heterogeneous(policy, **kw):
+    pools = {
+        "baseline": PoolSpec(BASELINE(), PoolConfig(n_replicas=2, max_batch=32)),
+        "distilled": PoolSpec(DISTILLED(), PoolConfig(n_replicas=2, max_batch=32)),
+    }
+    sys_ = ServingSystem(
+        pools, make_router(policy, **kw),
+        tiers={"tier0": TierPolicy(1500, 120), "tier1": TierPolicy(1500, 120)},
+        slo_p99_s=0.15, capacity=12,
+    )
+    arrivals = poisson_arrivals(SPIKE, 60.0, seed=0, priority_frac=0.03)
+    res = report(f"hetero 2-pool [{policy}]", sys_.run(arrivals, until=60.0))
+    share = ", ".join(f"{n}={p['completed']}" for n, p in res["pools"].items())
+    print(f"{'':38s} pool share: {share}")
+
+
+def ranking(mode):
+    candidates, k = 512, 32
+    tiers = {"tier0": TierPolicy(200, 40), "tier1": TierPolicy(200, 40)}
+    pcfg = lambda: PoolConfig(n_replicas=2, max_batch=4, priority_bypass=False)
+    if mode == "baseline_only":
+        sys_ = ServingSystem({"baseline": PoolSpec(BASELINE(), pcfg())},
+                             tiers=tiers, slo_p99_s=0.3, capacity=8)
+        arrivals = poisson_arrivals(RANK_SPIKE, 60.0, seed=0, cost=candidates,
+                                    priority_frac=0.0)
+    else:
+        sys_ = ServingSystem(
+            {"distilled": PoolSpec(DISTILLED(), pcfg()),
+             "baseline": PoolSpec(BASELINE(), pcfg())},
+            cascade=CascadeConfig("distilled", "baseline",
+                                  candidates=candidates, rerank_k=k),
+            tiers=tiers, slo_p99_s=0.3, capacity=8)
+        arrivals = poisson_arrivals(RANK_SPIKE, 60.0, seed=0, priority_frac=0.0)
+    report(f"ranking 512-cand [{mode}]", sys_.run(arrivals, until=60.0))
 
 
 def main():
     print("traffic: 120 QPS -> 1100 QPS spike -> 150 QPS; SLO p99 = 150ms")
-    scenario("fixed 2 replicas", autoscale=False, warm_pool=False, bypass=False)
-    scenario("autoscale (cold starts)", autoscale=True, warm_pool=False, bypass=False)
-    scenario("autoscale + warm pool", autoscale=True, warm_pool=True, bypass=False)
-    scenario("autoscale + warm pool + bypass", autoscale=True, warm_pool=True, bypass=True)
+    single_pool("fixed 2 replicas", autoscale=False, warm_pool=False, bypass=False)
+    single_pool("autoscale (cold starts)", autoscale=True, warm_pool=False, bypass=False)
+    single_pool("autoscale + warm pool", autoscale=True, warm_pool=True, bypass=False)
+    single_pool("autoscale + warm pool + bypass", autoscale=True, warm_pool=True, bypass=True)
+    print("\nheterogeneous fleet (baseline + distilled), capacity budget 12:")
+    heterogeneous("least_loaded")
+    heterogeneous("power_of_two", seed=0)
+    heterogeneous("slo_aware", slo_p99_s=0.15, quality_order=("baseline", "distilled"))
+    print("\nranking traffic (512 candidates/query), capacity budget 8, SLO p99 = 300ms:")
+    ranking("baseline_only")
+    ranking("cascade")
 
 
 if __name__ == "__main__":

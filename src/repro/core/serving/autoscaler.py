@@ -1,4 +1,10 @@
-"""Target-utilisation autoscaler + warm pool (paper §IV.B / k8s HPA style)."""
+"""Target-utilisation autoscaler + warm pool (paper §IV.B / k8s HPA style).
+
+Post-refactor each ReplicaPool owns its own AutoScaler; a CapacityBudget
+shared across pools caps the fleet-wide replica count so one pool scaling
+up spends headroom the others can no longer claim (heterogeneous pools
+compete for the same accelerators).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -12,6 +18,27 @@ class ScalerConfig:
     scale_up_cooldown_s: float = 2.0
     scale_down_cooldown_s: float = 15.0
     warm_pool_size: int = 2
+
+
+@dataclasses.dataclass
+class CapacityBudget:
+    """Fleet-wide replica budget shared by every pool's autoscaler."""
+
+    total: int
+    used: int = 0
+
+    def acquire(self, n: int) -> int:
+        """Grant up to n replicas' worth of capacity; returns the grant."""
+        grant = max(0, min(n, self.total - self.used))
+        self.used += grant
+        return grant
+
+    def release(self, n: int) -> None:
+        self.used = max(0, self.used - n)
+
+    @property
+    def available(self) -> int:
+        return self.total - self.used
 
 
 class AutoScaler:

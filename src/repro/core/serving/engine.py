@@ -1,31 +1,59 @@
-"""Elastic inference engine: discrete-event loop tying together the
-batcher, least-loaded router, autoscaler, warm pool, tiered rate limiter
-and SLO monitor (paper §IV.B). Service times come from LatencyModels
-calibrated on real jitted executables (replica.py), so "Distilled+int8 vs
-Baseline under a traffic spike" is an experiment, not an assertion.
+"""Heterogeneous multi-pool serving engine (paper §IV.B).
 
-Events: ARRIVAL -> admit (rate limit) -> enqueue (priority bypass skips
-batching) -> router picks least-loaded replica when a batch closes
-(max_batch or max_wait) -> SERVICE_DONE records latency -> SCALE_TICK
-drives the autoscaler from sliding-window utilisation.
+Post-refactor layering — the engine is an orchestrator, not a monolith:
+
+    events.py    EventLoop        the discrete-event kernel
+    replica.py   Replica/Spec     calibrated service times, start costs
+    pool.py      ReplicaPool      per-variant batcher + AutoScaler + SLOMonitor
+    router.py    Router policies  least-loaded / power-of-two / SLO-aware
+    cascade.py   CascadeDispatcher  light-filter -> heavy-rerank chaining
+    autoscaler.py CapacityBudget  fleet-wide replica cap shared by pools
+    this file    ServingSystem    admission (rate limit) -> route -> pools
+
+ServingSystem runs any number of Table-I variant pools on one event loop:
+ARRIVAL -> admit (tiered rate limit) -> router (or cascade) picks the pool
+-> pool batches and picks the replica -> BATCH_DONE records per-pool stage
+latency and, for cascades, chains the next stage -> SCALE_TICK drives every
+pool's autoscaler against the shared capacity budget.
+
+ElasticEngine remains as the single-pool convenience wrapper: the
+constructor/run surface is unchanged for existing callers (launchers,
+end-to-end examples), but the summary metrics were deliberately
+redefined — p50/p99 are now full-run percentiles (previously the last
+10s sliding window) and "throughput" counts only completions inside the
+horizon (previously all completions, including post-horizon backlog
+drain). Numbers are not comparable with pre-refactor runs.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.core.serving.autoscaler import AutoScaler, ScalerConfig
+from repro.core.serving.autoscaler import CapacityBudget, ScalerConfig
+from repro.core.serving.cascade import CascadeConfig, CascadeDispatcher
+from repro.core.serving.events import EventLoop
 from repro.core.serving.metrics import SLOMonitor
+from repro.core.serving.pool import PoolConfig, ReplicaPool, Request
 from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
-from repro.core.serving.replica import Replica, ReplicaSpec
+from repro.core.serving.replica import ReplicaSpec
+from repro.core.serving.router import LeastLoadedRouter, Router
+
+
+@dataclasses.dataclass
+class PoolSpec:
+    """Everything needed to bring up one variant pool."""
+
+    spec: ReplicaSpec
+    cfg: PoolConfig = dataclasses.field(default_factory=PoolConfig)
+    scaler: Optional[ScalerConfig] = None
 
 
 @dataclasses.dataclass
 class EngineConfig:
+    """Single-pool knobs (pre-refactor API, used by ElasticEngine)."""
+
     max_batch: int = 64
     max_wait_s: float = 0.005
     slo_p99_s: float = 0.100
@@ -35,150 +63,154 @@ class EngineConfig:
     priority_bypass: bool = True
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    t_arrive: float
-    tier: str
-    priority: bool = False
-
-
-class ElasticEngine:
+class ServingSystem:
     def __init__(
         self,
-        spec: ReplicaSpec,
-        cfg: EngineConfig,
+        pools: Dict[str, Union[PoolSpec, ReplicaSpec]],
+        router: Optional[Router] = None,
+        *,
         tiers: Optional[Dict[str, TierPolicy]] = None,
-        scaler_cfg: Optional[ScalerConfig] = None,
+        slo_p99_s: float = 0.100,
+        scale_tick_s: float = 1.0,
+        capacity: Optional[int] = None,
+        cascade: Optional[CascadeConfig] = None,
+        adaptive_shedding: bool = True,
     ):
-        self.spec = spec
-        self.cfg = cfg
+        self.loop = EventLoop()
+        self.router = router or LeastLoadedRouter()
+        self.slo_p99_s = slo_p99_s
+        self.scale_tick_s = scale_tick_s
+        self.adaptive_shedding = adaptive_shedding
         self.limiter = HybridRateLimiter(
             tiers or {"tier0": TierPolicy(1e9, 1e9), "tier1": TierPolicy(1e9, 1e9)}
         )
-        self.scaler = AutoScaler(scaler_cfg or ScalerConfig(min_replicas=cfg.n_replicas))
-        self.monitor = SLOMonitor()
-        self.replicas: List[Replica] = [
-            Replica(i, spec, ready_at=0.0) for i in range(cfg.n_replicas)
-        ]
-        self._registry: Dict[int, Replica] = {r.rid: r for r in self.replicas}
-        self._rid = itertools.count(len(self.replicas))
+        self.budget = CapacityBudget(capacity) if capacity is not None else None
+        self.monitor = SLOMonitor(slo_s=slo_p99_s)  # end-to-end latencies
+        self.pools: Dict[str, ReplicaPool] = {}
+        for name, ps in pools.items():
+            if isinstance(ps, ReplicaSpec):
+                ps = PoolSpec(ps)
+            self.pools[name] = ReplicaPool(
+                name, ps.spec, ps.cfg, self.loop,
+                scaler_cfg=ps.scaler, budget=self.budget,
+                on_complete=self._stage_complete, slo_s=slo_p99_s,
+                picker=self.router.select_replica,
+            )
+        self.cascade = CascadeDispatcher(cascade) if cascade is not None else None
+        if self.cascade is not None:
+            for stage in (cascade.stage1, cascade.stage2):
+                if stage not in self.pools:
+                    raise KeyError(f"cascade stage pool {stage!r} not configured")
+        self._horizon = float("inf")
+        self._completed_in_horizon = 0
+        self.trace: Dict[str, List[float]] = {
+            "t": [], "p99": [], "qps": [], "replicas": [], "queue": []
+        }
+        self.loop.on("arrive", self._handle_arrive)
+        self.loop.on("scale", self._handle_scale)
 
-    # ---- router ----
-    def _pick_replica(self, now: float) -> Replica:
-        return min(self.replicas, key=lambda r: r.load(now))
+    # ---- event handlers ----
+    def _handle_arrive(self, now: float, req: Request) -> None:
+        self.monitor.arrived += 1
+        if not self.limiter.admit(now, req.tier):
+            self.monitor.rejected += 1
+            return
+        if self.cascade is not None:
+            req, pool = self.cascade.admit(req, self.pools)
+        else:
+            pool = self.router.select_pool(req, list(self.pools.values()), now)
+        pool.submit(now, req)
 
-    def _utilisation(self, now: float, horizon: float) -> float:
-        # booting replicas are excluded — counting them as busy makes the
-        # scaler chase its own pending capacity (observed 25-replica
-        # overshoot under cold starts)
-        ready = [r for r in self.replicas if r.ready_at <= now]
-        if not ready:
-            return 1.0
-        busy = sum(min(max(r.busy_until - now, 0.0), horizon) for r in ready)
-        return busy / (horizon * len(ready))
+    def _stage_complete(self, now: float, req: Request, pool: ReplicaPool) -> None:
+        if self.cascade is not None:
+            nxt = self.cascade.advance(req, self.pools)
+            if nxt is not None:
+                nxt.submit(now, req)
+                return
+        self.monitor.record(now, now - req.t_arrive)
+        if now <= self._horizon:
+            self._completed_in_horizon += 1
+
+    def _handle_scale(self, now: float, _payload) -> None:
+        if now > self._horizon:
+            return
+        stats = self.monitor.percentiles(now)
+        if self.adaptive_shedding:
+            self.limiter.adapt(stats["p99"], self.slo_p99_s)
+        for pool in self.pools.values():
+            pool.scale_tick(now, self.scale_tick_s)
+        self.trace["t"].append(now)
+        self.trace["p99"].append(stats["p99"])
+        self.trace["qps"].append(stats["qps"])
+        self.trace["replicas"].append(sum(len(p.replicas) for p in self.pools.values()))
+        self.trace["queue"].append(sum(len(p.queue) for p in self.pools.values()))
+        if now + self.scale_tick_s <= self._horizon:
+            self.loop.push(now + self.scale_tick_s, "scale")
 
     # ---- simulation ----
-    def run(
-        self,
-        arrivals: List[Request],
-        until: Optional[float] = None,
-    ) -> Dict:
-        cfg = self.cfg
-        events: List[Tuple[float, int, str, object]] = []
-        seq = itertools.count()
+    def run(self, arrivals: List[Request], until: Optional[float] = None) -> Dict:
         for r in arrivals:
-            heapq.heappush(events, (r.t_arrive, next(seq), "arrive", r))
-        if cfg.autoscale:
-            heapq.heappush(events, (cfg.scale_tick_s, next(seq), "scale", None))
+            self.loop.push(r.t_arrive, "arrive", r)
+        self._horizon = until or (arrivals[-1].t_arrive + 5.0 if arrivals else 5.0)
+        self.loop.push(self.scale_tick_s, "scale")
+        self.loop.run()
 
-        queue: List[Request] = []
-        batch_deadline: Optional[float] = None
-        trace = {"t": [], "p99": [], "qps": [], "replicas": [], "queue": []}
-        horizon = until or (arrivals[-1].t_arrive + 5.0 if arrivals else 5.0)
-
-        def flush(now: float):
-            nonlocal batch_deadline
-            while queue:
-                take = queue[: cfg.max_batch]
-                del queue[: cfg.max_batch]
-                rep = self._pick_replica(now)
-                done = rep.start_batch(now, len(take))
-                heapq.heappush(events, (done, next(seq), "done", (rep.rid, take, now)))
-                if len(queue) < cfg.max_batch:
-                    break
-            batch_deadline = None
-
-        while events:
-            now, _, kind, payload = heapq.heappop(events)
-            if now > horizon and kind in ("scale",):
-                continue
-            if kind == "arrive":
-                r: Request = payload  # type: ignore
-                self.monitor.admitted += 1
-                if not self.limiter.admit(now, r.tier):
-                    self.monitor.rejected += 1
-                    continue
-                if cfg.priority_bypass and r.priority:
-                    rep = self._pick_replica(now)
-                    done = rep.start_batch(now, 1)
-                    heapq.heappush(events, (done, next(seq), "done", (rep.rid, [r], now)))
-                    continue
-                queue.append(r)
-                if len(queue) >= cfg.max_batch:
-                    flush(now)
-                elif batch_deadline is None:
-                    batch_deadline = now + cfg.max_wait_s
-                    heapq.heappush(events, (batch_deadline, next(seq), "timeout", None))
-            elif kind == "timeout":
-                if batch_deadline is not None and now >= batch_deadline and queue:
-                    flush(now)
-            elif kind == "done":
-                rep_id, batch, started = payload  # type: ignore
-                rep = self._registry[rep_id]
-                rep.in_flight -= 1
-                for r in batch:
-                    self.monitor.record(now, now - r.t_arrive)
-            elif kind == "scale":
-                stats = self.monitor.percentiles(now)
-                util = self._utilisation(now, cfg.scale_tick_s)
-                self.limiter.adapt(stats["p99"], cfg.slo_p99_s)
-                want = self.scaler.desired(now, len(self.replicas), util)
-                while want > len(self.replicas):
-                    delay = self.scaler.take_start_delay(
-                        self.spec.warm_start_s, self.spec.cold_start_s
-                    )
-                    rep = Replica(next(self._rid), self.spec, ready_at=now + delay)
-                    self.replicas.append(rep)
-                    self._registry[rep.rid] = rep
-                # graceful scale-down: retire only drained replicas
-                idle = [r for r in self.replicas if r.in_flight == 0 and r.busy_until <= now]
-                while want < len(self.replicas) and len(self.replicas) > 1 and idle:
-                    victim = idle.pop()
-                    self.replicas.remove(victim)
-                    self.scaler.replenish()
-                trace["t"].append(now)
-                trace["p99"].append(stats["p99"])
-                trace["qps"].append(stats["qps"])
-                trace["replicas"].append(len(self.replicas))
-                trace["queue"].append(len(queue))
-                if now + cfg.scale_tick_s <= horizon:
-                    heapq.heappush(
-                        events, (now + cfg.scale_tick_s, next(seq), "scale", None)
-                    )
-
-        final = self.monitor.percentiles(horizon)
-        all_lat = np.array([l for _, l in self.monitor.lat]) if self.monitor.lat else np.zeros(1)
+        totals = self.monitor.totals()
+        in_queue = sum(len(p.queue) for p in self.pools.values())
         return {
-            "p50": final["p50"],
-            "p99": final["p99"],
-            "mean_latency": float(all_lat.mean()),
+            "p50": totals["p50"],
+            "p99": totals["p99"],
+            "mean_latency": totals["mean"],
+            "slo_attainment": totals["attainment"],
+            "arrived": self.monitor.arrived,
             "completed": self.monitor.completed,
             "rejected": self.monitor.rejected,
-            "throughput": self.monitor.completed / horizon,
-            "final_replicas": len(self.replicas),
-            "trace": trace,
+            "in_queue": in_queue,
+            # sustained rate: completions INSIDE the horizon — backlog that
+            # only drains after traffic stops is not throughput the system
+            # sustained (total completions stay in "completed")
+            "completed_in_horizon": self._completed_in_horizon,
+            "throughput": self._completed_in_horizon / self._horizon,
+            "final_replicas": sum(len(p.replicas) for p in self.pools.values()),
+            "trace": self.trace,
+            "pools": {name: p.summary() for name, p in self.pools.items()},
         }
+
+
+class ElasticEngine(ServingSystem):
+    """Single-pool convenience wrapper: one variant, least-loaded routing —
+    the pre-refactor surface, now a 10-line shim over ServingSystem.
+    Simulation behavior matches the old engine; reported metrics follow
+    the new full-run/in-horizon definitions (see module docstring)."""
+
+    def __init__(
+        self,
+        spec: ReplicaSpec,
+        cfg: Optional[EngineConfig] = None,
+        tiers: Optional[Dict[str, TierPolicy]] = None,
+        scaler_cfg: Optional[ScalerConfig] = None,
+    ):
+        cfg = cfg or EngineConfig()
+        self.spec = spec
+        self.cfg = cfg
+        pool_cfg = PoolConfig(
+            max_batch=cfg.max_batch, max_wait_s=cfg.max_wait_s,
+            n_replicas=cfg.n_replicas, autoscale=cfg.autoscale,
+            priority_bypass=cfg.priority_bypass,
+        )
+        super().__init__(
+            {spec.variant: PoolSpec(spec, pool_cfg, scaler_cfg)},
+            LeastLoadedRouter(),
+            tiers=tiers, slo_p99_s=cfg.slo_p99_s, scale_tick_s=cfg.scale_tick_s,
+            # the pre-refactor engine only ran limiter adaptation from the
+            # scale tick, which existed only when autoscaling — mirror that
+            adaptive_shedding=cfg.autoscale,
+        )
+
+    @property
+    def replicas(self):
+        (pool,) = self.pools.values()
+        return pool.replicas
 
 
 def poisson_arrivals(
@@ -188,8 +220,11 @@ def poisson_arrivals(
     seed: int = 0,
     tiers: Tuple[str, ...] = ("tier0", "tier1"),
     priority_frac: float = 0.02,
+    cost: int = 1,
 ) -> List[Request]:
-    """Inhomogeneous Poisson traffic via thinning; rate_fn(t) in QPS."""
+    """Inhomogeneous Poisson traffic via thinning; rate_fn(t) in QPS.
+    `cost` is the per-request work size (candidates to score) — 1 for
+    pointwise traffic, the candidate-set size for ranking traffic."""
     rng = np.random.default_rng(seed)
     peak = max(rate_fn(t) for t in np.linspace(0, horizon, 200)) + 1e-9
     out, t, rid = [], 0.0, 0
@@ -203,6 +238,7 @@ def poisson_arrivals(
                     rid, t,
                     tier=str(rng.choice(tiers)),
                     priority=bool(rng.random() < priority_frac),
+                    cost=cost,
                 )
             )
             rid += 1

@@ -1,0 +1,45 @@
+"""Discrete-event kernel for the serving simulator.
+
+The kernel is deliberately tiny: a time-ordered heap of (t, seq, kind,
+payload) events and a registry of handlers keyed by event kind. Pools,
+routers, the cascade dispatcher and the engine all plug into the same loop
+by registering handlers and pushing events — none of them own the clock.
+Event kinds are plain strings; components namespace theirs
+("batch_done:<pool>") so several pools can share one loop.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class EventLoop:
+    def __init__(self):
+        self._heap: List[Tuple[float, int, str, object]] = []
+        self._seq = itertools.count()
+        self._handlers: Dict[str, Callable[[float, object], None]] = {}
+        self.now = 0.0
+
+    def on(self, kind: str, handler: Callable[[float, object], None]) -> None:
+        """Register the handler for an event kind (one handler per kind)."""
+        if kind in self._handlers:
+            raise ValueError(f"handler already registered for event kind {kind!r}")
+        self._handlers[kind] = handler
+
+    def push(self, t: float, kind: str, payload: object = None) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def run(self) -> float:
+        """Drain the heap in time order; returns the time of the last event
+        processed. The loop itself has no horizon — periodic handlers (scale
+        ticks) stop rescheduling themselves past theirs, while in-flight
+        service completions always run so no work is lost."""
+        last = self.now
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            self.now = last = t
+            handler = self._handlers.get(kind)
+            if handler is not None:
+                handler(t, payload)
+        return last

@@ -1,29 +1,44 @@
-"""SLO monitor: sliding-window latency percentiles, QPS, rejects."""
+"""SLO monitoring: sliding-window percentiles for the control loops
+(autoscaler, rate-limiter shedding) plus full-run history for end-of-run
+reporting and per-pool SLO attribution.
+
+Each ReplicaPool owns one SLOMonitor (stage latencies, measured from entry
+into that pool), and the engine owns one more for end-to-end latencies —
+so an SLO breach is attributable to the pool that caused it, not just
+observed at the front door.
+"""
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, Dict, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 
 class SLOMonitor:
-    def __init__(self, window_s: float = 10.0):
+    def __init__(self, window_s: float = 10.0, slo_s: Optional[float] = None):
         self.window_s = window_s
+        self.slo_s = slo_s
         self.lat: Deque[Tuple[float, float]] = deque()  # (finish_time, latency)
-        self.admitted = 0
+        self.history: List[float] = []  # full-run latencies
+        self.arrived = 0
         self.rejected = 0
         self.completed = 0
+        self.slo_hits = 0
 
     def record(self, finish: float, latency: float):
         self.completed += 1
         self.lat.append((finish, latency))
+        self.history.append(latency)
+        if self.slo_s is not None and latency <= self.slo_s:
+            self.slo_hits += 1
 
     def _trim(self, now: float):
         while self.lat and self.lat[0][0] < now - self.window_s:
             self.lat.popleft()
 
     def percentiles(self, now: float) -> Dict[str, float]:
+        """Sliding-window stats — the signal the control loops react to."""
         self._trim(now)
         if not self.lat:
             return {"p50": 0.0, "p99": 0.0, "qps": 0.0}
@@ -32,4 +47,24 @@ class SLOMonitor:
             "p50": float(np.percentile(arr, 50)),
             "p99": float(np.percentile(arr, 99)),
             "qps": len(arr) / self.window_s,
+        }
+
+    def attainment(self) -> float:
+        """Fraction of completed requests inside the SLO (1.0 when none)."""
+        if self.slo_s is None or not self.completed:
+            return 1.0
+        return self.slo_hits / self.completed
+
+    def totals(self) -> Dict[str, float]:
+        """Full-run latency stats (not windowed)."""
+        if not self.history:
+            return {"p50": 0.0, "p99": 0.0, "mean": 0.0,
+                    "completed": 0, "attainment": self.attainment()}
+        arr = np.asarray(self.history)
+        return {
+            "p50": float(np.percentile(arr, 50)),
+            "p99": float(np.percentile(arr, 99)),
+            "mean": float(arr.mean()),
+            "completed": self.completed,
+            "attainment": self.attainment(),
         }

@@ -1,0 +1,207 @@
+"""Replica pools: each pool owns the replicas of ONE Table-I variant,
+with its own batcher (max_batch / max_wait), its own AutoScaler and its
+own SLOMonitor. Pools plug into a shared EventLoop; the router decides
+which pool a request enters, the pool decides how it is batched and
+which replica serves it (via a pluggable replica picker).
+
+Scaling is per-pool but capacity is fleet-wide: every grow request goes
+through the shared CapacityBudget, so heterogeneous pools compete for
+the same accelerators instead of each assuming it owns the cluster.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, List, Optional
+
+from repro.core.serving.autoscaler import AutoScaler, CapacityBudget, ScalerConfig
+from repro.core.serving.events import EventLoop
+from repro.core.serving.metrics import SLOMonitor
+from repro.core.serving.replica import Replica, ReplicaSpec
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    t_arrive: float
+    tier: str
+    priority: bool = False
+    cost: int = 1  # work items carried (e.g. candidates to score)
+    stage: int = 0  # 0 = single-stage; 1, 2, ... = cascade stages
+    t_enqueue: float = 0.0  # when it entered the current pool
+    timeline: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def stamp(self, event: str, t: float) -> None:
+        self.timeline[f"s{max(self.stage, 1)}_{event}"] = t
+
+
+@dataclasses.dataclass
+class PoolConfig:
+    max_batch: int = 64  # batch closes at this many requests...
+    max_wait_s: float = 0.005  # ...or when the oldest has waited this long
+    n_replicas: int = 2
+    autoscale: bool = True
+    priority_bypass: bool = True
+
+
+class ReplicaPool:
+    def __init__(
+        self,
+        name: str,
+        spec: ReplicaSpec,
+        cfg: PoolConfig,
+        loop: EventLoop,
+        *,
+        scaler_cfg: Optional[ScalerConfig] = None,
+        budget: Optional[CapacityBudget] = None,
+        on_complete: Optional[Callable[[float, Request, "ReplicaPool"], None]] = None,
+        slo_s: Optional[float] = None,
+        picker: Optional[Callable[["ReplicaPool", float], Replica]] = None,
+    ):
+        self.name = name
+        self.spec = spec
+        self.cfg = cfg
+        self.loop = loop
+        self.scaler = AutoScaler(scaler_cfg or ScalerConfig(min_replicas=cfg.n_replicas))
+        self.budget = budget
+        self.on_complete = on_complete or (lambda now, req, pool: None)
+        self.monitor = SLOMonitor(slo_s=slo_s)
+        self.picker = picker or (lambda pool, now: min(pool.replicas, key=lambda r: r.load(now)))
+
+        if budget is not None and budget.acquire(cfg.n_replicas) < cfg.n_replicas:
+            raise ValueError(
+                f"capacity budget exhausted bringing up pool {name!r} "
+                f"({cfg.n_replicas} initial replicas, {budget.available} left)"
+            )
+        self.replicas: List[Replica] = [
+            Replica(i, spec, ready_at=0.0) for i in range(cfg.n_replicas)
+        ]
+        self._registry: Dict[int, Replica] = {r.rid: r for r in self.replicas}
+        self._rid = itertools.count(len(self.replicas))
+
+        self.queue: List[Request] = []
+        self.queued_cost = 0  # running sum of queue costs (O(1) router signal)
+        self._batch_deadline: Optional[float] = None
+        self.trace: Dict[str, List[float]] = {"t": [], "replicas": [], "queue": [], "p99": []}
+
+        loop.on(f"batch_timeout:{name}", self._handle_timeout)
+        loop.on(f"batch_done:{name}", self._handle_done)
+
+    # ---- routing signals ----
+    def predicted_latency(self, now: float, cost: int = 1) -> float:
+        """Router signal: wait for the freest replica + service time of the
+        backlog this request would join."""
+        ready = [r for r in self.replicas if r.ready_at <= now] or self.replicas
+        wait = min(r.load(now) for r in ready)
+        return wait + self.spec.latency(self.queued_cost + cost)
+
+    def recent_p99(self, now: float) -> float:
+        return self.monitor.percentiles(now)["p99"]
+
+    # ---- admission / batching ----
+    def submit(self, now: float, req: Request) -> None:
+        req.t_enqueue = now
+        req.stamp("enqueue", now)
+        if self.cfg.priority_bypass and req.priority:
+            self._dispatch(now, [req])
+            return
+        self.queue.append(req)
+        self.queued_cost += req.cost
+        if len(self.queue) >= self.cfg.max_batch:
+            self._flush(now)
+        elif self._batch_deadline is None:
+            self._batch_deadline = now + self.cfg.max_wait_s
+            self.loop.push(self._batch_deadline, f"batch_timeout:{self.name}")
+
+    def _dispatch(self, now: float, take: List[Request]) -> None:
+        rep = self.picker(self, now)
+        items = sum(r.cost for r in take)
+        start, done = rep.start_batch(now, items)
+        for r in take:
+            r.stamp("start", start)
+        self.loop.push(done, f"batch_done:{self.name}", (rep.rid, take))
+
+    def _flush(self, now: float) -> None:
+        while self.queue:
+            take = self.queue[: self.cfg.max_batch]
+            del self.queue[: self.cfg.max_batch]
+            self.queued_cost -= sum(r.cost for r in take)
+            self._dispatch(now, take)
+            if len(self.queue) < self.cfg.max_batch:
+                break
+        if self.queue:
+            # partial remainder waits (at most max_wait) for more arrivals —
+            # re-arm the deadline so it always drains even if traffic stops
+            self._batch_deadline = now + self.cfg.max_wait_s
+            self.loop.push(self._batch_deadline, f"batch_timeout:{self.name}")
+        else:
+            self._batch_deadline = None
+
+    def _handle_timeout(self, now: float, _payload) -> None:
+        if self._batch_deadline is not None and now >= self._batch_deadline and self.queue:
+            self._flush(now)
+
+    def _handle_done(self, now: float, payload) -> None:
+        rep_id, take = payload
+        self._registry[rep_id].in_flight -= 1
+        for r in take:
+            r.stamp("done", now)
+            self.monitor.record(now, now - r.t_enqueue)
+            self.on_complete(now, r, self)
+
+    # ---- scaling ----
+    def utilisation(self, now: float, horizon: float) -> float:
+        # booting replicas are excluded — counting them as busy makes the
+        # scaler chase its own pending capacity (observed 25-replica
+        # overshoot under cold starts)
+        ready = [r for r in self.replicas if r.ready_at <= now]
+        if not ready:
+            return 1.0
+        busy = sum(min(max(r.busy_until - now, 0.0), horizon) for r in ready)
+        return busy / (horizon * len(ready))
+
+    def scale_tick(self, now: float, tick_s: float) -> None:
+        stats = self.monitor.percentiles(now)
+        if self.cfg.autoscale:
+            util = self.utilisation(now, tick_s)
+            want = self.scaler.desired(now, len(self.replicas), util)
+            grow = want - len(self.replicas)
+            if grow > 0:
+                if self.budget is not None:
+                    grow = self.budget.acquire(grow)
+                for _ in range(grow):
+                    delay = self.scaler.take_start_delay(
+                        self.spec.warm_start_s, self.spec.cold_start_s
+                    )
+                    rep = Replica(next(self._rid), self.spec, ready_at=now + delay)
+                    self.replicas.append(rep)
+                    self._registry[rep.rid] = rep
+            elif grow < 0:
+                # graceful scale-down: retire only drained replicas
+                idle = [r for r in self.replicas if r.in_flight == 0 and r.busy_until <= now]
+                while want < len(self.replicas) and len(self.replicas) > 1 and idle:
+                    victim = idle.pop()
+                    self.replicas.remove(victim)
+                    self.scaler.replenish()
+                    if self.budget is not None:
+                        self.budget.release(1)
+        self.trace["t"].append(now)
+        self.trace["replicas"].append(len(self.replicas))
+        self.trace["queue"].append(len(self.queue))
+        self.trace["p99"].append(stats["p99"])
+
+    # ---- reporting ----
+    def summary(self) -> Dict:
+        tot = self.monitor.totals()
+        return {
+            "variant": self.spec.variant,
+            "completed": self.monitor.completed,
+            "p50": tot["p50"],
+            "p99": tot["p99"],
+            "mean": tot["mean"],
+            "slo_attainment": tot["attainment"],
+            "final_replicas": len(self.replicas),
+            "max_replicas": max(self.trace["replicas"], default=len(self.replicas)),
+            "served_items": sum(r.served for r in self._registry.values()),
+            "trace": self.trace,
+        }

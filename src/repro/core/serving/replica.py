@@ -11,20 +11,31 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 
 @dataclasses.dataclass
 class LatencyModel:
-    """Piecewise-linear service time in seconds vs batch size."""
+    """Piecewise-linear service time in seconds vs batch size (work items).
+    Beyond the last calibrated size the marginal per-item cost of the final
+    segment extrapolates linearly — ranking batches (hundreds of candidates
+    per request) routinely exceed the calibration ladder, and np.interp's
+    clamp would make arbitrarily large batches free."""
 
     sizes: np.ndarray
     times: np.ndarray
 
     def __call__(self, batch: int) -> float:
-        return float(np.interp(batch, self.sizes, self.times))
+        b = float(batch)
+        if len(self.sizes) >= 2 and b > self.sizes[-1]:
+            slope = (self.times[-1] - self.times[-2]) / (self.sizes[-1] - self.sizes[-2])
+            # timing noise can leave the calibrated tail non-monotonic; a
+            # negative slope would make huge batches (and thus busy_until)
+            # go negative and corrupt the event clock
+            return float(self.times[-1] + max(slope, 0.0) * (b - self.sizes[-1]))
+        return float(np.interp(b, self.sizes, self.times))
 
     @staticmethod
     def calibrate(
@@ -69,10 +80,11 @@ class Replica:
         """Router signal: time until free."""
         return max(self.busy_until - now, 0.0) + 0.001 * self.in_flight
 
-    def start_batch(self, now: float, batch: int) -> float:
+    def start_batch(self, now: float, items: int) -> Tuple[float, float]:
+        """Queue one batch of `items` work units; returns (start, done)."""
         start = max(now, self.busy_until, self.ready_at)
-        dur = self.spec.latency(batch)
+        dur = self.spec.latency(items)
         self.busy_until = start + dur
         self.in_flight += 1
-        self.served += batch
-        return self.busy_until
+        self.served += items
+        return start, self.busy_until

@@ -1,0 +1,110 @@
+"""Pluggable routing policies: a Router picks the pool a request enters
+(at admission) and the replica a closed batch lands on (at dispatch).
+All policies are deterministic given their constructor arguments — the
+power-of-two sampler draws from its own seeded generator, so two runs of
+the same trace through the same policy are bit-identical.
+
+DeepRecSys (arXiv 2001.02772) motivates the pool-level decision: with
+heterogeneous variants live at once, WHERE a query lands matters as much
+as how it is batched. To add a policy: subclass Router, implement
+select_pool (and optionally select_replica), and register it in ROUTERS.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.serving.pool import ReplicaPool, Request
+from repro.core.serving.replica import Replica
+
+
+class Router:
+    name = "base"
+
+    def select_pool(self, req: Request, pools: Sequence[ReplicaPool], now: float) -> ReplicaPool:
+        raise NotImplementedError
+
+    def select_replica(self, pool: ReplicaPool, now: float) -> Replica:
+        return min(pool.replicas, key=lambda r: r.load(now))
+
+
+class LeastLoadedRouter(Router):
+    """Global shortest-expected-delay: scan every pool/replica."""
+
+    name = "least_loaded"
+
+    def select_pool(self, req, pools, now):
+        return min(pools, key=lambda p: p.predicted_latency(now, req.cost))
+
+
+class PowerOfTwoRouter(Router):
+    """Power-of-two-choices: sample two candidates, take the less loaded.
+    O(1) per decision instead of a full scan, with near-best balance
+    (Mitzenmacher); the sampler is seeded so simulations stay reproducible."""
+
+    name = "power_of_two"
+
+    def __init__(self, seed: int = 0):
+        self._rng = np.random.default_rng(seed)
+
+    def _two(self, n: int) -> Tuple[int, int]:
+        i, j = self._rng.choice(n, size=2, replace=False)
+        return int(i), int(j)
+
+    def select_pool(self, req, pools, now):
+        if len(pools) == 1:
+            return pools[0]
+        i, j = self._two(len(pools))
+        a, b = pools[i], pools[j]
+        return a if a.predicted_latency(now, req.cost) <= b.predicted_latency(now, req.cost) else b
+
+    def select_replica(self, pool, now):
+        reps = pool.replicas
+        if len(reps) == 1:
+            return reps[0]
+        i, j = self._two(len(reps))
+        return reps[i] if reps[i].load(now) <= reps[j].load(now) else reps[j]
+
+
+class SLOAwareRouter(Router):
+    """Latency-aware policy for heterogeneous pools: among pools predicted
+    to meet the SLO (and not currently breaching it), send head traffic
+    (priority requests) to the highest-quality variant and everything else
+    to the cheapest; when no pool can meet the SLO, fall back to the global
+    shortest expected delay to limit the damage."""
+
+    name = "slo_aware"
+
+    def __init__(self, slo_p99_s: float = 0.1, quality_order: Sequence[str] = ()):
+        self.slo_p99_s = slo_p99_s
+        self.quality_order = tuple(quality_order)  # pool names, best model first
+
+    def select_pool(self, req, pools, now):
+        meeting = [
+            p for p in pools
+            if p.predicted_latency(now, req.cost) <= self.slo_p99_s
+            and p.recent_p99(now) <= self.slo_p99_s
+        ]
+        if not meeting:
+            return min(pools, key=lambda p: p.predicted_latency(now, req.cost))
+        if req.priority and self.quality_order:
+            by_name = {p.name: p for p in meeting}
+            for name in self.quality_order:
+                if name in by_name:
+                    return by_name[name]
+        return min(meeting, key=lambda p: p.spec.latency(req.cost))
+
+
+ROUTERS: Dict[str, type] = {
+    LeastLoadedRouter.name: LeastLoadedRouter,
+    PowerOfTwoRouter.name: PowerOfTwoRouter,
+    SLOAwareRouter.name: SLOAwareRouter,
+}
+
+
+def make_router(name: str, **kwargs) -> Router:
+    try:
+        return ROUTERS[name](**kwargs)
+    except KeyError:
+        raise KeyError(f"unknown router policy {name!r}; have {sorted(ROUTERS)}") from None

@@ -33,7 +33,9 @@ from repro.distributed.sharding import pspec
 
 def _axis_size(axis) -> int:
     try:
-        return jax.lax.axis_size(axis)
+        if hasattr(jax.lax, "axis_size"):
+            return jax.lax.axis_size(axis)
+        return jax.lax.psum(1, axis)  # jax 0.4.x: constant-folds to the size
     except NameError:
         return 1
 
@@ -195,8 +197,10 @@ def moe_ffn_ep(x, layer_params, cfg, rules) -> Tuple[jax.Array, jax.Array]:
     # check_vma=False: under some layouts (e.g. TP train, seq unsharded) the
     # router aux is invariant along the expert axis and the VMA checker
     # rejects the (correct) pmean over it.
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                       check_vma=False)
+    from repro.distributed.sharding import shard_map_compat
+
+    fn = shard_map_compat(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check=False)
     moe_in = {k: layer_params[k] for k in
               ("router", "w_gate", "w_up", "w_down") if k in layer_params}
     if has_shared:

@@ -109,7 +109,15 @@ def pspec(axes: Sequence[Optional[str]], rules: Mapping[str, MeshAxes]) -> P:
             return None if ax in used else (used.add(ax) or ax)
         kept = tuple(a for a in ax if a not in used)
         used.update(kept)
-        return kept if kept else None
+        if not kept:
+            return None
+        # canonical form: when dedup collapses the rule to its trailing
+        # (minor-most) axis, emit the bare axis rather than a 1-tuple; a
+        # surviving leading axis keeps the tuple so the spec still shows
+        # where the rule was truncated
+        if len(kept) == 1 and kept[0] == ax[-1]:
+            return kept[0]
+        return kept
 
     for name in axes:
         if name is None:
@@ -121,6 +129,21 @@ def pspec(axes: Sequence[Optional[str]], rules: Mapping[str, MeshAxes]) -> P:
     while out and out[-1] is None:
         out.pop()
     return P(*out)
+
+
+def shard_map_compat(body, *, mesh: Mesh, in_specs, out_specs, check=False):
+    """jax.shard_map across jax versions: 0.4.x ships it as
+    jax.experimental.shard_map with the replication checker named check_rep;
+    newer jax hangs it off the top-level namespace with check_vma."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check
+        )
+    from jax.experimental.shard_map import shard_map  # jax 0.4.x
+
+    return shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check
+    )
 
 
 def named_sharding(mesh: Mesh, axes: Sequence[Optional[str]], rules) -> NamedSharding:

@@ -12,10 +12,9 @@ import pytest
 
 @pytest.fixture(scope="session")
 def test_mesh():
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.launch.mesh import make_test_mesh
+
+    return make_test_mesh()
 
 
 @pytest.fixture(scope="session")

@@ -1,23 +1,69 @@
-"""Elastic serving engine tests (paper §IV.B behaviours)."""
+"""Serving-stack tests (paper §IV.B behaviours) against the multi-pool API:
+event kernel, replica pools, router policies, shared capacity budget,
+cascade inference, rate limiting and autoscaling."""
 import numpy as np
 import pytest
 
-from repro.core.serving.autoscaler import AutoScaler, ScalerConfig
-from repro.core.serving.engine import ElasticEngine, EngineConfig, Request, poisson_arrivals
+from repro.core.serving.autoscaler import AutoScaler, CapacityBudget, ScalerConfig
+from repro.core.serving.cascade import CascadeConfig
+from repro.core.serving.engine import (
+    ElasticEngine, EngineConfig, PoolSpec, Request, ServingSystem, poisson_arrivals,
+)
+from repro.core.serving.events import EventLoop
+from repro.core.serving.pool import PoolConfig
 from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
 from repro.core.serving.replica import LatencyModel, ReplicaSpec
+from repro.core.serving.router import ROUTERS, make_router
 
 
-def _spec(base=0.02, per=0.001):
-    return ReplicaSpec("m", LatencyModel.analytic(base, per),
+def _spec(name="m", base=0.02, per=0.001):
+    return ReplicaSpec(name, LatencyModel.analytic(base, per),
                        cold_start_s=5.0, warm_start_s=0.2)
 
 
 SPIKE = lambda t: 100.0 if t < 15 else (900.0 if t < 45 else 150.0)
 
 
+def _hetero_system(router, **kw):
+    """Two variant pools live at once: a heavy baseline and a cheap distilled."""
+    pools = {
+        "baseline": PoolSpec(_spec("baseline", 0.02, 1e-3), PoolConfig(n_replicas=2)),
+        "distilled": PoolSpec(_spec("distilled", 0.004, 5e-5), PoolConfig(n_replicas=2)),
+    }
+    return ServingSystem(pools, router, **kw)
+
+
+# ---------------------------------------------------------------------------
+# event kernel
+# ---------------------------------------------------------------------------
+
+
+def test_event_kernel_time_ordering():
+    loop = EventLoop()
+    seen = []
+    loop.on("a", lambda t, p: seen.append((t, p)))
+    loop.push(2.0, "a", "late")
+    loop.push(1.0, "a", "early")
+    loop.push(1.0, "a", "early2")  # FIFO within equal timestamps
+    loop.run()
+    assert seen == [(1.0, "early"), (1.0, "early2"), (2.0, "late")]
+    assert loop.now == 2.0
+
+
+def test_event_kernel_rejects_duplicate_handler():
+    loop = EventLoop()
+    loop.on("a", lambda t, p: None)
+    with pytest.raises(ValueError):
+        loop.on("a", lambda t, p: None)
+
+
+# ---------------------------------------------------------------------------
+# single pool (ElasticEngine compatibility surface)
+# ---------------------------------------------------------------------------
+
+
 def test_all_served_under_capacity():
-    eng = ElasticEngine(_spec(0.002, 1e-5), EngineConfig(n_replicas=2, autoscale=False))
+    eng = ElasticEngine(_spec("m", 0.002, 1e-5), EngineConfig(n_replicas=2, autoscale=False))
     arr = poisson_arrivals(lambda t: 100.0, 10.0, seed=1)
     res = eng.run(arr, until=12.0)
     assert res["rejected"] == 0
@@ -40,22 +86,212 @@ def test_autoscaler_rescues_overload():
 
 
 def test_priority_bypass_beats_batching():
-    spec = _spec(0.02, 0.001)
     arr = poisson_arrivals(lambda t: 400.0, 20.0, seed=2, priority_frac=0.05)
-    eng = ElasticEngine(spec, EngineConfig(n_replicas=8, autoscale=False,
-                                           max_batch=64, max_wait_s=0.02))
-    # instrument: track latencies by priority
-    pri, nor = [], []
-    orig_record = eng.monitor.record
-    lookup = {r.rid: r.priority for r in arr}
-    def record(finish, latency, _orig=orig_record):
-        _orig(finish, latency)
-    eng.monitor.record = record
+    eng = ElasticEngine(_spec("m", 0.02, 0.001),
+                        EngineConfig(n_replicas=8, autoscale=False,
+                                     max_batch=64, max_wait_s=0.02))
     res = eng.run(arr, until=20.0)
     assert res["completed"] == len(arr) - res["rejected"]
-    # bypass requests never wait max_wait: engine-level check is that p50
-    # stays below batch wait + service
+    # bypass requests never wait max_wait: p50 stays below batch wait + service
     assert res["p50"] < 0.06
+
+
+def test_simulation_deterministic():
+    arr = poisson_arrivals(SPIKE, 30.0, seed=7)
+    runs = []
+    for _ in range(2):
+        eng = ElasticEngine(_spec(), EngineConfig(n_replicas=2, autoscale=True))
+        runs.append(eng.run(arr, until=30.0))
+    assert runs[0]["p99"] == runs[1]["p99"]
+    assert runs[0]["completed"] == runs[1]["completed"]
+
+
+# ---------------------------------------------------------------------------
+# router policies (all three through the same event kernel)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", sorted(ROUTERS))
+def test_router_policy_deterministic_under_seed(policy):
+    kw = {"seed": 11} if policy == "power_of_two" else (
+        {"slo_p99_s": 0.1, "quality_order": ("baseline", "distilled")}
+        if policy == "slo_aware" else {})
+    arr = poisson_arrivals(lambda t: 400.0, 12.0, seed=3)
+    runs = []
+    for _ in range(2):
+        sys_ = _hetero_system(make_router(policy, **kw))
+        runs.append(sys_.run(arr, until=14.0))
+    assert runs[0]["p99"] == runs[1]["p99"]
+    assert runs[0]["completed"] == runs[1]["completed"]
+    for name in ("baseline", "distilled"):
+        assert runs[0]["pools"][name]["completed"] == runs[1]["pools"][name]["completed"]
+    assert runs[0]["completed"] > 0
+
+
+@pytest.mark.parametrize("policy", sorted(ROUTERS))
+def test_request_conservation(policy):
+    kw = {"seed": 5} if policy == "power_of_two" else {}
+    sys_ = _hetero_system(
+        make_router(policy, **kw),
+        tiers={"tier0": TierPolicy(300, 30), "tier1": TierPolicy(300, 30)},
+    )
+    arr = poisson_arrivals(SPIKE, 30.0, seed=4)
+    res = sys_.run(arr, until=30.0)
+    assert res["arrived"] == len(arr)
+    assert res["arrived"] == res["completed"] + res["rejected"] + res["in_queue"]
+    assert res["in_queue"] == 0  # queues fully drain once traffic stops
+    # per-pool stage completions account for every admitted request
+    assert sum(p["completed"] for p in res["pools"].values()) == res["completed"]
+
+
+def test_slo_aware_router_prefers_quality_for_priority_traffic():
+    sys_ = _hetero_system(
+        make_router("slo_aware", slo_p99_s=0.5, quality_order=("baseline", "distilled")))
+    arr = poisson_arrivals(lambda t: 50.0, 10.0, seed=6, priority_frac=0.2)
+    res = sys_.run(arr, until=12.0)
+    n_priority = sum(r.priority for r in arr)
+    # light load: every pool meets the SLO, so head traffic lands on baseline
+    assert res["pools"]["baseline"]["completed"] >= n_priority > 0
+    assert res["pools"]["distilled"]["completed"] > 0  # tail goes to the cheap pool
+
+
+def test_unknown_router_raises():
+    with pytest.raises(KeyError):
+        make_router("round_robin_nope")
+
+
+# ---------------------------------------------------------------------------
+# per-pool autoscaling under a shared capacity budget
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_budget_grant_and_release():
+    b = CapacityBudget(total=4)
+    assert b.acquire(3) == 3
+    assert b.acquire(3) == 1  # clamped to what's left
+    assert b.available == 0
+    b.release(2)
+    assert b.acquire(5) == 2
+
+
+def test_pool_scaling_never_exceeds_shared_budget():
+    budget_total = 6
+    pools = {
+        "baseline": PoolSpec(_spec("baseline", 0.02, 1e-3),
+                             PoolConfig(n_replicas=1, max_batch=16)),
+        "distilled": PoolSpec(_spec("distilled", 0.01, 5e-4),
+                              PoolConfig(n_replicas=1, max_batch=16)),
+    }
+    sys_ = ServingSystem(pools, make_router("least_loaded"),
+                         capacity=budget_total, slo_p99_s=0.2)
+    arr = poisson_arrivals(SPIKE, 60.0, seed=8)
+    res = sys_.run(arr, until=60.0)
+    per_pool = [res["pools"][n]["trace"]["replicas"] for n in pools]
+    # at every scale tick the fleet total stays within the budget
+    for totals in zip(*per_pool):
+        assert sum(totals) <= budget_total
+    assert max(res["trace"]["replicas"]) <= budget_total
+    assert max(res["trace"]["replicas"]) > 2  # budget was actually contended
+
+
+def test_budget_too_small_for_initial_replicas():
+    pools = {
+        "a": PoolSpec(_spec("a"), PoolConfig(n_replicas=2)),
+        "b": PoolSpec(_spec("b"), PoolConfig(n_replicas=2)),
+    }
+    with pytest.raises(ValueError):
+        ServingSystem(pools, capacity=3)
+
+
+def test_warm_pool_faster_than_cold():
+    sc = AutoScaler(ScalerConfig(warm_pool_size=1))
+    assert sc.take_start_delay(0.2, 5.0) == 0.2  # first from warm pool
+    assert sc.take_start_delay(0.2, 5.0) == 5.0  # pool exhausted -> cold
+
+
+# ---------------------------------------------------------------------------
+# cascade inference (RecPipe-style two-stage)
+# ---------------------------------------------------------------------------
+
+
+def _cascade_system(candidates=256, rerank_k=16, **kw):
+    pools = {
+        "baseline": PoolSpec(_spec("baseline", 0.02, 1e-3),
+                             PoolConfig(n_replicas=2, max_batch=4, priority_bypass=False)),
+        "distilled": PoolSpec(_spec("distilled", 0.004, 5e-5),
+                              PoolConfig(n_replicas=2, max_batch=4, priority_bypass=False)),
+    }
+    return ServingSystem(
+        pools, cascade=CascadeConfig("distilled", "baseline",
+                                     candidates=candidates, rerank_k=rerank_k), **kw)
+
+
+def test_cascade_latency_decomposition():
+    # generous SLO so the adaptive limiter never sheds — every arrival
+    # must traverse both stages for the decomposition to be checkable
+    sys_ = _cascade_system(slo_p99_s=5.0)
+    arr = poisson_arrivals(lambda t: 40.0, 8.0, seed=9, priority_frac=0.0)
+    res = sys_.run(arr, until=12.0)
+    assert res["completed"] == len(arr)
+    for r in arr:
+        tl = r.timeline
+        stage1 = tl["s1_done"] - tl["s1_enqueue"]  # queue + service in pool 1
+        stage2 = tl["s2_done"] - tl["s2_enqueue"]  # queue + service in pool 2
+        e2e = tl["s2_done"] - r.t_arrive
+        # end-to-end latency decomposes exactly into the chained stages
+        assert e2e == pytest.approx(stage1 + stage2, abs=1e-12)
+        # each stage is queueing then service, in order
+        assert tl["s1_enqueue"] <= tl["s1_start"] <= tl["s1_done"]
+        assert tl["s1_done"] == pytest.approx(tl["s2_enqueue"], abs=1e-12)
+        assert tl["s2_enqueue"] <= tl["s2_start"] <= tl["s2_done"]
+
+
+def test_cascade_stage_costs():
+    sys_ = _cascade_system(candidates=256, rerank_k=16, slo_p99_s=5.0)
+    arr = poisson_arrivals(lambda t: 30.0, 5.0, seed=10, priority_frac=0.0)
+    res = sys_.run(arr, until=10.0)
+    # the heavy pool saw rerank_k items per request, not the full set
+    items1 = res["pools"]["distilled"]["served_items"]
+    items2 = res["pools"]["baseline"]["served_items"]
+    assert items1 == 256 * len(arr)
+    assert items2 == 16 * len(arr)
+    assert res["completed"] == len(arr)
+
+
+def test_cascade_beats_baseline_only_ranking():
+    """The headline experiment in analytic form: under the SAME capacity
+    budget and SLO-protected admission, distilled-filter -> baseline-rerank
+    sustains more ranking traffic at better tail latency than scoring every
+    candidate on the baseline pool."""
+    candidates, k = 256, 16
+    rate = lambda t: 30.0 if t < 5 else (120.0 if t < 20 else 40.0)
+    tiers = lambda: {"tier0": TierPolicy(200, 50), "tier1": TierPolicy(200, 50)}
+
+    pools = {"baseline": PoolSpec(
+        _spec("baseline", 0.02, 1e-3),
+        PoolConfig(n_replicas=2, max_batch=4, priority_bypass=False))}
+    res_base = ServingSystem(
+        pools, make_router("least_loaded"),
+        tiers=tiers(), slo_p99_s=0.3, capacity=8,
+    ).run(poisson_arrivals(rate, 30.0, seed=12, cost=candidates, priority_frac=0.0),
+          until=40.0)
+    res_casc = _cascade_system(
+        candidates, k, tiers=tiers(), slo_p99_s=0.3, capacity=8,
+    ).run(poisson_arrivals(rate, 30.0, seed=12, priority_frac=0.0), until=40.0)
+    assert res_casc["throughput"] > res_base["throughput"]
+    assert res_casc["p99"] <= res_base["p99"]
+    assert res_casc["slo_attainment"] > res_base["slo_attainment"]
+
+
+def test_cascade_requires_configured_pools():
+    with pytest.raises(KeyError):
+        ServingSystem({"only": PoolSpec(_spec("only"))},
+                      cascade=CascadeConfig("distilled", "baseline"))
+
+
+# ---------------------------------------------------------------------------
+# rate limiter + latency model units
+# ---------------------------------------------------------------------------
 
 
 def test_rate_limiter_sheds_low_tier_first():
@@ -76,23 +312,14 @@ def test_token_bucket_rate():
     assert admitted_later == 5  # refilled to burst cap
 
 
-def test_warm_pool_faster_than_cold():
-    sc = AutoScaler(ScalerConfig(warm_pool_size=1))
-    assert sc.take_start_delay(0.2, 5.0) == 0.2  # first from warm pool
-    assert sc.take_start_delay(0.2, 5.0) == 5.0  # pool exhausted -> cold
-
-
-def test_simulation_deterministic():
-    arr = poisson_arrivals(SPIKE, 30.0, seed=7)
-    runs = []
-    for _ in range(2):
-        eng = ElasticEngine(_spec(), EngineConfig(n_replicas=2, autoscale=True))
-        runs.append(eng.run(arr, until=30.0))
-    assert runs[0]["p99"] == runs[1]["p99"]
-    assert runs[0]["completed"] == runs[1]["completed"]
-
-
 def test_latency_model_interpolation():
     lm = LatencyModel(np.array([1.0, 100.0]), np.array([0.01, 0.1]))
     assert abs(lm(1) - 0.01) < 1e-9
     assert 0.01 < lm(50) < 0.1
+
+
+def test_latency_model_extrapolates_beyond_calibration():
+    lm = LatencyModel(np.array([1.0, 100.0]), np.array([0.01, 0.1]))
+    slope = (0.1 - 0.01) / 99.0
+    assert lm(1000) == pytest.approx(0.1 + slope * 900.0)
+    assert lm(1000) > lm(100)  # big ranking batches are never free

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # optional test dep (see pyproject [test])
 from hypothesis import given, settings, strategies as st
 
 from repro.core.sparse_attention import (
