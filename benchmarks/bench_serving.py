@@ -1,22 +1,28 @@
 """Elastic-scheduling benchmark (paper §IV.B) on the multi-pool engine.
 Service times come from LatencyModels calibrated on the real jitted
-executables of the five Table-I variants, then three experiments run on
-the same discrete-event kernel:
+executables of the five Table-I variants (or analytic stand-ins under
+--smoke), then four experiments run on the same discrete-event kernel:
 
   1. single-pool: each variant alone under the spike, autoscaling on/off
      (the pre-refactor table, kept for continuity);
   2. heterogeneous: ALL FIVE variant pools live at once behind each router
-     policy (least-loaded / power-of-two / SLO-aware), pointwise traffic;
+     policy (least-loaded / power-of-two / SLO-aware / cost-model),
+     pointwise traffic;
   3. cascade: ranking traffic (512 candidates/query) served either by the
      baseline pool alone or as a RecPipe-style cascade — distilled pool
      scores all 512, baseline pool reranks the top-32 — under the SAME
-     shared capacity budget and SLO-protected admission.
+     shared capacity budget and SLO-protected admission;
+  4. mixed batching (cost-aware path): 90% pointwise + 10% ranking traffic
+     through the five-pool fleet, count-closed batches (max_batch only) vs
+     item-closed batches (max_batch_items), for all four router policies.
+
+`--smoke` skips calibration (analytic Table-I-shaped latency models) and
+shrinks every horizon so CI can run the whole file in seconds.
 """
 from __future__ import annotations
 
-import jax
+import argparse
 
-from benchmarks.common import VARIANTS, bench_world, serve_batch
 from repro.core.serving.cascade import CascadeConfig
 from repro.core.serving.engine import (
     ElasticEngine, EngineConfig, PoolSpec, ServingSystem, poisson_arrivals,
@@ -24,14 +30,43 @@ from repro.core.serving.engine import (
 from repro.core.serving.pool import PoolConfig
 from repro.core.serving.rate_limiter import TierPolicy
 from repro.core.serving.replica import LatencyModel, ReplicaSpec
-from repro.models.recsys import api
+from repro.core.serving.router import make_router
 
-SPIKE = lambda t: 150.0 if t < 10 else (1000.0 if t < 30 else 200.0)
+def spike(horizon: float):
+    """150 -> 1000 QPS spike -> 200, at the same relative times whatever the
+    horizon (absolute breakpoints would erase the spike under --smoke)."""
+    return lambda t: 150.0 if t < 0.22 * horizon else (
+        1000.0 if t < 0.67 * horizon else 200.0)
+
+
 CANDIDATES, RERANK_K = 512, 32
+
+# Table-I-shaped analytic service curves (base_s, per_item_s) for --smoke:
+# same relative ordering as the calibrated variants, no training required.
+ANALYTIC = {
+    "baseline": (0.020, 1.0e-3),
+    "quantized": (0.015, 7.5e-4),
+    "pruned": (0.012, 6.0e-4),
+    "pruned_quantized": (0.009, 4.5e-4),
+    "distilled": (0.004, 1.5e-4),
+}
+
+ROUTER_CFGS = (
+    ("least_loaded", {}),
+    ("power_of_two", {"seed": 0}),
+    ("slo_aware", {"slo_p99_s": 0.15,
+                   "quality_order": ("baseline", "quantized", "pruned")}),
+    ("cost_model", {}),
+)
 
 
 def calibrated_specs() -> dict:
     """ReplicaSpec per Table-I variant, timed on the real executables."""
+    import jax
+
+    from benchmarks.common import VARIANTS, bench_world, serve_batch
+    from repro.models.recsys import api
+
     w = bench_world()
     cfg, world, rules, ladder = w["cfg"], w["world"], w["rules"], w["ladder"]
     fixed = {b: serve_batch(cfg, world, b) for b in (1, 8, 32, 128, 512)}
@@ -48,8 +83,16 @@ def calibrated_specs() -> dict:
     return specs
 
 
-def single_pool_rows(specs) -> list:
-    arrivals_for = lambda: poisson_arrivals(SPIKE, 45.0, seed=0)
+def analytic_specs() -> dict:
+    return {
+        name: ReplicaSpec(name, LatencyModel.analytic(base, per),
+                          cold_start_s=5.0, warm_start_s=0.2)
+        for name, (base, per) in ANALYTIC.items()
+    }
+
+
+def single_pool_rows(specs, horizon=45.0) -> list:
+    arrivals_for = lambda: poisson_arrivals(spike(horizon), horizon, seed=0)
     rows = []
     for name, spec in specs.items():
         for autoscale in (False, True):
@@ -59,7 +102,7 @@ def single_pool_rows(specs) -> list:
                              max_batch=64),
                 tiers={"tier0": TierPolicy(1500, 150), "tier1": TierPolicy(1500, 150)},
             )
-            res = eng.run(arrivals_for(), until=45.0)
+            res = eng.run(arrivals_for(), until=horizon)
             rows.append({
                 "experiment": "single_pool", "variant": name, "autoscale": autoscale,
                 "p50_ms": res["p50"] * 1e3, "p99_ms": res["p99"] * 1e3,
@@ -71,18 +114,10 @@ def single_pool_rows(specs) -> list:
     return rows
 
 
-def heterogeneous_rows(specs) -> list:
+def heterogeneous_rows(specs, horizon=45.0) -> list:
     """All five variant pools live simultaneously behind one router."""
-    from repro.core.serving.router import make_router
-
     rows = []
-    router_cfgs = [
-        ("least_loaded", {}),
-        ("power_of_two", {"seed": 0}),
-        ("slo_aware", {"slo_p99_s": 0.15,
-                       "quality_order": ("baseline", "quantized", "pruned")}),
-    ]
-    for policy, kw in router_cfgs:
+    for policy, kw in ROUTER_CFGS:
         pools = {
             name: PoolSpec(spec, PoolConfig(n_replicas=1, max_batch=64))
             for name, spec in specs.items()
@@ -92,8 +127,9 @@ def heterogeneous_rows(specs) -> list:
             tiers={"tier0": TierPolicy(1500, 150), "tier1": TierPolicy(1500, 150)},
             slo_p99_s=0.15, capacity=16,
         )
-        res = sys_.run(poisson_arrivals(SPIKE, 45.0, seed=0, priority_frac=0.05),
-                       until=45.0)
+        res = sys_.run(poisson_arrivals(spike(horizon), horizon, seed=0,
+                                        priority_frac=0.05),
+                       until=horizon)
         rows.append({
             "experiment": "heterogeneous", "router": policy,
             "p50_ms": res["p50"] * 1e3, "p99_ms": res["p99"] * 1e3,
@@ -104,7 +140,7 @@ def heterogeneous_rows(specs) -> list:
     return rows
 
 
-def cascade_rows(specs) -> list:
+def cascade_rows(specs, horizon=55.0) -> list:
     """Ranking traffic: baseline-only vs distilled-filter -> baseline-rerank,
     same capacity budget, same admission, same SLO. Each ranking request is
     already a full candidate-set batch, so pools serve one request per call
@@ -120,7 +156,9 @@ def cascade_rows(specs) -> list:
     budget = 8
     t_base = specs["baseline"].latency(CANDIDATES)  # s per ranking request
     cap_base = budget / t_base  # req/s of the baseline-only fleet
-    rate = lambda t: 0.4 * cap_base if not (10 <= t < 40) else 1.15 * cap_base
+    spike_window = (0.2 * horizon, 0.72 * horizon)  # relative, horizon-proof
+    rate = lambda t: (1.15 * cap_base
+                      if spike_window[0] <= t < spike_window[1] else 0.4 * cap_base)
     tiers = lambda: {"tier0": TierPolicy(1e9, 1e9), "tier1": TierPolicy(1e9, 1e9)}
     pcfg = lambda n: PoolConfig(n_replicas=n, max_batch=1, priority_bypass=False)
     rows = []
@@ -130,8 +168,8 @@ def cascade_rows(specs) -> list:
         tiers=tiers(), slo_p99_s=4 * t_base, capacity=budget,
     )
     res = base_sys.run(
-        poisson_arrivals(rate, 55.0, seed=0, cost=CANDIDATES, priority_frac=0.0),
-        until=55.0)
+        poisson_arrivals(rate, horizon, seed=0, cost=CANDIDATES, priority_frac=0.0),
+        until=horizon)
     rows.append({"experiment": "cascade", "mode": "baseline_only",
                  "p50_ms": res["p50"] * 1e3, "p99_ms": res["p99"] * 1e3,
                  "throughput": res["throughput"], "rejected": res["rejected"],
@@ -151,8 +189,8 @@ def cascade_rows(specs) -> list:
         tiers=tiers(), slo_p99_s=4 * t_base, capacity=budget,
     )
     res = casc_sys.run(
-        poisson_arrivals(rate, 55.0, seed=0, priority_frac=0.0),
-        until=55.0)
+        poisson_arrivals(rate, horizon, seed=0, priority_frac=0.0),
+        until=horizon)
     rows.append({"experiment": "cascade", "mode": "distilled_filter_baseline_rerank",
                  "p50_ms": res["p50"] * 1e3, "p99_ms": res["p99"] * 1e3,
                  "throughput": res["throughput"], "rejected": res["rejected"],
@@ -160,13 +198,61 @@ def cascade_rows(specs) -> list:
     return rows
 
 
-def run() -> list:
+def mixed_batching_rows(specs, horizon=40.0) -> list:
+    """Experiment 4 (cost-aware path): mixed pointwise + ranking traffic
+    through the heterogeneous five-pool fleet — batches closed by request
+    count alone vs by accumulated work items — for every router policy.
+    One 256-candidate ranking query in a count-closed batch stalls the
+    dozens of pointwise queries sharing it; the item budget keeps batch
+    service time bounded, so the tail drops at the same sustained rate."""
+    mix = ((1, 0.9), (256, 0.1))
+    rate = lambda t: 112.0 if t < 0.2 * horizon else (
+        280.0 if t < 0.65 * horizon else 140.0)
+    rows = []
+    for policy, kw in ROUTER_CFGS:
+        for batching, cap in (("count", None), ("items", 256)):
+            pools = {
+                name: PoolSpec(spec, PoolConfig(n_replicas=2, max_batch=64,
+                                                max_wait_s=0.02,
+                                                max_batch_items=cap))
+                for name, spec in specs.items()
+            }
+            sys_ = ServingSystem(
+                pools, make_router(policy, **kw),
+                tiers={"tier0": TierPolicy(1500, 300), "tier1": TierPolicy(1500, 300)},
+                slo_p99_s=0.15, capacity=16,
+            )
+            res = sys_.run(
+                poisson_arrivals(rate, horizon, seed=0, priority_frac=0.02,
+                                 cost_mix=mix),
+                until=horizon)
+            rows.append({
+                "experiment": "mixed_batching", "router": policy, "batching": batching,
+                "p50_ms": res["p50"] * 1e3, "p99_ms": res["p99"] * 1e3,
+                "throughput": res["throughput"], "rejected": res["rejected"],
+                "slo_attainment": res["slo_attainment"],
+            })
+    return rows
+
+
+def run(smoke: bool = False) -> list:
+    if smoke:
+        specs = analytic_specs()
+        return (single_pool_rows(specs, horizon=8.0)
+                + heterogeneous_rows(specs, horizon=8.0)
+                + cascade_rows(specs, horizon=15.0)
+                + mixed_batching_rows(specs, horizon=10.0))
     specs = calibrated_specs()
-    return single_pool_rows(specs) + heterogeneous_rows(specs) + cascade_rows(specs)
+    return (single_pool_rows(specs) + heterogeneous_rows(specs)
+            + cascade_rows(specs) + mixed_batching_rows(specs))
 
 
-def main():
-    rows = run()
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="analytic latency models + tiny horizons (CI guard)")
+    args = ap.parse_args(argv)
+    rows = run(smoke=args.smoke)
     print("# 1. each variant alone under a 150->1000 QPS spike")
     print("variant,autoscale,p50_ms,p99_ms,throughput,rejected,max_replicas,"
           "svc_ms_b1,svc_ms_b512")
@@ -200,6 +286,24 @@ def main():
               and casc["distilled_filter_baseline_rerank"]["p99_ms"]
               <= casc["baseline_only"]["p99_ms"])
     print(f"cascade_beats_baseline_only={better}")
+
+    print("\n# 4. mixed 90% pointwise / 10% ranking-256 traffic, five pools:"
+          " count-closed vs item-closed batches")
+    print("router,batching,p50_ms,p99_ms,throughput,rejected,slo_attainment")
+    mixed = {}
+    for r in rows:
+        if r["experiment"] != "mixed_batching":
+            continue
+        mixed[(r["router"], r["batching"])] = r
+        print(f"{r['router']},{r['batching']},{r['p50_ms']:.1f},{r['p99_ms']:.1f},"
+              f"{r['throughput']:.0f},{r['rejected']},{r['slo_attainment']:.3f}")
+    wins = all(
+        mixed[(p, "items")]["throughput"] > mixed[(p, "count")]["throughput"]
+        or (mixed[(p, "items")]["throughput"] >= 0.999 * mixed[(p, "count")]["throughput"]
+            and mixed[(p, "items")]["p99_ms"] < mixed[(p, "count")]["p99_ms"])
+        for p, _ in ROUTER_CFGS
+    )
+    print(f"item_batching_wins_or_ties_every_router={wins}")
     return rows
 
 

@@ -29,7 +29,8 @@ def main() -> None:
         "fig6": bench_fig6_accuracy.main,
         "fig7": bench_fig7_resources.main,
         "kernels": bench_kernels.main,
-        "serving": bench_serving.main,
+        # empty argv: don't let bench_serving's --smoke parser see --only
+        "serving": lambda: bench_serving.main([]),
         "roofline": roofline.main,
     }
     chosen = args.only.split(",") if args.only else list(benches)

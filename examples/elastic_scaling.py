@@ -2,8 +2,12 @@
 same traffic spike served by (a) a fixed single pool, (b) an autoscaled
 pool, (c) autoscaling + warm pool + priority bypass, then the refactor's
 new scenarios — (d) a heterogeneous baseline+distilled fleet behind each
-router policy, and (e) ranking traffic as a RecPipe-style cascade vs the
-baseline pool alone, under one shared capacity budget.
+router policy (including the recommended cost_model), (e) ranking traffic
+as a RecPipe-style cascade vs the baseline pool alone under one shared
+capacity budget, and the cost-aware serving path — (f) mixed pointwise +
+ranking traffic with count-closed vs item-closed batches, and (g) a
+per-pool cost-weighted rate limiter protecting the heavy pool while the
+cheap pool keeps absorbing tail traffic.
 
     PYTHONPATH=src python examples/elastic_scaling.py
 """
@@ -85,6 +89,60 @@ def ranking(mode):
     report(f"ranking 512-cand [{mode}]", sys_.run(arrivals, until=60.0))
 
 
+def mixed_batching(batching):
+    """90% pointwise + 10% ranking traffic: a 256-candidate query in a
+    count-closed batch stalls every pointwise query sharing it; the item
+    budget keeps per-batch service time bounded."""
+    cap = 256 if batching == "items" else None
+    pools = {
+        "baseline": PoolSpec(BASELINE(), PoolConfig(
+            n_replicas=2, max_batch=64, max_wait_s=0.02, max_batch_items=cap)),
+        "distilled": PoolSpec(DISTILLED(), PoolConfig(
+            n_replicas=2, max_batch=64, max_wait_s=0.02, max_batch_items=cap)),
+    }
+    sys_ = ServingSystem(
+        pools, make_router("cost_model"),
+        tiers={"tier0": TierPolicy(1500, 300), "tier1": TierPolicy(1500, 300)},
+        slo_p99_s=0.15, capacity=12,
+    )
+    arrivals = poisson_arrivals(lambda t: 250.0, 40.0, seed=0, priority_frac=0.02,
+                                cost_mix=((1, 0.9), (256, 0.1)))
+    report(f"mixed traffic [{batching}-closed batches]", sys_.run(arrivals, until=40.0))
+
+
+def per_pool_admission(protected):
+    """Overload the bulk-scoring pool with ranking traffic (the cost-model
+    router sends ranking there — its latency curve is flattest at large
+    batch): the pool's own cost-weighted limiter sheds work it cannot
+    serve inside the SLO, while the pointwise pool keeps serving every
+    request it is routed. Without the pool limiter the bulk queue grows
+    without bound and its stage p99 explodes."""
+    bulk_tiers = (
+        {"tier0": TierPolicy(6400, 2600), "tier1": TierPolicy(6400, 2600)}
+        if protected else None)
+    pools = {
+        "bulk": PoolSpec(
+            ReplicaSpec("bulk", LatencyModel.analytic(0.030, 2e-5),
+                        cold_start_s=5.0, warm_start_s=0.2),
+            PoolConfig(n_replicas=2, autoscale=False, max_batch=4,
+                       max_batch_items=512, priority_bypass=False),
+            tiers=bulk_tiers),
+        "point": PoolSpec(
+            ReplicaSpec("point", LatencyModel.analytic(0.002, 1e-3),
+                        cold_start_s=2.0, warm_start_s=0.2),
+            PoolConfig(n_replicas=2, autoscale=False)),
+    }
+    sys_ = ServingSystem(pools, make_router("cost_model"), slo_p99_s=0.25,
+                         adaptive_shedding=False)
+    arrivals = poisson_arrivals(lambda t: 250.0, 30.0, seed=0, priority_frac=0.0,
+                                cost_mix=((1, 0.7), (256, 0.3)))
+    label = "per-pool limiter" if protected else "fleet limiter only"
+    res = report(f"bulk-pool overload [{label}]", sys_.run(arrivals, until=30.0))
+    for name, p in res["pools"].items():
+        print(f"{'':38s} {name}: completed={p['completed']} shed={p['shed']} "
+              f"stage_p99={p['p99']*1e3:.0f}ms")
+
+
 def main():
     print("traffic: 120 QPS -> 1100 QPS spike -> 150 QPS; SLO p99 = 150ms")
     single_pool("fixed 2 replicas", autoscale=False, warm_pool=False, bypass=False)
@@ -95,9 +153,16 @@ def main():
     heterogeneous("least_loaded")
     heterogeneous("power_of_two", seed=0)
     heterogeneous("slo_aware", slo_p99_s=0.15, quality_order=("baseline", "distilled"))
+    heterogeneous("cost_model")
     print("\nranking traffic (512 candidates/query), capacity budget 8, SLO p99 = 300ms:")
     ranking("baseline_only")
     ranking("cascade")
+    print("\nmixed 90% pointwise / 10% ranking-256 traffic (cost_model router):")
+    mixed_batching("count")
+    mixed_batching("items")
+    print("\nper-pool cost-weighted admission under a ranking overload:")
+    per_pool_admission(protected=False)
+    per_pool_admission(protected=True)
 
 
 if __name__ == "__main__":

@@ -36,7 +36,10 @@ class CascadeDispatcher:
         """Route a fresh arrival into stage 1 with the full candidate load.
         The arrival is cloned (sharing its timeline dict, so the caller can
         still read per-stage stamps) — arrival lists are commonly reused
-        across A/B runs and must never come back with mutated cost/stage."""
+        across A/B runs and must never come back with mutated cost/stage.
+        Sharing is safe because stage prefixes never collide: a baseline
+        run stamps s0_* (Request.stamp keys by the request's own stage)
+        while cascade stages stamp s1_*/s2_*."""
         staged = dataclasses.replace(req, stage=1, cost=self.cfg.candidates)
         return staged, pools[self.cfg.stage1]
 

@@ -5,16 +5,19 @@ Post-refactor layering — the engine is an orchestrator, not a monolith:
     events.py    EventLoop        the discrete-event kernel
     replica.py   Replica/Spec     calibrated service times, start costs
     pool.py      ReplicaPool      per-variant batcher + AutoScaler + SLOMonitor
-    router.py    Router policies  least-loaded / power-of-two / SLO-aware
+    router.py    Router policies  least-loaded / power-of-two / SLO-aware /
+                                  cost-model (recommended)
     cascade.py   CascadeDispatcher  light-filter -> heavy-rerank chaining
     autoscaler.py CapacityBudget  fleet-wide replica cap shared by pools
     this file    ServingSystem    admission (rate limit) -> route -> pools
 
 ServingSystem runs any number of Table-I variant pools on one event loop:
-ARRIVAL -> admit (tiered rate limit) -> router (or cascade) picks the pool
--> pool batches and picks the replica -> BATCH_DONE records per-pool stage
-latency and, for cascades, chains the next stage -> SCALE_TICK drives every
-pool's autoscaler against the shared capacity budget.
+ARRIVAL -> admit (fleet-global tiered rate limit, then the target pool's
+own cost-weighted limiter if configured) -> router (or cascade) picks the
+pool -> pool batches by request count AND work items, picks the replica ->
+BATCH_DONE records per-pool stage latency and, for cascades, chains the
+next stage -> SCALE_TICK drives every pool's autoscaler against the shared
+capacity budget and every pool-local limiter against its own SLO signal.
 
 ElasticEngine remains as the single-pool convenience wrapper: the
 constructor/run surface is unchanged for existing callers (launchers,
@@ -27,7 +30,7 @@ drain). Numbers are not comparable with pre-refactor runs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -43,11 +46,14 @@ from repro.core.serving.router import LeastLoadedRouter, Router
 
 @dataclasses.dataclass
 class PoolSpec:
-    """Everything needed to bring up one variant pool."""
+    """Everything needed to bring up one variant pool. `tiers` gives the
+    pool its own cost-weighted rate limiter (sheds from the pool's own SLO
+    signal); None leaves admission to the fleet-global limiter alone."""
 
     spec: ReplicaSpec
     cfg: PoolConfig = dataclasses.field(default_factory=PoolConfig)
     scaler: Optional[ScalerConfig] = None
+    tiers: Optional[Dict[str, TierPolicy]] = None
 
 
 @dataclasses.dataclass
@@ -56,6 +62,7 @@ class EngineConfig:
 
     max_batch: int = 64
     max_wait_s: float = 0.005
+    max_batch_items: Optional[int] = None  # close batches by work items too
     slo_p99_s: float = 0.100
     scale_tick_s: float = 1.0
     n_replicas: int = 2
@@ -94,7 +101,7 @@ class ServingSystem:
                 name, ps.spec, ps.cfg, self.loop,
                 scaler_cfg=ps.scaler, budget=self.budget,
                 on_complete=self._stage_complete, slo_s=slo_p99_s,
-                picker=self.router.select_replica,
+                picker=self.router.select_replica, tiers=ps.tiers,
             )
         self.cascade = CascadeDispatcher(cascade) if cascade is not None else None
         if self.cascade is not None:
@@ -103,6 +110,7 @@ class ServingSystem:
                     raise KeyError(f"cascade stage pool {stage!r} not configured")
         self._horizon = float("inf")
         self._completed_in_horizon = 0
+        self._ran = False
         self.trace: Dict[str, List[float]] = {
             "t": [], "p99": [], "qps": [], "replicas": [], "queue": []
         }
@@ -119,13 +127,16 @@ class ServingSystem:
             req, pool = self.cascade.admit(req, self.pools)
         else:
             pool = self.router.select_pool(req, list(self.pools.values()), now)
-        pool.submit(now, req)
+        if not pool.submit(now, req):  # pool-local (cost-weighted) shed
+            self.monitor.rejected += 1
 
     def _stage_complete(self, now: float, req: Request, pool: ReplicaPool) -> None:
         if self.cascade is not None:
             nxt = self.cascade.advance(req, self.pools)
             if nxt is not None:
-                nxt.submit(now, req)
+                # stage advancement bypasses pool admission: the cascade has
+                # already spent stage-1 work on this request
+                nxt.submit(now, req, force=True)
                 return
         self.monitor.record(now, now - req.t_arrive)
         if now <= self._horizon:
@@ -149,9 +160,19 @@ class ServingSystem:
 
     # ---- simulation ----
     def run(self, arrivals: List[Request], until: Optional[float] = None) -> Dict:
+        if self._ran:
+            raise RuntimeError(
+                "this ServingSystem has already run once; monitors, queues and "
+                "replica state accumulate across runs — build a fresh system"
+            )
+        self._ran = True
         for r in arrivals:
             self.loop.push(r.t_arrive, "arrive", r)
-        self._horizon = until or (arrivals[-1].t_arrive + 5.0 if arrivals else 5.0)
+        # `until is not None` (not truthiness): until=0.0 is a valid horizon
+        self._horizon = (
+            until if until is not None
+            else (arrivals[-1].t_arrive + 5.0 if arrivals else 5.0)
+        )
         self.loop.push(self.scale_tick_s, "scale")
         self.loop.run()
 
@@ -170,7 +191,9 @@ class ServingSystem:
             # only drains after traffic stops is not throughput the system
             # sustained (total completions stay in "completed")
             "completed_in_horizon": self._completed_in_horizon,
-            "throughput": self._completed_in_horizon / self._horizon,
+            "throughput": (
+                self._completed_in_horizon / self._horizon if self._horizon > 0 else 0.0
+            ),
             "final_replicas": sum(len(p.replicas) for p in self.pools.values()),
             "trace": self.trace,
             "pools": {name: p.summary() for name, p in self.pools.items()},
@@ -195,6 +218,7 @@ class ElasticEngine(ServingSystem):
         self.cfg = cfg
         pool_cfg = PoolConfig(
             max_batch=cfg.max_batch, max_wait_s=cfg.max_wait_s,
+            max_batch_items=cfg.max_batch_items,
             n_replicas=cfg.n_replicas, autoscale=cfg.autoscale,
             priority_bypass=cfg.priority_bypass,
         )
@@ -221,11 +245,19 @@ def poisson_arrivals(
     tiers: Tuple[str, ...] = ("tier0", "tier1"),
     priority_frac: float = 0.02,
     cost: int = 1,
+    cost_mix: Optional[Sequence[Tuple[int, float]]] = None,
 ) -> List[Request]:
     """Inhomogeneous Poisson traffic via thinning; rate_fn(t) in QPS.
     `cost` is the per-request work size (candidates to score) — 1 for
-    pointwise traffic, the candidate-set size for ranking traffic."""
+    pointwise traffic, the candidate-set size for ranking traffic.
+    `cost_mix` overrides `cost` with a weighted distribution of sizes,
+    e.g. ((1, 0.9), (512, 0.1)) for 90% pointwise / 10% ranking traffic —
+    deterministic under the same seed."""
     rng = np.random.default_rng(seed)
+    if cost_mix is not None:
+        mix_costs = np.asarray([c for c, _ in cost_mix], dtype=np.int64)
+        mix_w = np.asarray([w for _, w in cost_mix], dtype=np.float64)
+        mix_w = mix_w / mix_w.sum()
     peak = max(rate_fn(t) for t in np.linspace(0, horizon, 200)) + 1e-9
     out, t, rid = [], 0.0, 0
     while True:
@@ -238,7 +270,7 @@ def poisson_arrivals(
                     rid, t,
                     tier=str(rng.choice(tiers)),
                     priority=bool(rng.random() < priority_frac),
-                    cost=cost,
+                    cost=int(rng.choice(mix_costs, p=mix_w)) if cost_mix is not None else cost,
                 )
             )
             rid += 1

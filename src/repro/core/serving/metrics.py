@@ -43,10 +43,14 @@ class SLOMonitor:
         if not self.lat:
             return {"p50": 0.0, "p99": 0.0, "qps": 0.0}
         arr = np.array([l for _, l in self.lat])
+        # before the first window has elapsed the divisor is the time that
+        # actually passed — dividing by the full window understates qps and
+        # feeds the shed/scale loops a wrong early signal
+        elapsed = max(min(now, self.window_s), 1e-9)
         return {
             "p50": float(np.percentile(arr, 50)),
             "p99": float(np.percentile(arr, 99)),
-            "qps": len(arr) / self.window_s,
+            "qps": len(arr) / elapsed,
         }
 
     def attainment(self) -> float:

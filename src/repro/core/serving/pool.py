@@ -1,8 +1,18 @@
 """Replica pools: each pool owns the replicas of ONE Table-I variant,
-with its own batcher (max_batch / max_wait), its own AutoScaler and its
-own SLOMonitor. Pools plug into a shared EventLoop; the router decides
-which pool a request enters, the pool decides how it is batched and
-which replica serves it (via a pluggable replica picker).
+with its own batcher (max_batch / max_batch_items / max_wait), its own
+AutoScaler, its own SLOMonitor and (optionally) its own tiered rate
+limiter. Pools plug into a shared EventLoop; the router decides which
+pool a request enters, the pool decides whether it is admitted, how it
+is batched and which replica serves it (via a pluggable replica picker).
+
+Batching is cost-aware (DeepRecSys-style): a batch closes when it holds
+`max_batch` requests OR carries `max_batch_items` work items, whichever
+first — so one 512-candidate ranking query does not share a count budget
+with 64 pointwise queries. Admission is cost-aware too: a pool-local
+HybridRateLimiter draws `Request.cost` tokens per admit and sheds tiers
+from the pool's OWN SLO signal, so an overloaded heavy pool protects
+itself while cheap pools keep absorbing tail traffic (the fleet-global
+limiter in engine.py stays as the outer guard).
 
 Scaling is per-pool but capacity is fleet-wide: every grow request goes
 through the shared CapacityBudget, so heterogeneous pools compete for
@@ -17,6 +27,7 @@ from typing import Callable, Dict, List, Optional
 from repro.core.serving.autoscaler import AutoScaler, CapacityBudget, ScalerConfig
 from repro.core.serving.events import EventLoop
 from repro.core.serving.metrics import SLOMonitor
+from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
 from repro.core.serving.replica import Replica, ReplicaSpec
 
 
@@ -32,13 +43,18 @@ class Request:
     timeline: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def stamp(self, event: str, t: float) -> None:
-        self.timeline[f"s{max(self.stage, 1)}_{event}"] = t
+        # stage 0 stamps under its own "s0_" prefix so replaying one
+        # arrival list through a baseline run and then a cascade run
+        # (which shares the timeline dict, see cascade.admit) keeps both
+        # runs' stamps instead of the cascade overwriting stage-1 keys
+        self.timeline[f"s{self.stage}_{event}"] = t
 
 
 @dataclasses.dataclass
 class PoolConfig:
     max_batch: int = 64  # batch closes at this many requests...
-    max_wait_s: float = 0.005  # ...or when the oldest has waited this long
+    max_wait_s: float = 0.005  # ...or when the oldest has waited this long...
+    max_batch_items: Optional[int] = None  # ...or at this many work items
     n_replicas: int = 2
     autoscale: bool = True
     priority_bypass: bool = True
@@ -57,6 +73,7 @@ class ReplicaPool:
         on_complete: Optional[Callable[[float, Request, "ReplicaPool"], None]] = None,
         slo_s: Optional[float] = None,
         picker: Optional[Callable[["ReplicaPool", float], Replica]] = None,
+        tiers: Optional[Dict[str, TierPolicy]] = None,
     ):
         self.name = name
         self.spec = spec
@@ -67,6 +84,10 @@ class ReplicaPool:
         self.on_complete = on_complete or (lambda now, req, pool: None)
         self.monitor = SLOMonitor(slo_s=slo_s)
         self.picker = picker or (lambda pool, now: min(pool.replicas, key=lambda r: r.load(now)))
+        # pool-local admission: cost-weighted token draws, shed level driven
+        # by THIS pool's SLO signal (scale_tick) — None admits everything
+        self.limiter = HybridRateLimiter(tiers) if tiers is not None else None
+        self.shed = 0
 
         if budget is not None and budget.acquire(cfg.n_replicas) < cfg.n_replicas:
             raise ValueError(
@@ -99,19 +120,58 @@ class ReplicaPool:
         return self.monitor.percentiles(now)["p99"]
 
     # ---- admission / batching ----
-    def submit(self, now: float, req: Request) -> None:
+    def submit(self, now: float, req: Request, *, force: bool = False) -> bool:
+        """Admit (pool-local limiter, cost-weighted) and enqueue. Returns
+        False when this pool's limiter sheds the request. `force=True`
+        bypasses pool admission — cascade stage advancement uses it so work
+        already paid for upstream is never dropped mid-chain."""
+        if (
+            self.limiter is not None
+            and not force
+            and not self.limiter.admit(now, req.tier, cost=req.cost)
+        ):
+            self.shed += 1
+            return False
         req.t_enqueue = now
         req.stamp("enqueue", now)
         if self.cfg.priority_bypass and req.priority:
             self._dispatch(now, [req])
-            return
+            return True
         self.queue.append(req)
         self.queued_cost += req.cost
-        if len(self.queue) >= self.cfg.max_batch:
+        if self._batch_full():
             self._flush(now)
         elif self._batch_deadline is None:
-            self._batch_deadline = now + self.cfg.max_wait_s
-            self.loop.push(self._batch_deadline, f"batch_timeout:{self.name}")
+            self._arm(now + self.cfg.max_wait_s)
+        return True
+
+    def _batch_full(self) -> bool:
+        return len(self.queue) >= self.cfg.max_batch or (
+            self.cfg.max_batch_items is not None
+            and self.queued_cost >= self.cfg.max_batch_items
+        )
+
+    def _arm(self, deadline: float) -> None:
+        self._batch_deadline = deadline
+        self.loop.push(deadline, f"batch_timeout:{self.name}")
+
+    def _next_batch(self) -> List[Request]:
+        """Pop the next batch off the queue head: up to max_batch requests
+        AND (when item batching is on) max_batch_items work items. A single
+        request larger than the item budget still dispatches — alone."""
+        cap = self.cfg.max_batch_items
+        k = 0  # split index, then one slice-delete: O(queue) per batch
+        items = 0
+        while k < len(self.queue) and k < self.cfg.max_batch:
+            nxt = self.queue[k]
+            if k and cap is not None and items + nxt.cost > cap:
+                break
+            items += nxt.cost
+            k += 1
+        take = self.queue[:k]
+        del self.queue[:k]
+        self.queued_cost -= items
+        return take
 
     def _dispatch(self, now: float, take: List[Request]) -> None:
         rep = self.picker(self, now)
@@ -123,17 +183,14 @@ class ReplicaPool:
 
     def _flush(self, now: float) -> None:
         while self.queue:
-            take = self.queue[: self.cfg.max_batch]
-            del self.queue[: self.cfg.max_batch]
-            self.queued_cost -= sum(r.cost for r in take)
-            self._dispatch(now, take)
-            if len(self.queue) < self.cfg.max_batch:
+            self._dispatch(now, self._next_batch())
+            if not self._batch_full():
                 break
         if self.queue:
-            # partial remainder waits (at most max_wait) for more arrivals —
-            # re-arm the deadline so it always drains even if traffic stops
-            self._batch_deadline = now + self.cfg.max_wait_s
-            self.loop.push(self._batch_deadline, f"batch_timeout:{self.name}")
+            # partial remainder waits for more arrivals, but only until the
+            # OLDEST queued request has been waiting max_wait — re-arming
+            # from `now` would let it wait up to 2x max_wait across closes
+            self._arm(max(now, self.queue[0].t_enqueue + self.cfg.max_wait_s))
         else:
             self._batch_deadline = None
 
@@ -162,6 +219,10 @@ class ReplicaPool:
 
     def scale_tick(self, now: float, tick_s: float) -> None:
         stats = self.monitor.percentiles(now)
+        if self.limiter is not None and self.monitor.slo_s is not None:
+            # pool-local shedding reacts to the pool's OWN stage latency,
+            # not the fleet-wide end-to-end signal
+            self.limiter.adapt(stats["p99"], self.monitor.slo_s)
         if self.cfg.autoscale:
             util = self.utilisation(now, tick_s)
             want = self.scaler.desired(now, len(self.replicas), util)
@@ -196,6 +257,7 @@ class ReplicaPool:
         return {
             "variant": self.spec.variant,
             "completed": self.monitor.completed,
+            "shed": self.shed,
             "p50": tot["p50"],
             "p99": tot["p99"],
             "mean": tot["mean"],

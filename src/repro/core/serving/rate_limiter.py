@@ -1,9 +1,22 @@
 """Hybrid token-bucket rate limiter (paper §IV.B): per-tier buckets plus a
-load-adaptive shed of the lowest tiers when the SLO is threatened."""
+load-adaptive shed of the lowest tiers when the SLO is threatened.
+
+Token draws are cost-weighted: a 512-candidate ranking query drains 512
+tokens where a pointwise query drains 1, so a tier's budget bounds admitted
+WORK items, not request counts (DeepRecSys-style admission). Callers doing
+plain request-count limiting leave cost at its default of 1; callers
+admitting ranking traffic by work must size `burst` at least as large as
+the biggest single-request cost they want to ever admit.
+
+The fleet keeps one limiter at the front door (request-count draws) and
+each ReplicaPool may own another (cost-weighted draws, adapted from that
+pool's own SLOMonitor) — see pool.py.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+import re
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 
 @dataclasses.dataclass
@@ -12,13 +25,42 @@ class TierPolicy:
     burst: float
 
 
+def _tier_sort_key(name: str) -> Tuple[str, Union[int, float]]:
+    """Priority key: alpha prefix, then NUMERIC suffix — so "tier10" sorts
+    after "tier9" (lower priority), not between "tier1" and "tier2" as a
+    plain lexical sort would. Names without a numeric suffix keep lexical
+    order among themselves and rank above suffixed ones with equal prefix."""
+    m = re.match(r"(.*?)(\d+)$", name)
+    if m:
+        return (m.group(1), int(m.group(2)))
+    return (name, -1)
+
+
 class HybridRateLimiter:
-    def __init__(self, tiers: Dict[str, TierPolicy]):
+    """`shed_order`, when given, lists tiers in the order they are shed
+    (first element shed first); it must name every tier exactly once.
+    Otherwise tiers shed from the highest numeric suffix down ("tier11"
+    before "tier10" before ... "tier2" — not lexically)."""
+
+    def __init__(
+        self,
+        tiers: Dict[str, TierPolicy],
+        shed_order: Optional[Sequence[str]] = None,
+    ):
         self.tiers = tiers
         self.tokens = {t: p.burst for t, p in tiers.items()}
         self.last = 0.0
         self.shed_level = 0  # 0 = admit all; k = shed k lowest tiers
-        self._order = sorted(tiers)  # lexical: tier0 < tier1 < ...
+        if shed_order is not None:
+            if sorted(shed_order) != sorted(tiers):
+                raise ValueError(
+                    f"shed_order must name every tier exactly once; "
+                    f"got {list(shed_order)!r} for tiers {sorted(tiers)!r}"
+                )
+            # _order stores best-first; shedding consumes from the end
+            self._order = list(reversed(list(shed_order)))
+        else:
+            self._order = sorted(tiers, key=_tier_sort_key)
 
     def _refill(self, now: float):
         dt = max(now - self.last, 0.0)
@@ -26,12 +68,12 @@ class HybridRateLimiter:
         for t, p in self.tiers.items():
             self.tokens[t] = min(p.burst, self.tokens[t] + dt * p.rate)
 
-    def admit(self, now: float, tier: str) -> bool:
+    def admit(self, now: float, tier: str, cost: float = 1.0) -> bool:
         self._refill(now)
         if self.shed_level and tier in self._order[-self.shed_level:]:
             return False
-        if self.tokens.get(tier, 0.0) >= 1.0:
-            self.tokens[tier] -= 1.0
+        if self.tokens.get(tier, 0.0) >= cost:
+            self.tokens[tier] -= cost
             return True
         return False
 

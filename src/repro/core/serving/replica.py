@@ -76,9 +76,14 @@ class Replica:
         self.in_flight = 0
         self.served = 0
 
+    def residual(self, now: float) -> float:
+        """Seconds of already-committed service left on this replica —
+        the pure backlog term, no tie-break fudge (cost-model routing)."""
+        return max(self.busy_until - now, 0.0)
+
     def load(self, now: float) -> float:
-        """Router signal: time until free."""
-        return max(self.busy_until - now, 0.0) + 0.001 * self.in_flight
+        """Router signal: time until free (+ small in-flight tie-break)."""
+        return self.residual(now) + 0.001 * self.in_flight
 
     def start_batch(self, now: float, items: int) -> Tuple[float, float]:
         """Queue one batch of `items` work units; returns (start, done)."""

@@ -6,7 +6,10 @@ the same trace through the same policy are bit-identical.
 
 DeepRecSys (arXiv 2001.02772) motivates the pool-level decision: with
 heterogeneous variants live at once, WHERE a query lands matters as much
-as how it is batched. To add a policy: subclass Router, implement
+as how it is batched. CostModelRouter makes that decision from the
+calibrated LatencyModels plus live queue state and is the recommended
+policy; SLOAwareRouter's p99-threshold heuristic is kept for quality-
+tiered head/tail splits. To add a policy: subclass Router, implement
 select_pool (and optionally select_replica), and register it in ROUTERS.
 """
 from __future__ import annotations
@@ -67,6 +70,34 @@ class PowerOfTwoRouter(Router):
         return reps[i] if reps[i].load(now) <= reps[j].load(now) else reps[j]
 
 
+class CostModelRouter(Router):
+    """Cost-model policy (the recommended default for heterogeneous
+    fleets): estimate each pool's completion time for THIS request from
+    its calibrated LatencyModel plus live queue state, take the cheapest.
+
+    The estimate charges two terms: (1) residual work already executing,
+    amortised over the pool's ready replicas — the whole pool drains its
+    committed work in parallel, so total backlog / n is the expected slot
+    wait; (2) the service time of the batch this request would join
+    (queued-but-unbatched items + its own cost) at the pool's calibrated
+    rate. Unlike SLOAwareRouter's p99-threshold heuristic this is
+    threshold-free and cost-sensitive: a 512-candidate ranking query
+    naturally prefers the pool whose latency curve is flattest at large
+    batch, while pointwise traffic spreads by live load. Deterministic —
+    no RNG, no thresholds to tune."""
+
+    name = "cost_model"
+
+    def select_pool(self, req, pools, now):
+        return min(pools, key=lambda p: self.estimate(p, req.cost, now))
+
+    @staticmethod
+    def estimate(pool: ReplicaPool, cost: int, now: float) -> float:
+        ready = [r for r in pool.replicas if r.ready_at <= now] or pool.replicas
+        slot_wait = sum(r.residual(now) for r in ready) / len(ready)
+        return slot_wait + pool.spec.latency(pool.queued_cost + cost)
+
+
 class SLOAwareRouter(Router):
     """Latency-aware policy for heterogeneous pools: among pools predicted
     to meet the SLO (and not currently breaching it), send head traffic
@@ -100,6 +131,7 @@ ROUTERS: Dict[str, type] = {
     LeastLoadedRouter.name: LeastLoadedRouter,
     PowerOfTwoRouter.name: PowerOfTwoRouter,
     SLOAwareRouter.name: SLOAwareRouter,
+    CostModelRouter.name: CostModelRouter,
 }
 
 

@@ -10,10 +10,11 @@ from repro.core.serving.engine import (
     ElasticEngine, EngineConfig, PoolSpec, Request, ServingSystem, poisson_arrivals,
 )
 from repro.core.serving.events import EventLoop
-from repro.core.serving.pool import PoolConfig
+from repro.core.serving.metrics import SLOMonitor
+from repro.core.serving.pool import PoolConfig, ReplicaPool
 from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
 from repro.core.serving.replica import LatencyModel, ReplicaSpec
-from repro.core.serving.router import ROUTERS, make_router
+from repro.core.serving.router import ROUTERS, Router, make_router
 
 
 def _spec(name="m", base=0.02, per=0.001):
@@ -323,3 +324,255 @@ def test_latency_model_extrapolates_beyond_calibration():
     slope = (0.1 - 0.01) / 99.0
     assert lm(1000) == pytest.approx(0.1 + slope * 900.0)
     assert lm(1000) > lm(100)  # big ranking batches are never free
+
+
+def test_shed_order_numeric_not_lexical():
+    """Regression: lexical sort put tier10 between tier1 and tier2, so the
+    "lowest tier" shed order was wrong past 10 tiers."""
+    rl = HybridRateLimiter({f"tier{i}": TierPolicy(100, 10) for i in range(12)})
+    rl.adapt(p99=1.0, slo=0.1)
+    rl.adapt(p99=1.0, slo=0.1)
+    assert rl.shed_level == 2
+    # numeric order: the two highest-numbered tiers shed first...
+    assert rl.admit(0.0, "tier11") is False
+    assert rl.admit(0.0, "tier10") is False
+    # ...while tier9 and tier2 stay admitted (lexical order would have shed
+    # tier9/tier8 here and kept tier10/tier11)
+    assert rl.admit(0.0, "tier9") is True
+    assert rl.admit(0.0, "tier2") is True
+
+
+def test_shed_order_explicit():
+    tiers = {t: TierPolicy(100, 10) for t in ("free", "paid", "batch")}
+    rl = HybridRateLimiter(tiers, shed_order=("batch", "free", "paid"))
+    rl.adapt(p99=1.0, slo=0.1)
+    assert rl.admit(0.0, "batch") is False
+    assert rl.admit(0.0, "free") is True
+    rl.adapt(p99=1.0, slo=0.1)
+    assert rl.admit(0.0, "free") is False
+    assert rl.admit(0.0, "paid") is True  # highest priority never shed
+
+
+def test_shed_order_must_cover_all_tiers():
+    with pytest.raises(ValueError):
+        HybridRateLimiter({"a": TierPolicy(1, 1), "b": TierPolicy(1, 1)},
+                          shed_order=("a",))
+
+
+def test_cost_weighted_token_draws():
+    rl = HybridRateLimiter({"tier0": TierPolicy(rate=1.0, burst=10.0)})
+    assert rl.admit(0.0, "tier0", cost=8) is True
+    assert rl.admit(0.0, "tier0", cost=8) is False  # only 2 tokens left
+    assert rl.admit(0.0, "tier0", cost=2) is True
+
+
+def test_qps_uses_elapsed_time_before_window_fills():
+    m = SLOMonitor(window_s=10.0)
+    m.record(1.0, 0.01)
+    m.record(2.0, 0.01)
+    # 2 completions in the first 2 seconds is 1 qps, not 2/window = 0.2
+    assert m.percentiles(2.0)["qps"] == pytest.approx(1.0)
+    m2 = SLOMonitor(window_s=10.0)
+    for i in range(20):
+        m2.record(11.0 + i * 0.1, 0.01)
+    assert m2.percentiles(13.0)["qps"] == pytest.approx(2.0)  # window again
+
+
+# ---------------------------------------------------------------------------
+# cost-aware serving path: item batching, per-pool admission, cost router
+# ---------------------------------------------------------------------------
+
+
+def _driven_pool(cfg, spec=None):
+    """A ReplicaPool driven directly off an EventLoop, with every dispatched
+    batch's per-request costs recorded."""
+    loop = EventLoop()
+    pool = ReplicaPool("p", spec or _spec("m", 0.005, 1e-4), cfg, loop)
+    batches = []
+    orig = pool._dispatch
+
+    def tap(now, take):
+        batches.append([r.cost for r in take])
+        orig(now, take)
+
+    pool._dispatch = tap
+    loop.on("arrive", lambda now, r: pool.submit(now, r))
+    return loop, pool, batches
+
+
+def test_item_batching_caps_batch_work():
+    cfg = PoolConfig(max_batch=8, max_batch_items=128, max_wait_s=0.005,
+                     n_replicas=2, autoscale=False, priority_bypass=False)
+    loop, pool, batches = _driven_pool(cfg)
+    costs = [1, 7, 64, 3, 130, 1, 64, 64, 2, 1]
+    reqs = [Request(i, 0.001 * i, "tier0", cost=costs[i % len(costs)])
+            for i in range(60)]
+    for r in reqs:
+        loop.push(r.t_arrive, "arrive", r)
+    loop.run()
+    assert sum(len(b) for b in batches) == len(reqs)  # nothing lost
+    for b in batches:
+        assert len(b) <= cfg.max_batch
+        # item budget holds for every multi-request batch; a single request
+        # larger than the budget still dispatches, alone
+        assert sum(b) <= cfg.max_batch_items or len(b) == 1
+    assert [130] in batches  # the oversized request went out by itself
+
+
+def test_count_fallback_still_closes_batches():
+    cfg = PoolConfig(max_batch=4, max_batch_items=10_000, max_wait_s=1.0,
+                     n_replicas=1, autoscale=False, priority_bypass=False)
+    loop, pool, batches = _driven_pool(cfg)
+    for i in range(8):
+        loop.push(0.001 * i, "arrive", Request(i, 0.001 * i, "tier0", cost=1))
+    loop.run()
+    # far below the item budget, the count cap alone closes both batches
+    assert [len(b) for b in batches] == [4, 4]
+
+
+def test_partial_remainder_deadline_from_oldest_enqueue():
+    """Regression: re-arming a partial remainder from `now` let its head
+    request wait up to 2x max_wait_s across successive batch closes."""
+    loop = EventLoop()
+    pool = ReplicaPool(
+        "p", _spec(), PoolConfig(max_batch=8, max_batch_items=4, max_wait_s=0.1,
+                                 n_replicas=1, autoscale=False), loop)
+    reqs = [Request(0, 0.0, "tier0", cost=3), Request(1, 0.04, "tier0", cost=2),
+            Request(2, 0.06, "tier0", cost=1)]
+    for r in reqs:
+        r.t_enqueue = r.t_arrive
+    pool.queue = list(reqs)
+    pool.queued_cost = 6
+    pool._flush(0.06)
+    # batch = [cost 3] (adding cost 2 would exceed the item budget of 4);
+    # the remainder's head enqueued at 0.04, so it must flush by 0.14
+    assert pool.queue == reqs[1:]
+    assert pool._batch_deadline == pytest.approx(0.14)  # not now + 0.1 = 0.16
+
+
+def test_until_zero_horizon_honored():
+    eng = ElasticEngine(_spec(), EngineConfig(n_replicas=1, autoscale=False))
+    arr = poisson_arrivals(lambda t: 50.0, 2.0, seed=14)
+    res = eng.run(arr, until=0.0)
+    # until=0.0 used to fall through `until or ...` to the arrivals-derived
+    # horizon; with a zero horizon nothing completes "in horizon"
+    assert res["completed_in_horizon"] == 0
+    assert res["throughput"] == 0.0
+    assert res["completed"] > 0  # the backlog still drains after the horizon
+
+
+def test_second_run_is_an_explicit_error():
+    eng = ElasticEngine(_spec(), EngineConfig(n_replicas=1, autoscale=False))
+    arr = poisson_arrivals(lambda t: 20.0, 1.0, seed=15)
+    eng.run(arr, until=2.0)
+    with pytest.raises(RuntimeError, match="already run"):
+        eng.run(arr, until=2.0)
+
+
+def test_stage_stamps_survive_ab_replay():
+    """Regression: stage-0 used to stamp under the s1_ prefix, so replaying
+    one arrival list through a baseline run and then a cascade run silently
+    overwrote the baseline stamps (cascade.admit shares the timeline)."""
+    arr = poisson_arrivals(lambda t: 30.0, 4.0, seed=16, priority_frac=0.0)
+    base = ServingSystem(
+        {"baseline": PoolSpec(_spec("baseline", 0.02, 1e-3),
+                              PoolConfig(n_replicas=2, priority_bypass=False))},
+        slo_p99_s=5.0)
+    base.run(arr, until=8.0)
+    s0_done = {r.rid: r.timeline["s0_done"] for r in arr}
+    casc = _cascade_system(slo_p99_s=5.0)
+    casc.run(arr, until=8.0)
+    for r in arr:
+        assert r.timeline["s0_done"] == s0_done[r.rid]  # baseline stamps intact
+        assert "s1_done" in r.timeline and "s2_done" in r.timeline
+
+
+class _SplitRouter(Router):
+    """Deterministic test router: ranking traffic to the heavy pool,
+    pointwise traffic to the cheap pool."""
+
+    name = "split_test"
+
+    def select_pool(self, req, pools, now):
+        by = {p.name: p for p in pools}
+        return by["heavy"] if req.cost > 1 else by["cheap"]
+
+
+def _two_pool_overload(heavy_tiers):
+    pools = {
+        "heavy": PoolSpec(
+            _spec("heavy", 0.02, 1e-3),
+            PoolConfig(n_replicas=2, autoscale=False, max_batch=4,
+                       max_batch_items=512, priority_bypass=False),
+            tiers=heavy_tiers),
+        "cheap": PoolSpec(
+            _spec("cheap", 0.004, 5e-5),
+            PoolConfig(n_replicas=2, autoscale=False)),
+    }
+    sys_ = ServingSystem(pools, _SplitRouter(), slo_p99_s=0.25,
+                         adaptive_shedding=False)
+    arr = poisson_arrivals(lambda t: 120.0, 20.0, seed=17, priority_frac=0.0,
+                           cost_mix=((1, 0.7), (256, 0.3)))
+    return sys_.run(arr, until=20.0)
+
+
+def test_per_pool_admission_protects_heavy_pool():
+    unprotected = _two_pool_overload(None)
+    protected = _two_pool_overload(
+        {"tier0": TierPolicy(rate=800.0, burst=400.0),
+         "tier1": TierPolicy(rate=800.0, burst=400.0)})
+    heavy_p, heavy_u = protected["pools"]["heavy"], unprotected["pools"]["heavy"]
+    # cost-weighted draws bound admitted WORK: the heavy pool sheds and its
+    # stage p99 recovers instead of growing with the unbounded backlog
+    assert heavy_p["shed"] > 0
+    assert heavy_p["p99"] < 0.5 * heavy_u["p99"]
+    # the cheap pool keeps absorbing its tail traffic, untouched
+    assert protected["pools"]["cheap"]["shed"] == 0
+    assert (protected["pools"]["cheap"]["completed"]
+            == unprotected["pools"]["cheap"]["completed"] > 0)
+    # pool-local sheds count as rejections: conservation still holds
+    assert protected["arrived"] == (protected["completed"]
+                                    + protected["rejected"]
+                                    + protected["in_queue"])
+
+
+def test_cost_model_router_is_cost_sensitive():
+    pools = {
+        "bulk": PoolSpec(_spec("bulk", 0.02, 1e-5), PoolConfig(n_replicas=1)),
+        "point": PoolSpec(_spec("point", 0.002, 1e-3), PoolConfig(n_replicas=1)),
+    }
+    sys_ = ServingSystem(pools, make_router("cost_model"))
+    plist = list(sys_.pools.values())
+    big = Request(0, 0.0, "tier0", cost=512)
+    small = Request(1, 0.0, "tier0", cost=1)
+    # the flat latency curve wins at scale, the cheap base wins pointwise
+    assert sys_.router.select_pool(big, plist, 0.0).name == "bulk"
+    assert sys_.router.select_pool(small, plist, 0.0).name == "point"
+
+
+def _mixed_run(max_batch_items):
+    pools = {
+        "baseline": PoolSpec(
+            _spec("baseline", 0.02, 1e-3),
+            PoolConfig(n_replicas=2, max_batch=64, max_batch_items=max_batch_items,
+                       autoscale=False, priority_bypass=False)),
+        "distilled": PoolSpec(
+            _spec("distilled", 0.004, 5e-5),
+            PoolConfig(n_replicas=2, max_batch=64, max_batch_items=max_batch_items,
+                       autoscale=False, priority_bypass=False)),
+    }
+    sys_ = ServingSystem(pools, make_router("cost_model"), slo_p99_s=0.3,
+                         adaptive_shedding=False)
+    arr = poisson_arrivals(lambda t: 250.0, 15.0, seed=18, priority_frac=0.0,
+                           cost_mix=((1, 0.9), (256, 0.1)))
+    return sys_.run(arr, until=15.0)
+
+
+def test_item_batching_improves_tail_on_mixed_traffic():
+    count_res = _mixed_run(None)
+    item_res = _mixed_run(256)
+    # a 512-candidate ranking query no longer rides in (and stalls) the same
+    # batch as dozens of pointwise queries: tail latency drops without
+    # giving up sustained throughput
+    assert item_res["p99"] < count_res["p99"]
+    assert item_res["completed_in_horizon"] >= count_res["completed_in_horizon"]
