@@ -14,7 +14,13 @@ executables of the five Table-I variants (or analytic stand-ins under
      shared capacity budget and SLO-protected admission;
   4. mixed batching (cost-aware path): 90% pointwise + 10% ranking traffic
      through the five-pool fleet, count-closed batches (max_batch only) vs
-     item-closed batches (max_batch_items), for all four router policies.
+     item-closed batches (max_batch_items), for all four router policies;
+  5. federation: the same fleet split into 3 cells with skewed sticky
+     traffic (60/25/15) at ~80% of fleet capacity — cross-cell spillover
+     off vs on. The hot cell is past its local capacity while the fleet
+     has headroom; spillover cuts fleet p99 under the cell-local overload
+     at equal-or-better fleet throughput, paying only the inter-cell RTT
+     per hop.
 
 `--smoke` skips calibration (analytic Table-I-shaped latency models) and
 shrinks every horizon so CI can run the whole file in seconds.
@@ -27,6 +33,7 @@ from repro.core.serving.cascade import CascadeConfig
 from repro.core.serving.engine import (
     ElasticEngine, EngineConfig, PoolSpec, ServingSystem, poisson_arrivals,
 )
+from repro.core.serving.federation import CellSpec, FederatedSystem, assign_homes
 from repro.core.serving.pool import PoolConfig
 from repro.core.serving.rate_limiter import TierPolicy
 from repro.core.serving.replica import LatencyModel, ReplicaSpec
@@ -235,16 +242,67 @@ def mixed_batching_rows(specs, horizon=40.0) -> list:
     return rows
 
 
+def federation_rows(specs, horizon=30.0) -> list:
+    """Experiment 5: one fleet split into 3 cells, sticky (home-cell)
+    routing with skewed per-cell traffic — 60% of homes on the hot cell vs
+    its 1/3 share of capacity — spillover off vs on. The fleet rate is
+    scaled to ~80% of the CALIBRATED fleet capacity so the hot cell is
+    overloaded (~1.4x its local capacity) while the fleet as a whole has
+    headroom: exactly the regime where cross-cell spillover must win."""
+    spec = specs["baseline"]
+    # Sustainable cell rate under timeout batching: batches close every
+    # max_wait w holding r*w requests, and R replicas keep up only while
+    # latency(r*w) <= R*w — so r_cell = (R*w - b1) / (m*w) at the
+    # calibrated base b1 and marginal per-item cost m. 80% of fleet
+    # capacity keeps the fleet healthy while the 60%-skewed hot cell runs
+    # ~1.4x its local share.
+    replicas, wait = 2, 0.02
+    b1 = spec.latency(1)
+    marginal = (spec.latency(32) - b1) / 31.0
+    r_cell = max((replicas * wait - b1) / (marginal * wait), 1.0)
+    r_cell = min(r_cell, 32 / wait * replicas)  # max_batch-bound regime
+    fleet_rate = 0.8 * 3 * r_cell
+    skew = {"cell0": 0.60, "cell1": 0.25, "cell2": 0.15}
+    rows = []
+    for spillover in (False, True):
+        cells = {
+            name: CellSpec(
+                pools={"baseline": PoolSpec(
+                    spec, PoolConfig(n_replicas=replicas, autoscale=False,
+                                     max_batch=32, max_wait_s=wait))},
+                slo_p99_s=0.15,
+            )
+            for name in skew
+        }
+        fed = FederatedSystem(cells, policy="sticky", spillover=spillover,
+                              rtt_s=0.005, slo_p99_s=0.15)
+        arr = poisson_arrivals(lambda t: fleet_rate, horizon, seed=0,
+                               priority_frac=0.0)
+        assign_homes(arr, skew, seed=1)
+        res = fed.run(arr, until=horizon)
+        rows.append({
+            "experiment": "federation", "spillover": spillover,
+            "p50_ms": res["p50"] * 1e3, "p99_ms": res["p99"] * 1e3,
+            "throughput": res["throughput"], "rejected": res["rejected"],
+            "spilled": res["spilled"],
+            "slo_attainment": res["slo_attainment"],
+            "cell_p99_ms": {n: c["p99"] * 1e3 for n, c in res["cells"].items()},
+        })
+    return rows
+
+
 def run(smoke: bool = False) -> list:
     if smoke:
         specs = analytic_specs()
         return (single_pool_rows(specs, horizon=8.0)
                 + heterogeneous_rows(specs, horizon=8.0)
                 + cascade_rows(specs, horizon=15.0)
-                + mixed_batching_rows(specs, horizon=10.0))
+                + mixed_batching_rows(specs, horizon=10.0)
+                + federation_rows(specs, horizon=12.0))
     specs = calibrated_specs()
     return (single_pool_rows(specs) + heterogeneous_rows(specs)
-            + cascade_rows(specs) + mixed_batching_rows(specs))
+            + cascade_rows(specs) + mixed_batching_rows(specs)
+            + federation_rows(specs))
 
 
 def main(argv=None):
@@ -304,6 +362,23 @@ def main(argv=None):
         for p, _ in ROUTER_CFGS
     )
     print(f"item_batching_wins_or_ties_every_router={wins}")
+
+    print("\n# 5. 3-cell federation, sticky homes skewed 60/25/15, ~80% fleet"
+          " load: cross-cell spillover off vs on (5ms inter-cell RTT)")
+    print("spillover,p50_ms,p99_ms,throughput,rejected,spilled,slo_attainment,"
+          "cell_p99_ms")
+    fed = {}
+    for r in rows:
+        if r["experiment"] != "federation":
+            continue
+        fed[r["spillover"]] = r
+        cell_p99 = " ".join(f"{n}:{p:.0f}" for n, p in r["cell_p99_ms"].items())
+        print(f"{r['spillover']},{r['p50_ms']:.1f},{r['p99_ms']:.1f},"
+              f"{r['throughput']:.0f},{r['rejected']},{r['spilled']},"
+              f"{r['slo_attainment']:.3f},{cell_p99}")
+    spill_wins = (fed[True]["p99_ms"] < fed[False]["p99_ms"]
+                  and fed[True]["throughput"] >= 0.999 * fed[False]["throughput"])
+    print(f"spillover_cuts_p99_at_equal_throughput={spill_wins}")
     return rows
 
 

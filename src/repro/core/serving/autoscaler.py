@@ -4,10 +4,17 @@ Post-refactor each ReplicaPool owns its own AutoScaler; a CapacityBudget
 shared across pools caps the fleet-wide replica count so one pool scaling
 up spends headroom the others can no longer claim (heterogeneous pools
 compete for the same accelerators).
+
+Budgets nest: a cell-local budget may point at a `parent` budget (the
+global fleet cap in a multi-cell federation — see serving/federation.py).
+A grant must then clear BOTH levels: a cell can never exceed its own
+budget, and the sum of all cells can never exceed the parent's, so cells
+stay independent until the global cap actually binds.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass
@@ -22,23 +29,34 @@ class ScalerConfig:
 
 @dataclasses.dataclass
 class CapacityBudget:
-    """Fleet-wide replica budget shared by every pool's autoscaler."""
+    """Replica budget shared by every pool's autoscaler. With a `parent`,
+    this is one cell's slice of a global cap: acquire() grants only what
+    both this budget AND the parent can cover."""
 
     total: int
     used: int = 0
+    parent: Optional["CapacityBudget"] = None
 
     def acquire(self, n: int) -> int:
         """Grant up to n replicas' worth of capacity; returns the grant."""
         grant = max(0, min(n, self.total - self.used))
+        if grant and self.parent is not None:
+            grant = self.parent.acquire(grant)
         self.used += grant
         return grant
 
     def release(self, n: int) -> None:
-        self.used = max(0, self.used - n)
+        freed = min(n, self.used)
+        self.used -= freed
+        if freed and self.parent is not None:
+            self.parent.release(freed)
 
     @property
     def available(self) -> int:
-        return self.total - self.used
+        mine = self.total - self.used
+        if self.parent is not None:
+            return min(mine, self.parent.available)
+        return mine
 
 
 class AutoScaler:

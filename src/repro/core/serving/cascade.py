@@ -5,12 +5,30 @@ heavy model therefore sees k items per query instead of the full set —
 latency and throughput scale with k while ranking quality is anchored by
 the strong reranker.
 
+Public API
+    CascadeConfig       stage pool names + candidates / rerank_k (ITEMS)
+    CascadeDispatcher.admit    redirect a fresh arrival into stage 1
+                               (clones the request; timeline dict shared)
+    CascadeDispatcher.advance  on stage completion, mutate the request
+                               into its next stage and return the next
+                               pool (None = cascade finished)
+
 The dispatcher owns no clock and no queue: it redirects a request's entry
 pool at admission and, when a stage's batch completes, mutates the request
 into its next stage and resubmits it to the next pool on the same event
 loop. End-to-end latency is then exactly stage-1 (queue + service) plus
 stage-2 (queue + service), which the tests assert from the per-stage
-timeline stamps.
+timeline stamps (`s1_*`, `s2_*` — stage 0 stamps under `s0_*`, so one
+arrival list replays cleanly through baseline AND cascade runs).
+
+Invariants: stage advancement uses `submit(force=True)` — work already
+paid for upstream is never shed mid-chain; each stage stamps enqueue <=
+start <= done in order. In a multi-cell federation a cascade stays within
+its home cell, with one exception: the engine's `spill_stage` hook may
+hand the rerank stage to a remote cell's same-named pool when the home
+rerank pool is past its SLO headroom (the request then pays the
+inter-cell RTT between `s1_done` and `s2_enqueue` — stamps survive the
+hop because the stage prefix, not the cell, keys them).
 """
 from __future__ import annotations
 

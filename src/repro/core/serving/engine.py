@@ -10,6 +10,13 @@ Post-refactor layering — the engine is an orchestrator, not a monolith:
     cascade.py   CascadeDispatcher  light-filter -> heavy-rerank chaining
     autoscaler.py CapacityBudget  fleet-wide replica cap shared by pools
     this file    ServingSystem    admission (rate limit) -> route -> pools
+    federation.py Cell/FederatedSystem  cells (one system each) on one
+                                  shared loop, cross-cell spillover
+
+A ServingSystem normally owns its EventLoop and handles "arrive"/"scale"
+events; pass `loop`/`event_ns` to embed it as one cell of a federation
+instead — events are namespaced ("arrive:<cell>") and the federation
+drives admission through try_submit()/inject() and start().
 
 ServingSystem runs any number of Table-I variant pools on one event loop:
 ARRIVAL -> admit (fleet-global tiered rate limit, then the target pool's
@@ -79,11 +86,17 @@ class ServingSystem:
         tiers: Optional[Dict[str, TierPolicy]] = None,
         slo_p99_s: float = 0.100,
         scale_tick_s: float = 1.0,
-        capacity: Optional[int] = None,
+        capacity: Optional[Union[int, CapacityBudget]] = None,
         cascade: Optional[CascadeConfig] = None,
         adaptive_shedding: bool = True,
+        loop: Optional[EventLoop] = None,
+        event_ns: str = "",
     ):
-        self.loop = EventLoop()
+        # `loop`/`event_ns` let a federation embed several systems (cells)
+        # on ONE shared clock: each system's events — and its pools' — are
+        # suffixed with the namespace so same-named pools never collide.
+        self.loop = loop if loop is not None else EventLoop()
+        self.event_ns = event_ns
         self.router = router or LeastLoadedRouter()
         self.slo_p99_s = slo_p99_s
         self.scale_tick_s = scale_tick_s
@@ -91,7 +104,10 @@ class ServingSystem:
         self.limiter = HybridRateLimiter(
             tiers or {"tier0": TierPolicy(1e9, 1e9), "tier1": TierPolicy(1e9, 1e9)}
         )
-        self.budget = CapacityBudget(capacity) if capacity is not None else None
+        if isinstance(capacity, CapacityBudget):
+            self.budget: Optional[CapacityBudget] = capacity
+        else:
+            self.budget = CapacityBudget(capacity) if capacity is not None else None
         self.monitor = SLOMonitor(slo_s=slo_p99_s)  # end-to-end latencies
         self.pools: Dict[str, ReplicaPool] = {}
         for name, ps in pools.items():
@@ -102,38 +118,66 @@ class ServingSystem:
                 scaler_cfg=ps.scaler, budget=self.budget,
                 on_complete=self._stage_complete, slo_s=slo_p99_s,
                 picker=self.router.select_replica, tiers=ps.tiers,
+                event_key=f"{event_ns}/{name}" if event_ns else name,
             )
         self.cascade = CascadeDispatcher(cascade) if cascade is not None else None
         if self.cascade is not None:
             for stage in (cascade.stage1, cascade.stage2):
                 if stage not in self.pools:
                     raise KeyError(f"cascade stage pool {stage!r} not configured")
+        # federation hooks: on_complete fires after a request fully finishes
+        # here; spill_stage may claim a cascade's next stage for a remote
+        # cell (returns True when it took the request)
+        self.on_complete: Optional[Callable[[float, Request], None]] = None
+        self.spill_stage: Optional[Callable[[float, Request, str], bool]] = None
         self._horizon = float("inf")
         self._completed_in_horizon = 0
         self._ran = False
         self.trace: Dict[str, List[float]] = {
             "t": [], "p99": [], "qps": [], "replicas": [], "queue": []
         }
-        self.loop.on("arrive", self._handle_arrive)
-        self.loop.on("scale", self._handle_scale)
+        self.loop.on(self._event("arrive"), self._handle_arrive)
+        self.loop.on(self._event("scale"), self._handle_scale)
 
-    # ---- event handlers ----
-    def _handle_arrive(self, now: float, req: Request) -> None:
-        self.monitor.arrived += 1
+    def _event(self, kind: str) -> str:
+        return f"{kind}:{self.event_ns}" if self.event_ns else kind
+
+    # ---- admission path (reusable: the arrive handler and federation
+    # cells both go through it) ----
+    def try_submit(self, now: float, req: Request) -> bool:
+        """Admission WITHOUT arrival/rejection accounting: fleet limiter ->
+        cascade redirect or router -> pool-local (cost-weighted) admission.
+        Returns False when any admission layer sheds the request — the
+        caller decides whether that is a rejection or a cross-cell spill."""
         if not self.limiter.admit(now, req.tier):
-            self.monitor.rejected += 1
-            return
+            return False
         if self.cascade is not None:
             req, pool = self.cascade.admit(req, self.pools)
         else:
             pool = self.router.select_pool(req, list(self.pools.values()), now)
-        if not pool.submit(now, req):  # pool-local (cost-weighted) shed
-            self.monitor.rejected += 1
+        return pool.submit(now, req)
+
+    def inject(self, now: float, req: Request) -> bool:
+        """Full admission path with accounting: one arrival, admitted or
+        rejected. Standalone systems run every request through this."""
+        self.monitor.arrived += 1
+        if self.try_submit(now, req):
+            return True
+        self.monitor.rejected += 1
+        return False
+
+    # ---- event handlers ----
+    def _handle_arrive(self, now: float, req: Request) -> None:
+        self.inject(now, req)
 
     def _stage_complete(self, now: float, req: Request, pool: ReplicaPool) -> None:
         if self.cascade is not None:
             nxt = self.cascade.advance(req, self.pools)
             if nxt is not None:
+                # a cascade stays within its home cell unless the federation
+                # claims the next stage for a remote cell (rerank spillover)
+                if self.spill_stage is not None and self.spill_stage(now, req, nxt.name):
+                    return
                 # stage advancement bypasses pool admission: the cascade has
                 # already spent stage-1 work on this request
                 nxt.submit(now, req, force=True)
@@ -141,6 +185,8 @@ class ServingSystem:
         self.monitor.record(now, now - req.t_arrive)
         if now <= self._horizon:
             self._completed_in_horizon += 1
+        if self.on_complete is not None:
+            self.on_complete(now, req)
 
     def _handle_scale(self, now: float, _payload) -> None:
         if now > self._horizon:
@@ -156,26 +202,32 @@ class ServingSystem:
         self.trace["replicas"].append(sum(len(p.replicas) for p in self.pools.values()))
         self.trace["queue"].append(sum(len(p.queue) for p in self.pools.values()))
         if now + self.scale_tick_s <= self._horizon:
-            self.loop.push(now + self.scale_tick_s, "scale")
+            self.loop.push(now + self.scale_tick_s, self._event("scale"))
 
     # ---- simulation ----
+    def start(self, horizon: float) -> None:
+        """Set the reporting horizon and arm the scale tick — marking the
+        system as started, so a later run() raises. run() calls this; a
+        federation embedding this system on a shared loop calls it
+        directly (and later drains the loop itself)."""
+        self._ran = True
+        self._horizon = horizon
+        self.loop.push(self.scale_tick_s, self._event("scale"))
+
     def run(self, arrivals: List[Request], until: Optional[float] = None) -> Dict:
         if self._ran:
             raise RuntimeError(
                 "this ServingSystem has already run once; monitors, queues and "
                 "replica state accumulate across runs — build a fresh system"
             )
-        self._ran = True
         for r in arrivals:
-            self.loop.push(r.t_arrive, "arrive", r)
+            self.loop.push(r.t_arrive, self._event("arrive"), r)
         # `until is not None` (not truthiness): until=0.0 is a valid horizon
-        self._horizon = (
-            until if until is not None
-            else (arrivals[-1].t_arrive + 5.0 if arrivals else 5.0)
-        )
-        self.loop.push(self.scale_tick_s, "scale")
+        self.start(until if until is not None else default_horizon(arrivals))
         self.loop.run()
+        return self.summary()
 
+    def summary(self) -> Dict:
         totals = self.monitor.totals()
         in_queue = sum(len(p.queue) for p in self.pools.values())
         return {
@@ -235,6 +287,13 @@ class ElasticEngine(ServingSystem):
     def replicas(self):
         (pool,) = self.pools.values()
         return pool.replicas
+
+
+def default_horizon(arrivals: List[Request]) -> float:
+    """Reporting horizon when the caller gives none: last arrival plus a
+    drain margin. Shared by ServingSystem.run and FederatedSystem.run so
+    standalone and federated runs stay comparable."""
+    return arrivals[-1].t_arrive + 5.0 if arrivals else 5.0
 
 
 def poisson_arrivals(

@@ -1,11 +1,27 @@
 """Discrete-event kernel for the serving simulator.
 
+Public API
+    EventLoop.on(kind, handler)   register ONE handler per event kind
+                                  (a second registration raises)
+    EventLoop.push(t, kind, payload=None)   schedule an event
+    EventLoop.run()               drain the heap in time order
+    EventLoop.now                 the clock, in seconds
+
 The kernel is deliberately tiny: a time-ordered heap of (t, seq, kind,
 payload) events and a registry of handlers keyed by event kind. Pools,
-routers, the cascade dispatcher and the engine all plug into the same loop
-by registering handlers and pushing events — none of them own the clock.
-Event kinds are plain strings; components namespace theirs
-("batch_done:<pool>") so several pools can share one loop.
+routers, the cascade dispatcher, the engine and the multi-cell federation
+all plug into the same loop by registering handlers and pushing events —
+none of them own the clock. Event kinds are plain strings; components
+namespace theirs ("batch_done:<pool>", "arrive:<cell>") so several pools
+— and several cells' same-named pools — can share one loop.
+
+Invariants: events fire in (time, push-order) — FIFO within equal
+timestamps, so replaying the same pushes yields a bit-identical run
+(payloads are never compared; the monotone sequence number breaks ties).
+The loop has no horizon of its own: periodic handlers stop rescheduling
+themselves past theirs, while in-flight completions always run, so no
+admitted work is ever lost at the end of a simulation. All times are in
+seconds.
 """
 from __future__ import annotations
 

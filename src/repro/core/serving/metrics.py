@@ -3,16 +3,64 @@
 reporting and per-pool SLO attribution.
 
 Each ReplicaPool owns one SLOMonitor (stage latencies, measured from entry
-into that pool), and the engine owns one more for end-to-end latencies —
-so an SLO breach is attributable to the pool that caused it, not just
-observed at the front door.
+into that pool), the engine owns one for end-to-end latencies, and in a
+multi-cell federation each cell keeps its own on top of one fleet-wide
+monitor — so an SLO breach is attributable to the pool AND the cell that
+caused it, not just observed at the front door.
+
+Spill attribution (federation.py) is kept separate from rejection
+accounting: a request handed to a remote cell is `spilled_out` at its
+home cell, `spilled_in` at the serving cell, and counted exactly once in
+the fleet-wide conservation identity
+
+    injected == completed + rejected + in_flight
+
+where in_flight includes requests in inter-cell transit (paying RTT).
+`federated_rollup` sums per-cell summaries into fleet totals and checks
+that identity's spill legs (sum of spilled_out == sum of spilled_in once
+transit has drained).
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
+
+
+@dataclasses.dataclass
+class SpillStats:
+    """Per-cell cross-cell traffic accounting (federation.py). Cascade
+    stage spills are counted in BOTH the total and the cascade_* legs."""
+
+    spilled_out: int = 0  # requests this cell handed to a remote cell
+    spilled_in: int = 0  # requests this cell served for a remote home
+    cascade_out: int = 0  # subset of spilled_out that were rerank stages
+    cascade_in: int = 0  # subset of spilled_in that were rerank stages
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+def federated_rollup(cells: Dict[str, Dict]) -> Dict[str, int]:
+    """Sum per-cell summaries (each a ServingSystem.summary() dict plus a
+    "spill" sub-dict) into fleet-wide counters. Latency percentiles do NOT
+    roll up from per-cell percentiles — the federation keeps its own
+    fleet-wide SLOMonitor for those; this merges the conserved counts."""
+    out = {
+        "arrived": 0, "completed": 0, "rejected": 0, "in_queue": 0,
+        "completed_in_horizon": 0, "final_replicas": 0,
+        "spilled_out": 0, "spilled_in": 0, "cascade_out": 0, "cascade_in": 0,
+    }
+    for summary in cells.values():
+        for key in ("arrived", "completed", "rejected", "in_queue",
+                    "completed_in_horizon", "final_replicas"):
+            out[key] += summary[key]
+        spill = summary.get("spill", {})
+        for key in ("spilled_out", "spilled_in", "cascade_out", "cascade_in"):
+            out[key] += spill.get(key, 0)
+    return out
 
 
 class SLOMonitor:

@@ -5,6 +5,35 @@ limiter. Pools plug into a shared EventLoop; the router decides which
 pool a request enters, the pool decides whether it is admitted, how it
 is batched and which replica serves it (via a pluggable replica picker).
 
+Public API
+    Request                the unit of traffic; `cost` is work items
+                           carried (1 = pointwise, candidate-set size =
+                           ranking), `stage` the cascade stage, `home`
+                           the request's home cell (federation)
+    PoolConfig             batching + scaling knobs
+    ReplicaPool.submit     admission (pool-local limiter) + enqueue;
+                           `force=True` bypasses admission (cascade
+                           advancement, cross-cell spill arrivals)
+    ReplicaPool.predicted_latency / recent_p99 / queued_cost
+                           read-only router signals
+    ReplicaPool.scale_tick autoscaler + limiter adaptation, driven by
+                           the engine's per-tick `scale` event
+    ReplicaPool.summary    end-of-run per-pool stats
+
+Units: all times are SECONDS on the shared event-loop clock; `cost`,
+`max_batch_items` and `queued_cost` are work ITEMS; rates are per-second.
+
+Invariants the tests pin down:
+  - conservation: every submitted request is eventually dispatched and
+    completed exactly once (sheds happen only in submit, before enqueue);
+  - batching: a closed batch holds <= max_batch requests and (when item
+    batching is on) <= max_batch_items work items — except a single
+    oversized request, which dispatches alone;
+  - no request waits more than max_wait_s for a batch to close (a partial
+    remainder re-arms its deadline from the OLDEST queued enqueue time);
+  - determinism: given the same arrival list and picker, two runs produce
+    bit-identical timelines.
+
 Batching is cost-aware (DeepRecSys-style): a batch closes when it holds
 `max_batch` requests OR carries `max_batch_items` work items, whichever
 first — so one 512-candidate ranking query does not share a count budget
@@ -16,7 +45,13 @@ limiter in engine.py stays as the outer guard).
 
 Scaling is per-pool but capacity is fleet-wide: every grow request goes
 through the shared CapacityBudget, so heterogeneous pools compete for
-the same accelerators instead of each assuming it owns the cluster.
+the same accelerators instead of each assuming it owns the cluster. In a
+multi-cell federation the budget may itself be a cell-local slice of a
+global cap (see autoscaler.py).
+
+Several pools share one EventLoop by namespacing their events with
+`event_key` — cells pass "<cell>/<pool>" so two cells can each run a
+"baseline" pool on the federation's shared loop without colliding.
 """
 from __future__ import annotations
 
@@ -39,6 +74,7 @@ class Request:
     priority: bool = False
     cost: int = 1  # work items carried (e.g. candidates to score)
     stage: int = 0  # 0 = single-stage; 1, 2, ... = cascade stages
+    home: str = ""  # home cell in a multi-cell federation ("" = no affinity)
     t_enqueue: float = 0.0  # when it entered the current pool
     timeline: Dict[str, float] = dataclasses.field(default_factory=dict)
 
@@ -74,8 +110,13 @@ class ReplicaPool:
         slo_s: Optional[float] = None,
         picker: Optional[Callable[["ReplicaPool", float], Replica]] = None,
         tiers: Optional[Dict[str, TierPolicy]] = None,
+        event_key: Optional[str] = None,
     ):
         self.name = name
+        # events are keyed by event_key, not name: a federation runs several
+        # cells' same-named pools on one loop ("cell0/baseline" vs name
+        # "baseline", which routers and reports keep seeing)
+        self.event_key = event_key or name
         self.spec = spec
         self.cfg = cfg
         self.loop = loop
@@ -105,8 +146,8 @@ class ReplicaPool:
         self._batch_deadline: Optional[float] = None
         self.trace: Dict[str, List[float]] = {"t": [], "replicas": [], "queue": [], "p99": []}
 
-        loop.on(f"batch_timeout:{name}", self._handle_timeout)
-        loop.on(f"batch_done:{name}", self._handle_done)
+        loop.on(f"batch_timeout:{self.event_key}", self._handle_timeout)
+        loop.on(f"batch_done:{self.event_key}", self._handle_done)
 
     # ---- routing signals ----
     def predicted_latency(self, now: float, cost: int = 1) -> float:
@@ -153,7 +194,7 @@ class ReplicaPool:
 
     def _arm(self, deadline: float) -> None:
         self._batch_deadline = deadline
-        self.loop.push(deadline, f"batch_timeout:{self.name}")
+        self.loop.push(deadline, f"batch_timeout:{self.event_key}")
 
     def _next_batch(self) -> List[Request]:
         """Pop the next batch off the queue head: up to max_batch requests
@@ -179,7 +220,7 @@ class ReplicaPool:
         start, done = rep.start_batch(now, items)
         for r in take:
             r.stamp("start", start)
-        self.loop.push(done, f"batch_done:{self.name}", (rep.rid, take))
+        self.loop.push(done, f"batch_done:{self.event_key}", (rep.rid, take))
 
     def _flush(self, now: float) -> None:
         while self.queue:

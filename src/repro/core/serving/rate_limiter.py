@@ -1,6 +1,17 @@
 """Hybrid token-bucket rate limiter (paper §IV.B): per-tier buckets plus a
 load-adaptive shed of the lowest tiers when the SLO is threatened.
 
+Public API
+    TierPolicy(rate, burst)      tokens/s refill and bucket cap, in WORK
+                                 items (or requests when cost stays 1)
+    HybridRateLimiter.admit(now, tier, cost=1)   draw `cost` tokens;
+                                 False = shed (tier shed or bucket empty)
+    HybridRateLimiter.adapt(p99, slo)   load feedback: shed one more tier
+                                 on breach, recover when p99 < 0.6*slo
+    shed_order                   explicit shed sequence (first shed
+                                 first); default sheds by NUMERIC tier
+                                 suffix descending, not lexically
+
 Token draws are cost-weighted: a 512-candidate ranking query drains 512
 tokens where a pointwise query drains 1, so a tier's budget bounds admitted
 WORK items, not request counts (DeepRecSys-style admission). Callers doing
@@ -8,9 +19,17 @@ plain request-count limiting leave cost at its default of 1; callers
 admitting ranking traffic by work must size `burst` at least as large as
 the biggest single-request cost they want to ever admit.
 
+Invariants: admit() is deterministic given the call sequence (refill is
+computed from timestamps, never wall clock); the highest-priority tier is
+never shed (shed_level tops out at n_tiers - 1); unknown tier names are
+rejected rather than admitted free. Times in seconds, rates per second.
+
 The fleet keeps one limiter at the front door (request-count draws) and
 each ReplicaPool may own another (cost-weighted draws, adapted from that
-pool's own SLOMonitor) — see pool.py.
+pool's own SLOMonitor) — see pool.py. In a federation, a cell shedding
+at either level is what triggers reactive cross-cell spillover — the
+request is offered to a remote cell instead of being dropped
+(federation.py counts it spilled, not rejected).
 """
 from __future__ import annotations
 

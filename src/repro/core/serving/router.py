@@ -1,8 +1,21 @@
 """Pluggable routing policies: a Router picks the pool a request enters
 (at admission) and the replica a closed batch lands on (at dispatch).
-All policies are deterministic given their constructor arguments — the
-power-of-two sampler draws from its own seeded generator, so two runs of
-the same trace through the same policy are bit-identical.
+
+Public API
+    Router              base class: select_pool(req, pools, now) at
+                        admission, select_replica(pool, now) at dispatch
+    ROUTERS             name -> class registry (pool-level policies)
+    make_router         instantiate by name; accepts an alternate
+                        `registry` so higher routing layers (the
+                        cell-level policies in federation.py) reuse the
+                        same construction/error path
+
+Invariants: all policies are deterministic given their constructor
+arguments — the power-of-two sampler draws from its own seeded generator,
+so two runs of the same trace through the same policy are bit-identical.
+Policies only READ pool signals (`predicted_latency`, `recent_p99`,
+`queue`, `queued_cost`, `replicas`) — they never mutate pool state. All
+latency signals are in seconds; `cost` is in work items.
 
 DeepRecSys (arXiv 2001.02772) motivates the pool-level decision: with
 heterogeneous variants live at once, WHERE a query lands matters as much
@@ -11,6 +24,9 @@ calibrated LatencyModels plus live queue state and is the recommended
 policy; SLOAwareRouter's p99-threshold heuristic is kept for quality-
 tiered head/tail splits. To add a policy: subclass Router, implement
 select_pool (and optionally select_replica), and register it in ROUTERS.
+The same Router/registry shape repeats one level up: federation.py's
+CellPolicy picks the CELL a request enters, through this module's
+make_router against its own CELL_POLICIES registry.
 """
 from __future__ import annotations
 
@@ -135,8 +151,12 @@ ROUTERS: Dict[str, type] = {
 }
 
 
-def make_router(name: str, **kwargs) -> Router:
+def make_router(name: str, registry: Optional[Dict[str, type]] = None, **kwargs):
+    """Instantiate a policy by registry name. The default registry is the
+    pool-level ROUTERS; federation.py passes its CELL_POLICIES so cell-level
+    policies share the same construction and error path."""
+    registry = ROUTERS if registry is None else registry
     try:
-        return ROUTERS[name](**kwargs)
+        return registry[name](**kwargs)
     except KeyError:
-        raise KeyError(f"unknown router policy {name!r}; have {sorted(ROUTERS)}") from None
+        raise KeyError(f"unknown router policy {name!r}; have {sorted(registry)}") from None

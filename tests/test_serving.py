@@ -1,6 +1,7 @@
 """Serving-stack tests (paper §IV.B behaviours) against the multi-pool API:
 event kernel, replica pools, router policies, shared capacity budget,
-cascade inference, rate limiting and autoscaling."""
+cascade inference, rate limiting, autoscaling, and the multi-cell
+federation (cross-cell routing + spillover)."""
 import numpy as np
 import pytest
 
@@ -10,7 +11,10 @@ from repro.core.serving.engine import (
     ElasticEngine, EngineConfig, PoolSpec, Request, ServingSystem, poisson_arrivals,
 )
 from repro.core.serving.events import EventLoop
-from repro.core.serving.metrics import SLOMonitor
+from repro.core.serving.federation import (
+    CELL_POLICIES, CellSpec, FederatedSystem, assign_homes, make_cell_policy,
+)
+from repro.core.serving.metrics import SLOMonitor, federated_rollup
 from repro.core.serving.pool import PoolConfig, ReplicaPool
 from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
 from repro.core.serving.replica import LatencyModel, ReplicaSpec
@@ -576,3 +580,240 @@ def test_item_batching_improves_tail_on_mixed_traffic():
     # giving up sustained throughput
     assert item_res["p99"] < count_res["p99"]
     assert item_res["completed_in_horizon"] >= count_res["completed_in_horizon"]
+
+
+# ---------------------------------------------------------------------------
+# multi-cell federation (cross-cell routing + spillover)
+# ---------------------------------------------------------------------------
+
+
+def _cell_spec(n_replicas=2, slo=0.15, autoscale=False, capacity=None,
+               scaler=None, shedding=True):
+    return CellSpec(
+        pools={"baseline": PoolSpec(
+            _spec("baseline", 0.018, 8e-4),
+            PoolConfig(n_replicas=n_replicas, autoscale=autoscale,
+                       max_batch=32, max_wait_s=0.02),
+            scaler)},
+        capacity=capacity, slo_p99_s=slo, adaptive_shedding=shedding)
+
+
+def _skewed_arrivals(rate, horizon, weights, seed=0):
+    arr = poisson_arrivals(lambda t: float(rate), horizon, seed=seed,
+                           priority_frac=0.0)
+    return assign_homes(arr, weights, seed=seed + 1)
+
+
+SKEW3 = {"us": 0.6, "eu": 0.25, "ap": 0.15}
+
+
+@pytest.mark.parametrize("policy", sorted(CELL_POLICIES))
+def test_federation_conservation_with_spillover(policy):
+    """Fleet-wide conservation holds with spillover on: injected ==
+    completed + rejected + in_flight, in_flight (queues + inter-cell
+    transit) fully drains, and every spill-out has a matching spill-in."""
+    fed = FederatedSystem({n: _cell_spec() for n in SKEW3}, policy=policy,
+                          spillover=True, rtt_s=0.005, slo_p99_s=0.15)
+    arr = _skewed_arrivals(2400.0, 12.0, SKEW3, seed=20)
+    res = fed.run(arr, until=12.0)
+    assert res["injected"] == len(arr)
+    assert res["injected"] == res["completed"] + res["rejected"] + res["in_flight"]
+    assert res["in_flight"] == 0 and res["in_transit"] == 0
+    # spill legs balance once transit has drained
+    assert res["spilled"] == res["spilled_in"]
+    # per-cell attribution: arrived (incl. spilled-in) splits exactly into
+    # completions, rejections and hand-offs — spills are NOT rejections
+    for c in res["cells"].values():
+        assert c["arrived"] == (c["completed"] + c["rejected"]
+                                + c["spill"]["spilled_out"])
+    if policy == "sticky":  # skewed sticky traffic must actually spill
+        assert res["spilled"] > 0
+
+
+@pytest.mark.parametrize("n_cells", [1, 3])
+def test_federation_deterministic_replay(n_cells):
+    """One arrival list replays bit-identically through a 1-cell and an
+    N-cell topology (spillover, RTT transit and cell policies included)."""
+    weights = dict(list(SKEW3.items())[:n_cells])
+    runs = []
+    for _ in range(2):
+        fed = FederatedSystem({n: _cell_spec() for n in weights},
+                              policy="sticky", spillover=True,
+                              rtt_s=0.005, slo_p99_s=0.15)
+        arr = _skewed_arrivals(1500.0, 8.0, weights, seed=21)
+        runs.append(fed.run(arr, until=8.0))
+    assert runs[0]["p99"] == runs[1]["p99"]
+    assert runs[0]["completed"] == runs[1]["completed"]
+    assert runs[0]["spilled"] == runs[1]["spilled"]
+    for name in weights:
+        a, b = runs[0]["cells"][name], runs[1]["cells"][name]
+        assert a["completed"] == b["completed"]
+        assert a["spill"] == b["spill"]
+    assert runs[0]["completed"] > 0
+
+
+def test_single_cell_federation_matches_plain_system():
+    """A 1-cell federation is just the embedded ServingSystem: same
+    arrivals, same completions/latency stats as running it standalone."""
+    arr1 = poisson_arrivals(lambda t: 300.0, 8.0, seed=22, priority_frac=0.0)
+    arr2 = poisson_arrivals(lambda t: 300.0, 8.0, seed=22, priority_frac=0.0)
+    fed = FederatedSystem({"only": _cell_spec()}, policy="sticky",
+                          spillover=True, slo_p99_s=0.15)
+    plain = ServingSystem(
+        {"baseline": PoolSpec(_spec("baseline", 0.018, 8e-4),
+                              PoolConfig(n_replicas=2, autoscale=False,
+                                         max_batch=32, max_wait_s=0.02))},
+        slo_p99_s=0.15)
+    res_f = fed.run(arr1, until=8.0)
+    res_p = plain.run(arr2, until=8.0)
+    assert res_f["completed"] == res_p["completed"]
+    assert res_f["p99"] == res_p["p99"]
+    assert res_f["spilled"] == 0  # nowhere to spill
+
+
+def test_per_cell_budget_independence():
+    """Cell budgets are independent: the overloaded cell exhausts its OWN
+    CapacityBudget while the idle cell's replicas never move — one cell
+    scaling up cannot spend another cell's budget."""
+    cells = {
+        "hot": _cell_spec(autoscale=True, capacity=6, shedding=False,
+                          scaler=ScalerConfig(min_replicas=2, max_replicas=16)),
+        "cold": _cell_spec(autoscale=True, capacity=6, shedding=False,
+                           scaler=ScalerConfig(min_replicas=2, max_replicas=16)),
+    }
+    fed = FederatedSystem(cells, policy="sticky", spillover=False,
+                          slo_p99_s=0.15)
+    arr = _skewed_arrivals(4400.0, 20.0, {"hot": 0.95, "cold": 0.05}, seed=23)
+    res = fed.run(arr, until=20.0)
+    hot = res["cells"]["hot"]["pools"]["baseline"]["trace"]["replicas"]
+    cold = res["cells"]["cold"]["pools"]["baseline"]["trace"]["replicas"]
+    assert max(hot) == 6  # grew to its own budget...
+    assert max(cold) == 2  # ...without touching the idle cell's
+    assert all(h <= 6 for h in hot)
+
+
+def test_global_cap_bounds_sum_of_cell_budgets():
+    """With a global fleet cap, per-cell budgets become children of it:
+    each cell still respects its own ceiling AND the cells' total replica
+    count never exceeds the global cap at any scale tick."""
+    cells = {
+        "a": _cell_spec(autoscale=True, capacity=5, shedding=False,
+                        scaler=ScalerConfig(min_replicas=2, max_replicas=16)),
+        "b": _cell_spec(autoscale=True, capacity=5, shedding=False,
+                        scaler=ScalerConfig(min_replicas=2, max_replicas=16)),
+    }
+    fed = FederatedSystem(cells, policy="sticky", spillover=False,
+                          capacity=7, slo_p99_s=0.15)
+    arr = _skewed_arrivals(6000.0, 20.0, {"a": 0.5, "b": 0.5}, seed=24)
+    res = fed.run(arr, until=20.0)
+    tr_a = res["cells"]["a"]["pools"]["baseline"]["trace"]["replicas"]
+    tr_b = res["cells"]["b"]["pools"]["baseline"]["trace"]["replicas"]
+    for a, b in zip(tr_a, tr_b):
+        assert a <= 5 and b <= 5  # cell-local ceilings
+        assert a + b <= 7  # global cap binds the sum
+    assert max(a + b for a, b in zip(tr_a, tr_b)) == 7  # cap was contended
+
+
+def test_capacity_budget_parent_grants():
+    parent = CapacityBudget(total=5)
+    child_a = CapacityBudget(total=4, parent=parent)
+    child_b = CapacityBudget(total=4, parent=parent)
+    assert child_a.acquire(3) == 3  # within both budgets
+    assert child_b.acquire(4) == 2  # clamped by the parent's remaining 2
+    assert child_b.acquire(1) == 0
+    assert parent.available == 0
+    child_a.release(2)  # frees the parent too
+    assert child_b.acquire(2) == 2
+    assert child_b.used == 4 and parent.used == 5
+
+
+def test_spillover_rescues_skewed_overload():
+    """The experiment-5 claim in analytic form: under 60/25/15 skew at
+    ~80% fleet load, spillover cuts fleet p99 at equal-or-better fleet
+    throughput versus letting the hot cell shed alone."""
+    res = {}
+    for spillover in (False, True):
+        fed = FederatedSystem({n: _cell_spec() for n in SKEW3},
+                              policy="sticky", spillover=spillover,
+                              rtt_s=0.005, slo_p99_s=0.15)
+        arr = _skewed_arrivals(2400.0, 15.0, SKEW3, seed=25)
+        res[spillover] = fed.run(arr, until=15.0)
+    assert res[True]["p99"] < res[False]["p99"]
+    assert (res[True]["completed_in_horizon"]
+            >= res[False]["completed_in_horizon"])
+    assert res[True]["spilled"] > 0
+
+
+def _cascade_cell(n_rerank):
+    return CellSpec(
+        pools={
+            "distilled": PoolSpec(_spec("distilled", 0.004, 5e-5),
+                                  PoolConfig(n_replicas=4, autoscale=False,
+                                             max_batch=4, priority_bypass=False)),
+            "baseline": PoolSpec(_spec("baseline", 0.02, 1e-3),
+                                 PoolConfig(n_replicas=n_rerank, autoscale=False,
+                                            max_batch=4, priority_bypass=False)),
+        },
+        cascade=CascadeConfig("distilled", "baseline",
+                              candidates=256, rerank_k=16),
+        slo_p99_s=0.3)
+
+
+def test_spilled_cascade_keeps_stage_timeline():
+    """Regression: a cascade request whose rerank stage spills cross-cell
+    keeps its full stage timeline — s1_* stamped at the home cell, s2_*
+    at the remote cell after exactly the RTT, stages still in order."""
+    rtt = 0.005
+    fed = FederatedSystem({"hot": _cascade_cell(1), "cold": _cascade_cell(4)},
+                          policy="sticky", spillover=True, rtt_s=rtt,
+                          slo_p99_s=0.3)
+    arr = poisson_arrivals(lambda t: 120.0, 10.0, seed=26, priority_frac=0.0)
+    assign_homes(arr, {"hot": 0.9, "cold": 0.1}, seed=27)
+    res = fed.run(arr, until=10.0)
+    assert res["cascade_spilled"] > 0
+    assert res["injected"] == res["completed"] + res["rejected"] + res["in_flight"]
+    spilled = 0
+    for r in arr:
+        tl = r.timeline
+        if "s2_enqueue" not in tl:
+            continue
+        gap = tl["s2_enqueue"] - tl["s1_done"]
+        assert tl["s1_enqueue"] <= tl["s1_start"] <= tl["s1_done"]
+        assert tl["s2_enqueue"] <= tl["s2_start"] <= tl["s2_done"]
+        if gap > 1e-9:  # the spilled ones paid exactly the inter-cell RTT
+            assert gap == pytest.approx(rtt, abs=1e-9)
+            spilled += 1
+        else:  # home-cell stages chain back-to-back
+            assert gap == pytest.approx(0.0, abs=1e-9)
+    assert spilled == res["cascade_spilled"]
+
+
+def test_federated_rollup_sums_cells():
+    cells = {
+        "a": {"arrived": 10, "completed": 7, "rejected": 1, "in_queue": 0,
+              "completed_in_horizon": 7, "final_replicas": 2,
+              "spill": {"spilled_out": 2, "spilled_in": 0,
+                        "cascade_out": 1, "cascade_in": 0}},
+        "b": {"arrived": 5, "completed": 5, "rejected": 0, "in_queue": 0,
+              "completed_in_horizon": 4, "final_replicas": 3,
+              "spill": {"spilled_out": 0, "spilled_in": 2,
+                        "cascade_out": 0, "cascade_in": 1}},
+    }
+    roll = federated_rollup(cells)
+    assert roll["arrived"] == 15 and roll["completed"] == 12
+    assert roll["spilled_out"] == roll["spilled_in"] == 2
+    assert roll["cascade_out"] == roll["cascade_in"] == 1
+    assert roll["final_replicas"] == 5
+
+
+def test_unknown_cell_policy_raises():
+    with pytest.raises(KeyError):
+        make_cell_policy("round_robin_nope")
+
+
+def test_federation_second_run_raises():
+    fed = FederatedSystem({"only": _cell_spec()})
+    arr = poisson_arrivals(lambda t: 20.0, 1.0, seed=28)
+    fed.run(arr, until=2.0)
+    with pytest.raises(RuntimeError, match="already run"):
+        fed.run(arr, until=2.0)

@@ -1,0 +1,82 @@
+"""Docs drift guard (run by the CI docs job):
+
+  1. every intra-repo markdown link in README.md and docs/*.md resolves
+     to an existing file or directory;
+  2. every fenced ```python block in those files executes cleanly
+     (blocks within one file share a namespace, tutorial-style).
+
+Run it the same way CI does:
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+import traceback
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# inline links [text](target); images and reference-style links are out of
+# scope, as are bare URLs
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files() -> list:
+    files = []
+    readme = ROOT / "README.md"
+    if readme.exists():
+        files.append(readme)
+    files.extend(sorted((ROOT / "docs").glob("*.md")))
+    return files
+
+
+def check_links(path: pathlib.Path, text: str) -> list:
+    errors = []
+    for target in LINK.findall(text):
+        if target.startswith(EXTERNAL) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        # "/docs/x.md" is repo-root-absolute on GitHub, not filesystem-absolute
+        base = ROOT / rel.lstrip("/") if rel.startswith("/") else path.parent / rel
+        if not base.exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def run_blocks(path: pathlib.Path, text: str) -> list:
+    namespace: dict = {"__name__": f"docs_block[{path.name}]"}
+    for i, code in enumerate(FENCE.findall(text)):
+        try:
+            exec(compile(code, f"{path.name}[python block {i}]", "exec"), namespace)
+        except Exception:
+            return [
+                f"{path.relative_to(ROOT)}: python block {i} failed:\n"
+                + traceback.format_exc(limit=3)
+            ]
+    return []
+
+
+def main() -> int:
+    errors = []
+    for path in doc_files():
+        text = path.read_text()
+        errors.extend(check_links(path, text))
+        errors.extend(run_blocks(path, text))
+        n_blocks = len(FENCE.findall(text))
+        print(f"checked {path.relative_to(ROOT)}: "
+              f"{len(LINK.findall(text))} links, {n_blocks} python blocks")
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        return 1
+    print("docs OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
