@@ -21,6 +21,17 @@ executables of the five Table-I variants (or analytic stand-ins under
      has headroom; spillover cuts fleet p99 under the cell-local overload
      at equal-or-better fleet throughput, paying only the inter-cell RTT
      per hop.
+  6. caching: Zipf-skewed embedding-id traffic where every MISSED row
+     pays an embedding-fetch cost on top of the dense service time
+     (memory model, serving/cache.py). Part one sweeps cache capacity x
+     eviction policy (lru / lfu / s3fifo, plus a result-cache config on
+     repeat-query traffic) on one pool at an offered load past the
+     NO-cache fleet's capacity but inside the warm-cache fleet's — warm
+     p99 AND throughput are strictly better at equal offered load. Part
+     two splits the fleet into 2 cells with DISJOINT hot id sets:
+     spillover still rescues the skewed hot cell, but every spilled
+     request misses the remote cell's cache cold — the locality /
+     spillover tradeoff, visible as a fleet hit-rate drop.
 
 `--smoke` skips calibration (analytic Table-I-shaped latency models) and
 shrinks every horizon so CI can run the whole file in seconds.
@@ -28,16 +39,20 @@ shrinks every horizon so CI can run the whole file in seconds.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
+from repro.core.serving.cache import CacheConfig
 from repro.core.serving.cascade import CascadeConfig
 from repro.core.serving.engine import (
-    ElasticEngine, EngineConfig, PoolSpec, ServingSystem, poisson_arrivals,
+    ElasticEngine, EngineConfig, PoolSpec, ServingSystem, attach_zipf_ids,
+    poisson_arrivals,
 )
 from repro.core.serving.federation import CellSpec, FederatedSystem, assign_homes
 from repro.core.serving.pool import PoolConfig
 from repro.core.serving.rate_limiter import TierPolicy
-from repro.core.serving.replica import LatencyModel, ReplicaSpec
+from repro.core.serving.replica import LatencyModel, ReplicaSpec, sustainable_rate
 from repro.core.serving.router import make_router
+from repro.data.synthetic import zipf_id_stream
 
 def spike(horizon: float):
     """150 -> 1000 QPS spike -> 200, at the same relative times whatever the
@@ -250,16 +265,11 @@ def federation_rows(specs, horizon=30.0) -> list:
     overloaded (~1.4x its local capacity) while the fleet as a whole has
     headroom: exactly the regime where cross-cell spillover must win."""
     spec = specs["baseline"]
-    # Sustainable cell rate under timeout batching: batches close every
-    # max_wait w holding r*w requests, and R replicas keep up only while
-    # latency(r*w) <= R*w — so r_cell = (R*w - b1) / (m*w) at the
-    # calibrated base b1 and marginal per-item cost m. 80% of fleet
-    # capacity keeps the fleet healthy while the 60%-skewed hot cell runs
-    # ~1.4x its local share.
+    # Sustainable cell rate from the shared timeout-batching equilibrium
+    # (replica.sustainable_rate). 80% of fleet capacity keeps the fleet
+    # healthy while the 60%-skewed hot cell runs ~1.4x its local share.
     replicas, wait = 2, 0.02
-    b1 = spec.latency(1)
-    marginal = (spec.latency(32) - b1) / 31.0
-    r_cell = max((replicas * wait - b1) / (marginal * wait), 1.0)
+    r_cell = sustainable_rate(spec, replicas, wait)
     r_cell = min(r_cell, 32 / wait * replicas)  # max_batch-bound regime
     fleet_rate = 0.8 * 3 * r_cell
     skew = {"cell0": 0.60, "cell1": 0.25, "cell2": 0.15}
@@ -291,6 +301,107 @@ def federation_rows(specs, horizon=30.0) -> list:
     return rows
 
 
+CACHE_VOCAB, CACHE_IDS, CACHE_ALPHA = 20_000, 16, 1.1
+
+
+def _cached_spec(spec: ReplicaSpec) -> ReplicaSpec:
+    """The experiment-6 replica: the variant's calibrated dense curve plus
+    a per-missed-row embedding-fetch cost sized so a COLD batch spends 2x
+    its dense time fetching rows (the memory-bound regime the related
+    workload studies report) — self-calibrating on any host."""
+    fetch = 2.0 * spec.latency(32) / (32 * CACHE_IDS)
+    return dataclasses.replace(spec, embed_fetch_s=fetch)
+
+
+def caching_rows(specs, horizon=30.0) -> list:
+    """Experiment 6: hit-rate sweep x cache policy x cell spillover."""
+    spec = _cached_spec(specs["baseline"])
+    replicas, wait = 2, 0.02
+    pcfg = lambda: PoolConfig(n_replicas=replicas, autoscale=False,
+                              max_batch=32, max_wait_s=wait)
+    # operating point from the shared timeout-batching equilibrium
+    # (replica.sustainable_rate, the experiment-5 model plus the fetch
+    # term): no cache fetches every row; a warm cache at ~85% hit pays
+    # 15% of it — the offered load sits past the cold fleet's
+    # equilibrium but inside the warm fleet's.
+    r_cold = sustainable_rate(spec, replicas, wait, CACHE_IDS, hit_rate=0.0)
+    r_warm = sustainable_rate(spec, replicas, wait, CACHE_IDS, hit_rate=0.85)
+    rate = min(1.2 * r_cold, 0.9 * r_warm)
+    warm_stream = zipf_id_stream(8 * CACHE_VOCAB // 4, CACHE_VOCAB,
+                                 CACHE_ALPHA, seed=2)
+    rows = []
+
+    sweeps = [("none", None, None)]
+    for policy in ("lru", "lfu", "s3fifo"):
+        for cap in (CACHE_VOCAB // 32, CACHE_VOCAB // 8):
+            sweeps.append((policy, CacheConfig(cap, policy), None))
+    # repeat-query traffic: the result cache serves fresh repeats outright
+    sweeps.append(("lru+result",
+                   CacheConfig(CACHE_VOCAB // 8, "lru",
+                               result_capacity=4096, result_ttl_s=2.0),
+                   2000))
+    for label, cache, n_distinct in sweeps:
+        sys_ = ServingSystem(
+            {"baseline": PoolSpec(spec, pcfg(), cache=cache)},
+            slo_p99_s=0.15, adaptive_shedding=False)
+        if cache is not None:
+            sys_.pools["baseline"].embed_cache.warm(warm_stream)
+        arr = poisson_arrivals(lambda t: rate, horizon, seed=0,
+                               priority_frac=0.0)
+        attach_zipf_ids(arr, CACHE_VOCAB, CACHE_IDS, alpha=CACHE_ALPHA,
+                        seed=1, n_distinct=n_distinct)
+        res = sys_.run(arr, until=horizon)
+        rows.append({
+            "experiment": "caching", "mode": "single", "config": label,
+            "capacity_rows": cache.capacity_rows if cache else 0,
+            "p50_ms": res["p50"] * 1e3, "p99_ms": res["p99"] * 1e3,
+            "throughput": res["throughput"], "rejected": res["rejected"],
+            "hit_rate": res["cache"]["hit_rate"],
+            "result_hits": res["cache"]["result_hits"],
+        })
+
+    # part two: 2 cells with DISJOINT hot id sets (offset id ranges),
+    # sticky homes skewed 75/25 at ~75% of the warm fleet's equilibrium —
+    # the hot cell runs ~1.1x its local warm capacity and must spill, and
+    # every spilled request misses the remote cell's cache cold
+    fleet_rate = 0.75 * 2 * r_warm
+    cap = CACHE_VOCAB // 8
+    for spillover in (False, True):
+        cells = {
+            name: CellSpec(
+                pools={"baseline": PoolSpec(
+                    spec, pcfg(),
+                    cache=CacheConfig(cap, "lru"))},
+                slo_p99_s=0.15, adaptive_shedding=False)
+            for name in ("hot", "cold")
+        }
+        fed = FederatedSystem(cells, policy="sticky", spillover=spillover,
+                              rtt_s=0.005, slo_p99_s=0.15)
+        for i, name in enumerate(("hot", "cold")):
+            fed.cells[name].system.pools["baseline"].embed_cache.warm(
+                warm_stream + i * CACHE_VOCAB)
+        arr = poisson_arrivals(lambda t: fleet_rate, horizon, seed=3,
+                               priority_frac=0.0)
+        assign_homes(arr, {"hot": 0.75, "cold": 0.25}, seed=4)
+        # each home's ids live in its own range: spilled lookups are
+        # foreign to the serving cell's cache
+        for i, name in enumerate(("hot", "cold")):
+            mine = [r for r in arr if r.home == name]
+            attach_zipf_ids(mine, CACHE_VOCAB, CACHE_IDS, alpha=CACHE_ALPHA,
+                            seed=5 + i, offset=i * CACHE_VOCAB)
+        res = fed.run(arr, until=horizon)
+        roll = res["cells"]
+        rows.append({
+            "experiment": "caching", "mode": "cells", "config":
+                f"spillover={spillover}",
+            "p50_ms": res["p50"] * 1e3, "p99_ms": res["p99"] * 1e3,
+            "throughput": res["throughput"], "rejected": res["rejected"],
+            "spilled": res["spilled"],
+            "hit_rate": {n: c["cache"]["hit_rate"] for n, c in roll.items()},
+        })
+    return rows
+
+
 def run(smoke: bool = False) -> list:
     if smoke:
         specs = analytic_specs()
@@ -298,11 +409,12 @@ def run(smoke: bool = False) -> list:
                 + heterogeneous_rows(specs, horizon=8.0)
                 + cascade_rows(specs, horizon=15.0)
                 + mixed_batching_rows(specs, horizon=10.0)
-                + federation_rows(specs, horizon=12.0))
+                + federation_rows(specs, horizon=12.0)
+                + caching_rows(specs, horizon=10.0))
     specs = calibrated_specs()
     return (single_pool_rows(specs) + heterogeneous_rows(specs)
             + cascade_rows(specs) + mixed_batching_rows(specs)
-            + federation_rows(specs))
+            + federation_rows(specs) + caching_rows(specs))
 
 
 def main(argv=None):
@@ -379,6 +491,43 @@ def main(argv=None):
     spill_wins = (fed[True]["p99_ms"] < fed[False]["p99_ms"]
                   and fed[True]["throughput"] >= 0.999 * fed[False]["throughput"])
     print(f"spillover_cuts_p99_at_equal_throughput={spill_wins}")
+
+    print(f"\n# 6. hot-ID caching: Zipf({CACHE_ALPHA}) ids over {CACHE_VOCAB}"
+          f" rows, {CACHE_IDS} ids/query, offered load past the NO-cache"
+          " equilibrium (min(1.2x cold, 0.9x warm)): capacity x policy"
+          " sweep, then 2 cells w/ disjoint hot sets")
+    print("config,capacity_rows,p50_ms,p99_ms,throughput,rejected,hit_rate,"
+          "result_hits")
+    single = [r for r in rows
+              if r["experiment"] == "caching" and r["mode"] == "single"]
+    for r in single:
+        print(f"{r['config']},{r['capacity_rows']},{r['p50_ms']:.1f},"
+              f"{r['p99_ms']:.1f},{r['throughput']:.0f},{r['rejected']},"
+              f"{r['hit_rate']:.3f},{r['result_hits']}")
+    # like-for-like only: the lru+result row ran easier repeat-query
+    # traffic, so it must not decide the warm-vs-none claim (every
+    # capacity of every eviction policy competes)
+    (none_row,) = [r for r in single if r["config"] == "none"]
+    best_warm = min((r for r in single if r["config"] in ("lru", "lfu", "s3fifo")),
+                    key=lambda r: r["p99_ms"])
+    warm_wins = (best_warm["p99_ms"] < none_row["p99_ms"]
+                 and best_warm["throughput"] > none_row["throughput"])
+    print(f"warm_cache_beats_no_cache={warm_wins}")
+
+    print("\nspillover_config,p50_ms,p99_ms,throughput,rejected,spilled,"
+          "cell_hit_rates")
+    cells = {}
+    for r in rows:
+        if r["experiment"] != "caching" or r["mode"] != "cells":
+            continue
+        cells[r["config"]] = r
+        hr = " ".join(f"{n}:{h:.3f}" for n, h in r["hit_rate"].items())
+        print(f"{r['config']},{r['p50_ms']:.1f},{r['p99_ms']:.1f},"
+              f"{r['throughput']:.0f},{r['rejected']},{r['spilled']},{hr}")
+    on, off = cells["spillover=True"], cells["spillover=False"]
+    fleet_hit = lambda r: min(r["hit_rate"].values())
+    print(f"spillover_rescues_hot_cell={on['p99_ms'] < off['p99_ms']}"
+          f" but_pays_cold_misses={fleet_hit(on) < fleet_hit(off)}")
     return rows
 
 

@@ -1,0 +1,125 @@
+"""Real-array hot-row embedding cache: the system-side counterpart of
+the simulator caches in core/serving/cache.py.
+
+Embedding lookups dominate recommendation inference and their ID
+popularity is heavily Zipf-skewed, so a small RESIDENT table of hot rows
+(VMEM/L2-sized) serves most of the traffic while the full table stays in
+slow memory. This module builds that resident tier and a cached
+`embedding_bag` lookup path over it:
+
+    hot_ids                deterministic top-k hot IDs of a stream
+                           (frequency desc, id asc tie-break)
+    build_resident_table   copy the hot rows out of the full table and
+                           invert them into a [V] slot map (-1 = miss)
+    residency_mask         per-lookup hit mask (measured hit-rate)
+    cached_embedding_bag   residency-masked gather: hit rows come from
+                           the small resident table, miss rows fall back
+                           to the full table, then the SAME flat-gather +
+                           segment_sum reduce as the system path — so the
+                           output matches kernels/embedding_bag/ref.py
+                           EXACTLY (bitwise) on resident and non-resident
+                           ids alike (tests/test_kernels.py pins this)
+
+The full table may be fp32 dense or the C5 int8-quantized layout
+({"q": int8 [V,d], "s": f32 [V]}); resident rows are stored dequantized
+(fp32), which is exactly what a real serving cache does — pay the
+dequantize once at admission, not per lookup.
+
+The simulator's `ReplicaSpec.embed_fetch_s` charges service time per
+MISSED row; this module is where those misses correspond to real
+gathers. Capacity here is rows, matching CacheConfig.capacity_rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.recsys.embedding import _take_rows
+
+
+def hot_ids(ids: np.ndarray, capacity: int) -> np.ndarray:
+    """The `capacity` hottest IDs of a stream, deterministically: sorted
+    by (frequency desc, id asc), so equal-frequency ties never depend on
+    hash or encounter order. Fewer unique ids than capacity returns them
+    all."""
+    uniq, counts = np.unique(np.asarray(ids).reshape(-1), return_counts=True)
+    order = np.lexsort((uniq, -counts))  # freq desc, id asc within ties
+    return uniq[order[: int(capacity)]].astype(np.int64)
+
+
+@dataclasses.dataclass
+class ResidentTable:
+    """The hot tier: `rows` [C, d] fp32 copies of the hot embedding rows,
+    `slot_of` [V] int32 mapping id -> resident slot (-1 = not resident)."""
+
+    rows: jax.Array
+    slot_of: jax.Array
+
+    @property
+    def n_resident(self) -> int:
+        return int(self.rows.shape[0])
+
+
+def build_resident_table(
+    table: Union[jax.Array, dict], resident_ids: np.ndarray, vocab: Optional[int] = None
+) -> ResidentTable:
+    """Copy `resident_ids` rows out of the full table (dequantizing the
+    int8 layout once, at admission) and build the inverse slot map."""
+    ids = jnp.asarray(np.asarray(resident_ids, np.int64))
+    rows = _take_rows(table, ids)
+    if vocab is None:
+        vocab = table["q"].shape[0] if isinstance(table, dict) else table.shape[0]
+    slot_of = jnp.full((vocab,), -1, jnp.int32).at[ids].set(
+        jnp.arange(ids.shape[0], dtype=jnp.int32)
+    )
+    return ResidentTable(rows=rows, slot_of=slot_of)
+
+
+def residency_mask(resident: ResidentTable, idx: jax.Array) -> jax.Array:
+    """Boolean hit mask for a lookup batch; `.mean()` is the measured
+    hit-rate the simulator's EmbeddingCache models."""
+    return resident.slot_of[idx] >= 0
+
+
+def cached_embedding_bag(
+    table: Union[jax.Array, dict],
+    resident: ResidentTable,
+    idx: jax.Array,
+    mask: Optional[jax.Array] = None,
+    combiner: str = "sum",
+) -> jax.Array:
+    """EmbeddingBag through the resident tier: rows whose id is resident
+    gather from the small table, the rest fall back to the full table.
+
+    table: [V, d] (or int8 dict layout); idx: [B, nnz] int; mask: [B, nnz]
+    (1 = valid). Row selection happens BEFORE the reduce, and the reduce is
+    the same flat-gather + segment_sum as models/recsys/embedding.py's
+    embedding_bag — resident rows are exact copies, so the output is
+    bitwise identical to the uncached reference for any hit/miss mix.
+    """
+    B, nnz = idx.shape
+    flat_idx = idx.reshape(-1)
+    miss_rows = _take_rows(table, flat_idx)  # the slow-tier fallback fetch
+    if resident.n_resident == 0:  # degenerate empty tier: everything misses
+        flat = miss_rows
+    else:
+        slot = resident.slot_of[flat_idx]
+        hit = slot >= 0
+        hit_rows = jnp.take(resident.rows, jnp.maximum(slot, 0), axis=0)
+        flat = jnp.where(hit[:, None], hit_rows, miss_rows)
+    if mask is not None:
+        flat = flat * mask.reshape(-1, 1).astype(flat.dtype)
+    seg = jnp.repeat(jnp.arange(B, dtype=jnp.int32), nnz)
+    out = jax.ops.segment_sum(flat, seg, num_segments=B)
+    if combiner == "mean":
+        denom = (
+            jnp.clip(mask.sum(axis=1), 1)[:, None].astype(out.dtype)
+            if mask is not None
+            else jnp.full((B, 1), nnz, out.dtype)
+        )
+        out = out / denom
+    return out

@@ -8,6 +8,9 @@ Post-refactor layering — the engine is an orchestrator, not a monolith:
     router.py    Router policies  least-loaded / power-of-two / SLO-aware /
                                   cost-model (recommended)
     cascade.py   CascadeDispatcher  light-filter -> heavy-rerank chaining
+    cache.py     EmbeddingCache/ResultCache  per-pool hot-ID caching:
+                                  misses pay embed_fetch_s, repeats can
+                                  complete straight from the result cache
     autoscaler.py CapacityBudget  fleet-wide replica cap shared by pools
     this file    ServingSystem    admission (rate limit) -> route -> pools
     federation.py Cell/FederatedSystem  cells (one system each) on one
@@ -42,9 +45,10 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.serving.autoscaler import CapacityBudget, ScalerConfig
+from repro.core.serving.cache import CacheConfig
 from repro.core.serving.cascade import CascadeConfig, CascadeDispatcher
 from repro.core.serving.events import EventLoop
-from repro.core.serving.metrics import SLOMonitor
+from repro.core.serving.metrics import SLOMonitor, fleet_cache_rollup
 from repro.core.serving.pool import PoolConfig, ReplicaPool, Request
 from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
 from repro.core.serving.replica import ReplicaSpec
@@ -55,12 +59,16 @@ from repro.core.serving.router import LeastLoadedRouter, Router
 class PoolSpec:
     """Everything needed to bring up one variant pool. `tiers` gives the
     pool its own cost-weighted rate limiter (sheds from the pool's own SLO
-    signal); None leaves admission to the fleet-global limiter alone."""
+    signal); None leaves admission to the fleet-global limiter alone.
+    `cache` gives the pool its own hot-ID embedding cache (and optionally
+    a result cache) — see serving/cache.py; None means every embedding
+    row the pool's traffic carries pays `ReplicaSpec.embed_fetch_s`."""
 
     spec: ReplicaSpec
     cfg: PoolConfig = dataclasses.field(default_factory=PoolConfig)
     scaler: Optional[ScalerConfig] = None
     tiers: Optional[Dict[str, TierPolicy]] = None
+    cache: Optional[CacheConfig] = None
 
 
 @dataclasses.dataclass
@@ -119,6 +127,7 @@ class ServingSystem:
                 on_complete=self._stage_complete, slo_s=slo_p99_s,
                 picker=self.router.select_replica, tiers=ps.tiers,
                 event_key=f"{event_ns}/{name}" if event_ns else name,
+                cache_cfg=ps.cache,
             )
         self.cascade = CascadeDispatcher(cascade) if cascade is not None else None
         if self.cascade is not None:
@@ -247,6 +256,9 @@ class ServingSystem:
                 self._completed_in_horizon / self._horizon if self._horizon > 0 else 0.0
             ),
             "final_replicas": sum(len(p.replicas) for p in self.pools.values()),
+            "cache": fleet_cache_rollup(
+                p.cache_summary() for p in self.pools.values()
+            ),
             "trace": self.trace,
             "pools": {name: p.summary() for name, p in self.pools.items()},
         }
@@ -294,6 +306,47 @@ def default_horizon(arrivals: List[Request]) -> float:
     drain margin. Shared by ServingSystem.run and FederatedSystem.run so
     standalone and federated runs stay comparable."""
     return arrivals[-1].t_arrive + 5.0 if arrivals else 5.0
+
+
+def attach_zipf_ids(
+    arrivals: List[Request],
+    vocab: int,
+    ids_per_request: int,
+    *,
+    alpha: float = 1.1,
+    seed: int = 0,
+    offset: int = 0,
+    n_distinct: Optional[int] = None,
+) -> List[Request]:
+    """Give each arrival the embedding ids its lookups touch, drawn from
+    `zipf_id_stream` (data/synthetic.py) — the workload the caching layer
+    (serving/cache.py) exists for.
+
+    Default: one long stream chopped into per-request tuples (every
+    query distinct — exercises the EmbeddingCache alone). With
+    `n_distinct`, arrivals instead draw (Zipf again, hot queries repeat
+    often) from a pool of that many distinct query signatures, which is
+    what makes the ResultCache earn its keep. `offset` shifts the id
+    range so different cells can model DISJOINT hot sets (cell-resident
+    users): a request spilled to a remote cell then misses that cell's
+    cache cold. Idempotent on replay (same args reassign the same ids);
+    mutates and returns `arrivals`."""
+    from repro.data.synthetic import zipf_id_stream
+
+    n = ids_per_request * (n_distinct if n_distinct is not None else len(arrivals))
+    stream = zipf_id_stream(n, vocab, alpha, seed=seed) + offset
+    sigs = [
+        tuple(stream[i * ids_per_request:(i + 1) * ids_per_request])
+        for i in range(n // ids_per_request)
+    ]
+    if n_distinct is None:
+        for req, sig in zip(arrivals, sigs):
+            req.ids = sig
+    else:
+        pick = zipf_id_stream(len(arrivals), n_distinct, alpha, seed=seed + 1)
+        for req, k in zip(arrivals, pick):
+            req.ids = sigs[int(k)]
+    return arrivals
 
 
 def poisson_arrivals(

@@ -49,12 +49,21 @@ Accounting invariants (tests/test_serving.py pins these down):
     cell topology replays bit-identically.
 
 Units: all times in seconds on the shared loop clock; `rtt_s` is the
-one-way inter-cell transfer penalty per hop.
+one-way inter-cell transfer penalty per hop — or pass `rtt`, a dict
+keyed by (src, dst) cell-name pairs (RttMatrix: symmetric fallback, then
+the scalar), and every hop — policy charge, spill transit, cascade-stage
+spill — consults the pair's own value.
+
+Caches are cell-local (serving/cache.py via each pool's PoolSpec.cache):
+a request spilled to a remote cell runs its ids through THAT cell's
+caches, so with per-cell hot sets a spill pays cold misses remotely —
+spillover trades queueing delay against cache locality, and the summary
+shows both sides (per-cell hit rates + fleet cache rollup).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -67,6 +76,27 @@ from repro.core.serving.pool import Request
 from repro.core.serving.rate_limiter import TierPolicy
 from repro.core.serving.replica import ReplicaSpec
 from repro.core.serving.router import CostModelRouter, Router, make_router
+
+
+class RttMatrix:
+    """Per-cell-pair one-way transfer times. Looks up (src, dst), then the
+    symmetric (dst, src), then falls back to the scalar default — so a
+    federation built with only `rtt_s` behaves exactly as before, and a
+    partial matrix only needs the asymmetric / non-default pairs. Same-cell
+    and front-door (src == "") hops are free."""
+
+    def __init__(self, default_s: float,
+                 pairs: Optional[Dict[Tuple[str, str], float]] = None):
+        self.default_s = default_s
+        self.pairs = dict(pairs or {})
+
+    def __call__(self, src: str, dst: str) -> float:
+        if not src or src == dst:
+            return 0.0
+        hit = self.pairs.get((src, dst))
+        if hit is None:
+            hit = self.pairs.get((dst, src))
+        return self.default_s if hit is None else hit
 
 
 @dataclasses.dataclass
@@ -91,10 +121,13 @@ class Cell:
     read-only load signals cell policies and the spillover logic use."""
 
     def __init__(self, name: str, spec: CellSpec, loop: EventLoop,
-                 budget: Optional[CapacityBudget], rtt_s: float,
-                 scale_tick_s: float):
+                 budget: Optional[CapacityBudget], scale_tick_s: float,
+                 rtt: Optional[RttMatrix] = None):
         self.name = name
-        self.rtt_s = rtt_s
+        # per-pair transfer time INTO this cell; policies charge it for
+        # off-home candidates so the decision rule and the physical hop
+        # (FederatedSystem._transit) always agree
+        self._rtt = rtt if rtt is not None else RttMatrix(0.0)
         self.system = ServingSystem(
             spec.pools, spec.router, tiers=spec.tiers,
             slo_p99_s=spec.slo_p99_s, scale_tick_s=scale_tick_s,
@@ -103,6 +136,11 @@ class Cell:
             loop=loop, event_ns=name,
         )
         self.spill = SpillStats()
+
+    def rtt_from(self, src: str) -> float:
+        """One-way transfer seconds from cell `src` into this cell (0 for
+        itself and for homeless front-door arrivals)."""
+        return self._rtt(src, self.name)
 
     # ---- read-only signals for cell policies / spillover ----
     def predicted_latency(self, now: float, cost: int = 1) -> float:
@@ -162,8 +200,9 @@ class StickyCellPolicy(CellPolicy):
 
 class LeastLoadedCellPolicy(CellPolicy):
     """Global shortest-expected-delay across cells: the home cell competes
-    at par, remote cells are charged the inter-cell RTT — so traffic stays
-    home until a remote cell is genuinely cheaper despite the hop."""
+    at par, remote cells are charged the inter-cell RTT from the request's
+    home (per-pair when the federation has an RTT matrix) — so traffic
+    stays home until a remote cell is genuinely cheaper despite the hop."""
 
     name = "least_loaded"
 
@@ -171,8 +210,7 @@ class LeastLoadedCellPolicy(CellPolicy):
         home = req.home
         return min(
             cells,
-            key=lambda c: c.predicted_latency(now, req.cost)
-            + (0.0 if (c.name == home or not home) else c.rtt_s),
+            key=lambda c: c.predicted_latency(now, req.cost) + c.rtt_from(home),
         )
 
 
@@ -218,6 +256,7 @@ class FederatedSystem:
         policy: Union[str, CellPolicy] = "sticky",
         *,
         rtt_s: float = 0.005,
+        rtt: Optional[Dict[Tuple[str, str], float]] = None,
         spillover: bool = True,
         spill_headroom: float = 0.8,
         capacity: Optional[int] = None,
@@ -229,6 +268,7 @@ class FederatedSystem:
         self.loop = EventLoop()
         self.policy = make_cell_policy(policy) if isinstance(policy, str) else policy
         self.rtt_s = rtt_s
+        self.rtt = RttMatrix(rtt_s, rtt)  # per-(src, dst) with scalar fallback
         self.spillover = spillover
         self.spill_headroom = spill_headroom
         self.slo_p99_s = slo_p99_s
@@ -240,7 +280,8 @@ class FederatedSystem:
                 budget = CapacityBudget(spec.capacity, parent=self.global_budget)
             else:
                 budget = self.global_budget  # share the global cap directly
-            cell = Cell(name, spec, self.loop, budget, rtt_s, scale_tick_s)
+            cell = Cell(name, spec, self.loop, budget, scale_tick_s,
+                        rtt=self.rtt)
             cell.system.on_complete = self._request_done
             cell.system.spill_stage = (
                 lambda now, req, pool_name, _cell=cell:
@@ -265,27 +306,33 @@ class FederatedSystem:
     def _headroom_s(self, cell: Cell) -> float:
         return self.spill_headroom * cell.system.slo_p99_s
 
-    def _transit(self, now: float, kind: str, payload) -> None:
-        """One inter-cell hop: the request is in flight for rtt_s before
-        the delivery handler (which decrements in_transit) runs."""
+    def _transit(self, now: float, kind: str, payload, delay_s: float) -> None:
+        """One inter-cell hop: the request is in flight for the pair's RTT
+        before the delivery handler (which decrements in_transit) runs."""
         self.in_transit += 1
-        self.loop.push(now + self.rtt_s, kind, payload)
+        self.loop.push(now + delay_s, kind, payload)
 
     def _spill_target(self, now: float, req: Request, from_cell: Cell) -> Optional[Cell]:
-        """Best remote cell with SLO headroom; None keeps the request (and
-        its fate) at `from_cell`. Deterministic: min over insertion order."""
+        """Best remote cell with SLO headroom, ranked by predicted latency
+        plus the (src, dst) transit it would pay — with a per-pair RTT
+        matrix a nearby cell beats an equally loaded far one. None keeps
+        the request (and its fate) at `from_cell`. Deterministic: min over
+        insertion order; the headroom filter looks at the cell's own
+        predicted latency (the hop happens regardless of who pays it)."""
         scored = [
             (c, c.predicted_latency(now, req.cost))
             for c in self.cells.values() if c is not from_cell
         ]
-        cands = [(c, pred) for c, pred in scored if pred <= self._headroom_s(c)]
+        cands = [(c, pred + self.rtt(from_cell.name, c.name))
+                 for c, pred in scored if pred <= self._headroom_s(c)]
         if not cands:
             return None
         return min(cands, key=lambda cp: cp[1])[0]
 
     def _spill(self, now: float, req: Request, from_cell: Cell, to_cell: Cell) -> None:
         from_cell.spill.spilled_out += 1
-        self._transit(now, "spill", (req, to_cell.name))
+        self._transit(now, "spill", (req, to_cell.name),
+                      self.rtt(from_cell.name, to_cell.name))
 
     def _offer(self, now: float, req: Request, cell: Cell, *, can_spill: bool) -> None:
         """One cell's shot at a request: proactive spill when the cell is
@@ -325,14 +372,16 @@ class FederatedSystem:
         for cell in self.cells.values():
             if cell is home or pool_name not in cell.system.pools:
                 continue
+            hop = self.rtt(home.name, cell.name)
             pred = cell.system.pools[pool_name].predicted_latency(now, req.cost)
-            if pred + self.rtt_s < best_pred:
-                best, best_pred = cell, pred + self.rtt_s
+            if pred + hop < best_pred:
+                best, best_pred = cell, pred + hop
         if best is None:
             return False
         home.spill.spilled_out += 1
         home.spill.cascade_out += 1
-        self._transit(now, "spill_stage", (req, best.name, pool_name))
+        self._transit(now, "spill_stage", (req, best.name, pool_name),
+                      self.rtt(home.name, best.name))
         return True
 
     # ---- event handlers ----
@@ -341,10 +390,11 @@ class FederatedSystem:
         cell = self.policy.select_cell(req, list(self.cells.values()), now)
         if req.home and cell.name != req.home:
             # the policy routed this arrival off its home cell: the hop is
-            # physical, so it pays the same RTT the decision rule charged
-            # (requests without a home originate at a global front door —
-            # no hop to pay, matching the policies' zero charge for them)
-            self._transit(now, "route", (req, cell.name))
+            # physical, so it pays the same (home, dst) RTT the decision
+            # rule charged (requests without a home originate at a global
+            # front door — no hop to pay, matching the zero charge)
+            self._transit(now, "route", (req, cell.name),
+                          self.rtt(req.home, cell.name))
             return
         self._offer(now, req, cell, can_spill=True)
 

@@ -19,6 +19,12 @@ where in_flight includes requests in inter-cell transit (paying RTT).
 `federated_rollup` sums per-cell summaries into fleet totals and checks
 that identity's spill legs (sum of spilled_out == sum of spilled_in once
 transit has drained).
+
+The caching layer (serving/cache.py) reports through here too: each
+pool's hit/miss/eviction/result-hit counters roll up per system and per
+federation via `fleet_cache_rollup`, and every pool traces its live
+hit-rate at each scale tick — so a latency regression is attributable to
+a cooling cache, not just observed at the front door.
 """
 from __future__ import annotations
 
@@ -43,11 +49,27 @@ class SpillStats:
         return dataclasses.asdict(self)
 
 
+def fleet_cache_rollup(cache_summaries) -> Dict:
+    """Sum per-pool cache summaries (ReplicaPool.cache_summary() dicts)
+    into one hit/miss/eviction tally with the aggregate hit-rate — the
+    caching layer's contribution to an engine or federation summary.
+    Pools without a cache contribute zeros, so the rollup is meaningful
+    whether zero, some, or all pools cache."""
+    out = {"hits": 0, "misses": 0, "evictions": 0, "result_hits": 0}
+    for s in cache_summaries:
+        for key in out:
+            out[key] += s.get(key, 0)
+    seen = out["hits"] + out["misses"]
+    out["hit_rate"] = out["hits"] / seen if seen else 0.0
+    return out
+
+
 def federated_rollup(cells: Dict[str, Dict]) -> Dict[str, int]:
     """Sum per-cell summaries (each a ServingSystem.summary() dict plus a
     "spill" sub-dict) into fleet-wide counters. Latency percentiles do NOT
     roll up from per-cell percentiles — the federation keeps its own
-    fleet-wide SLOMonitor for those; this merges the conserved counts."""
+    fleet-wide SLOMonitor for those; this merges the conserved counts
+    (plus the cells' cache tallies, via fleet_cache_rollup)."""
     out = {
         "arrived": 0, "completed": 0, "rejected": 0, "in_queue": 0,
         "completed_in_horizon": 0, "final_replicas": 0,
@@ -60,6 +82,9 @@ def federated_rollup(cells: Dict[str, Dict]) -> Dict[str, int]:
         spill = summary.get("spill", {})
         for key in ("spilled_out", "spilled_in", "cascade_out", "cascade_in"):
             out[key] += spill.get(key, 0)
+    out["cache"] = fleet_cache_rollup(
+        s.get("cache", {}) for s in cells.values()
+    )
     return out
 
 

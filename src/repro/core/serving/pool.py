@@ -14,7 +14,8 @@ Public API
     ReplicaPool.submit     admission (pool-local limiter) + enqueue;
                            `force=True` bypasses admission (cascade
                            advancement, cross-cell spill arrivals)
-    ReplicaPool.predicted_latency / recent_p99 / queued_cost
+    ReplicaPool.predicted_latency / predicted_miss_cost / hit_rate /
+    recent_p99 / queued_cost
                            read-only router signals
     ReplicaPool.scale_tick autoscaler + limiter adaptation, driven by
                            the engine's per-tick `scale` event
@@ -43,6 +44,15 @@ from the pool's OWN SLO signal, so an overloaded heavy pool protects
 itself while cheap pools keep absorbing tail traffic (the fleet-global
 limiter in engine.py stays as the outer guard).
 
+Caching is per-pool (serving/cache.py): with a CacheConfig the pool owns
+a hot-ID EmbeddingCache — each dispatched batch runs its requests' ids
+through it in queue order and pays `ReplicaSpec.embed_fetch_s` per missed
+row on top of the dense service time — and optionally a request-signature
+ResultCache whose fresh repeats complete instantly (no tokens, no batch).
+A pool with NO cache fetches every id row its traffic carries: the
+memory-bound baseline the cache exists to beat. Hit-rate feeds the trace,
+the summary and the routers' predicted miss cost.
+
 Scaling is per-pool but capacity is fleet-wide: every grow request goes
 through the shared CapacityBudget, so heterogeneous pools compete for
 the same accelerators instead of each assuming it owns the cluster. In a
@@ -57,9 +67,10 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.serving.autoscaler import AutoScaler, CapacityBudget, ScalerConfig
+from repro.core.serving.cache import CacheConfig, EmbeddingCache, ResultCache
 from repro.core.serving.events import EventLoop
 from repro.core.serving.metrics import SLOMonitor
 from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
@@ -75,6 +86,8 @@ class Request:
     cost: int = 1  # work items carried (e.g. candidates to score)
     stage: int = 0  # 0 = single-stage; 1, 2, ... = cascade stages
     home: str = ""  # home cell in a multi-cell federation ("" = no affinity)
+    ids: Optional[Tuple[int, ...]] = None  # embedding ids touched (cache layer);
+    # a tuple so the same value doubles as the ResultCache signature
     t_enqueue: float = 0.0  # when it entered the current pool
     timeline: Dict[str, float] = dataclasses.field(default_factory=dict)
 
@@ -111,6 +124,7 @@ class ReplicaPool:
         picker: Optional[Callable[["ReplicaPool", float], Replica]] = None,
         tiers: Optional[Dict[str, TierPolicy]] = None,
         event_key: Optional[str] = None,
+        cache_cfg: Optional[CacheConfig] = None,
     ):
         self.name = name
         # events are keyed by event_key, not name: a federation runs several
@@ -129,6 +143,21 @@ class ReplicaPool:
         # by THIS pool's SLO signal (scale_tick) — None admits everything
         self.limiter = HybridRateLimiter(tiers) if tiers is not None else None
         self.shed = 0
+        # caching layer: a per-pool hot-ID embedding cache (misses pay
+        # spec.embed_fetch_s each on top of the dense service time) and an
+        # optional request-signature result cache for repeat queries
+        self.embed_cache: Optional[EmbeddingCache] = None
+        self.result_cache: Optional[ResultCache] = None
+        if cache_cfg is not None:
+            self.embed_cache = EmbeddingCache(cache_cfg.capacity_rows, cache_cfg.policy)
+            if cache_cfg.result_capacity > 0:
+                self.result_cache = ResultCache(
+                    cache_cfg.result_capacity, cache_cfg.result_ttl_s
+                )
+        # running id-rows-per-item average: the routers' predicted miss
+        # cost for a prospective batch, learned from dispatched traffic
+        self._id_rows_seen = 0
+        self._items_seen = 0
 
         if budget is not None and budget.acquire(cfg.n_replicas) < cfg.n_replicas:
             raise ValueError(
@@ -144,7 +173,9 @@ class ReplicaPool:
         self.queue: List[Request] = []
         self.queued_cost = 0  # running sum of queue costs (O(1) router signal)
         self._batch_deadline: Optional[float] = None
-        self.trace: Dict[str, List[float]] = {"t": [], "replicas": [], "queue": [], "p99": []}
+        self.trace: Dict[str, List[float]] = {
+            "t": [], "replicas": [], "queue": [], "p99": [], "hit_rate": []
+        }
 
         loop.on(f"batch_timeout:{self.event_key}", self._handle_timeout)
         loop.on(f"batch_done:{self.event_key}", self._handle_done)
@@ -152,10 +183,28 @@ class ReplicaPool:
     # ---- routing signals ----
     def predicted_latency(self, now: float, cost: int = 1) -> float:
         """Router signal: wait for the freest replica + service time of the
-        backlog this request would join."""
+        backlog this request would join (dense + predicted miss cost)."""
         ready = [r for r in self.replicas if r.ready_at <= now] or self.replicas
         wait = min(r.load(now) for r in ready)
-        return wait + self.spec.latency(self.queued_cost + cost)
+        items = self.queued_cost + cost
+        return wait + self.spec.latency(items) + self.predicted_miss_cost(items)
+
+    def predicted_miss_cost(self, items: int) -> float:
+        """Expected embedding-fetch seconds for a batch of `items` work
+        items: the pool's learned id-rows-per-item average, discounted by
+        the live cache hit-rate (no cache = every row fetches). Zero until
+        the pool has dispatched id-carrying traffic — cold pools compete
+        on dense cost alone."""
+        if self.spec.embed_fetch_s <= 0.0 or self._items_seen == 0:
+            return 0.0
+        rows = self._id_rows_seen / self._items_seen * items
+        miss_frac = (
+            1.0 if self.embed_cache is None else 1.0 - self.embed_cache.hit_rate
+        )
+        return rows * miss_frac * self.spec.embed_fetch_s
+
+    def hit_rate(self) -> float:
+        return self.embed_cache.hit_rate if self.embed_cache is not None else 0.0
 
     def recent_p99(self, now: float) -> float:
         return self.monitor.percentiles(now)["p99"]
@@ -166,6 +215,25 @@ class ReplicaPool:
         False when this pool's limiter sheds the request. `force=True`
         bypasses pool admission — cascade stage advancement uses it so work
         already paid for upstream is never dropped mid-chain."""
+        # result-cache fast path: a repeat query whose signature is still
+        # fresh completes immediately — no pool-local admission tokens, no
+        # batching, no service (the fleet-global front-door limiter has
+        # already been paid by this point). Mid-cascade (force) submissions
+        # never shortcut: their upstream stage produced fresh scores to
+        # rerank.
+        if (
+            self.result_cache is not None
+            and not force
+            and req.ids is not None
+            and self.result_cache.get(now, req.ids) is not None
+        ):
+            req.t_enqueue = now
+            req.stamp("enqueue", now)
+            req.stamp("start", now)
+            req.stamp("done", now)
+            self.monitor.record(now, 0.0)
+            self.on_complete(now, req, self)
+            return True
         if (
             self.limiter is not None
             and not force
@@ -217,7 +285,20 @@ class ReplicaPool:
     def _dispatch(self, now: float, take: List[Request]) -> None:
         rep = self.picker(self, now)
         items = sum(r.cost for r in take)
-        start, done = rep.start_batch(now, items)
+        # caching layer: run each request's embedding ids through the
+        # pool's hot-ID cache in queue order (deterministic); every MISSED
+        # row extends the batch's service time by spec.embed_fetch_s. A
+        # pool with no cache fetches every row — the memory-bound baseline.
+        miss_rows = 0
+        for r in take:
+            if r.ids:
+                self._id_rows_seen += len(r.ids)
+                if self.embed_cache is not None:
+                    miss_rows += self.embed_cache.lookup(r.ids)[1]
+                else:
+                    miss_rows += len(r.ids)
+        self._items_seen += items
+        start, done = rep.start_batch(now, items, miss_rows)
         for r in take:
             r.stamp("start", start)
         self.loop.push(done, f"batch_done:{self.event_key}", (rep.rid, take))
@@ -245,6 +326,9 @@ class ReplicaPool:
         for r in take:
             r.stamp("done", now)
             self.monitor.record(now, now - r.t_enqueue)
+            if self.result_cache is not None and r.stage == 0 and r.ids is not None:
+                # freshly computed scores become servable repeats
+                self.result_cache.put(now, r.ids)
             self.on_complete(now, r, self)
 
     # ---- scaling ----
@@ -291,8 +375,22 @@ class ReplicaPool:
         self.trace["replicas"].append(len(self.replicas))
         self.trace["queue"].append(len(self.queue))
         self.trace["p99"].append(stats["p99"])
+        self.trace["hit_rate"].append(self.hit_rate())
 
     # ---- reporting ----
+    def cache_summary(self) -> Dict:
+        """Cache counters in one flat dict (zeros when no cache is
+        configured, so fleet rollups can sum unconditionally)."""
+        out = {"policy": None, "hits": 0, "misses": 0, "hit_rate": 0.0,
+               "evictions": 0, "result_hits": 0}
+        if self.embed_cache is not None:
+            s = self.embed_cache.stats()
+            out.update({k: s[k] for k in ("policy", "hits", "misses",
+                                          "hit_rate", "evictions")})
+        if self.result_cache is not None:
+            out["result_hits"] = self.result_cache.hits
+        return out
+
     def summary(self) -> Dict:
         tot = self.monitor.totals()
         return {
@@ -306,5 +404,6 @@ class ReplicaPool:
             "final_replicas": len(self.replicas),
             "max_replicas": max(self.trace["replicas"], default=len(self.replicas)),
             "served_items": sum(r.served for r in self._registry.values()),
+            "cache": self.cache_summary(),
             "trace": self.trace,
         }

@@ -6,6 +6,15 @@ by timing the real executable (on this host's CPU) at a ladder of batch
 sizes, then interpolated — so the elastic-scheduling experiments reflect
 the actual relative costs of the five Table-I variants, not made-up
 constants. Cold/warm start costs model XLA compile + weight load.
+
+Service time decomposes into dense compute + sparse memory traffic
+(caching layer): `ReplicaSpec.service_time(items, miss_rows)` is the
+calibrated dense curve at `items` work items PLUS `embed_fetch_s`
+seconds per embedding row the pool's hot-ID cache MISSED — so batch
+latency depends on the live hit-rate, not just batch size. Pools with
+no cache pay the fetch for every id row their requests carry (the
+memory-bound baseline); `embed_fetch_s=0` (the default) reduces to the
+pure dense model for traffic that carries no ids.
 """
 from __future__ import annotations
 
@@ -65,6 +74,41 @@ class ReplicaSpec:
     latency: LatencyModel
     cold_start_s: float = 8.0  # load weights + compile
     warm_start_s: float = 0.25  # pre-initialized pool activation
+    embed_fetch_s: float = 0.0  # per MISSED embedding row (caching layer)
+
+    def service_time(self, items: int, miss_rows: int = 0) -> float:
+        """Cache-aware decomposition: calibrated dense compute at `items`
+        work items + the embedding-fetch cost of the rows the pool's
+        hot-ID cache missed for this batch."""
+        return self.latency(items) + miss_rows * self.embed_fetch_s
+
+
+def sustainable_rate(
+    spec: ReplicaSpec,
+    replicas: int,
+    max_wait_s: float,
+    ids_per_request: int = 0,
+    hit_rate: float = 0.0,
+) -> float:
+    """Sustainable request rate under timeout batching: batches close
+    every `max_wait_s` holding r*max_wait_s requests, and R replicas keep
+    up only while b1 + (m + miss_fetch)*r*w <= R*w, i.e.
+
+        r = (R*w - b1) / (w * (m + miss_fetch))
+
+    at the calibrated base b1, marginal per-item cost m (taken over the
+    1..32 segment) and miss_fetch = (1 - hit_rate) * ids_per_request *
+    embed_fetch_s seconds of embedding traffic per request. This is the
+    operating-point model the benchmarks, tests and examples share to
+    place offered load relative to a fleet's capacity (cold: hit_rate 0;
+    warm: the cache's steady-state hit-rate). Clamped below by 1 rps for
+    hosts whose calibrated base exceeds the batching window."""
+    b1 = spec.latency(1)
+    marginal = (spec.latency(32) - b1) / 31.0
+    miss_fetch = (1.0 - hit_rate) * ids_per_request * spec.embed_fetch_s
+    return max(
+        (replicas * max_wait_s - b1) / (max_wait_s * (marginal + miss_fetch)), 1.0
+    )
 
 
 class Replica:
@@ -85,10 +129,11 @@ class Replica:
         """Router signal: time until free (+ small in-flight tie-break)."""
         return self.residual(now) + 0.001 * self.in_flight
 
-    def start_batch(self, now: float, items: int) -> Tuple[float, float]:
-        """Queue one batch of `items` work units; returns (start, done)."""
+    def start_batch(self, now: float, items: int, miss_rows: int = 0) -> Tuple[float, float]:
+        """Queue one batch of `items` work units whose embedding lookups
+        missed `miss_rows` cache rows; returns (start, done)."""
         start = max(now, self.busy_until, self.ready_at)
-        dur = self.spec.latency(items)
+        dur = self.spec.service_time(items, miss_rows)
         self.busy_until = start + dur
         self.in_flight += 1
         self.served += items

@@ -14,8 +14,9 @@ Invariants: all policies are deterministic given their constructor
 arguments — the power-of-two sampler draws from its own seeded generator,
 so two runs of the same trace through the same policy are bit-identical.
 Policies only READ pool signals (`predicted_latency`, `recent_p99`,
-`queue`, `queued_cost`, `replicas`) — they never mutate pool state. All
-latency signals are in seconds; `cost` is in work items.
+`queue`, `queued_cost`, `replicas`, `predicted_miss_cost`, `hit_rate`) —
+they never mutate pool state. All latency signals are in seconds; `cost`
+is in work items.
 
 DeepRecSys (arXiv 2001.02772) motivates the pool-level decision: with
 heterogeneous variants live at once, WHERE a query lands matters as much
@@ -109,9 +110,14 @@ class CostModelRouter(Router):
 
     @staticmethod
     def estimate(pool: ReplicaPool, cost: int, now: float) -> float:
+        """slot wait + dense service of the joined batch + predicted
+        embedding-miss cost at the pool's LIVE hit-rate — a warm cache
+        makes a pool genuinely cheaper than an identical cold one, and
+        the router sees it (caching layer, serving/cache.py)."""
         ready = [r for r in pool.replicas if r.ready_at <= now] or pool.replicas
         slot_wait = sum(r.residual(now) for r in ready) / len(ready)
-        return slot_wait + pool.spec.latency(pool.queued_cost + cost)
+        items = pool.queued_cost + cost
+        return slot_wait + pool.spec.latency(items) + pool.predicted_miss_cost(items)
 
 
 class SLOAwareRouter(Router):

@@ -135,6 +135,23 @@ def taobao_eval_candidates(
     return {"batch": flat, "pos_idx": pos_idx, "n_cand": n_cand}
 
 
+def zipf_id_stream(
+    n: int, vocab: int, alpha: float = 1.1, *, seed: int = 0
+) -> np.ndarray:
+    """Zipf(alpha)-popular ID stream over [0, vocab): id k has rank k+1,
+    so the hottest ids are the smallest integers and p(k) ∝ (k+1)^-alpha.
+    This is the canonical embedding-lookup workload (DeepRecSys-style
+    skew): the serving caches, bench_serving experiment 6 and the cache
+    examples all draw from it. Deterministic under (n, vocab, alpha,
+    seed) — replay yields the identical array."""
+    if vocab < 1:
+        raise ValueError(f"vocab must be >= 1, got {vocab}")
+    rng = np.random.default_rng(seed)
+    p = np.arange(1, vocab + 1, dtype=np.float64) ** -float(alpha)
+    p /= p.sum()
+    return rng.choice(vocab, size=int(n), p=p).astype(np.int64)
+
+
 def criteo_batches(
     cfg: RecSysConfig, batch: int, steps: int, *, seed: int = 0
 ) -> Iterator[Dict[str, np.ndarray]]:

@@ -6,8 +6,26 @@ from conftest import reduced_recsys
 from repro.data.metrics import auc, ranking_metrics
 from repro.data.synthetic import (
     TaobaoWorld, criteo_batches, lm_token_batches, molecule_batch,
-    random_graph, taobao_batches, taobao_eval_candidates,
+    random_graph, taobao_batches, taobao_eval_candidates, zipf_id_stream,
 )
+
+
+def test_zipf_id_stream_deterministic_replay_and_skew():
+    """The caching layer's workload generator: bit-identical under the
+    same seed (bench_serving experiment 6 and the cache tests replay it),
+    in range, and genuinely Zipf-skewed (hot head far above uniform)."""
+    a = zipf_id_stream(20_000, 5000, 1.2, seed=9)
+    b = zipf_id_stream(20_000, 5000, 1.2, seed=9)
+    np.testing.assert_array_equal(a, b)
+    assert a.dtype == np.int64 and a.shape == (20_000,)
+    assert a.min() >= 0 and a.max() < 5000
+    # the 1% hottest ids (the smallest, by construction) carry way more
+    # than their uniform 1% share
+    assert np.mean(a < 50) > 0.2
+    assert not np.array_equal(a, zipf_id_stream(20_000, 5000, 1.2, seed=10))
+    # flatter alpha spreads mass down the tail
+    flat = zipf_id_stream(20_000, 5000, 0.6, seed=9)
+    assert np.mean(flat < 50) < np.mean(a < 50)
 
 
 def test_ranking_metrics_known():

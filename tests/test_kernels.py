@@ -72,6 +72,58 @@ def test_embedding_bag(B, nnz, d):
     np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("weighted", [False, True])
+@pytest.mark.parametrize("combiner", ["sum", "mean"])
+def test_cached_embedding_bag_matches_ref_exactly(weighted, combiner):
+    """The hot-row resident tier (core/caching.py) must be invisible to
+    correctness: resident-only, miss-only and mixed lookups all match the
+    embedding_bag oracle BITWISE — resident rows are exact copies and the
+    reduce path is identical."""
+    from repro.core.caching import build_resident_table, cached_embedding_bag, hot_ids
+    from repro.data.synthetic import zipf_id_stream
+
+    V, d, B, nnz = 400, 32, 16, 6
+    table = jax.random.normal(jax.random.key(3), (V, d))
+    stream = zipf_id_stream(4000, V, 1.2, seed=7)
+    resident = build_resident_table(table, hot_ids(stream, 64))
+    w = jax.random.uniform(jax.random.key(4), (B, nnz)) if weighted else None
+    res_ids = np.asarray(hot_ids(stream, 64))
+    cases = {
+        "resident_only": np.random.default_rng(0).choice(res_ids, (B, nnz)),
+        "mixed": np.asarray(stream[: B * nnz]).reshape(B, nnz),
+        "miss_only": np.setdiff1d(np.arange(V), res_ids)[: B * nnz].reshape(B, nnz),
+    }
+    for name, idx in cases.items():
+        idx = jnp.asarray(idx.astype(np.int32))
+        out = cached_embedding_bag(table, resident, idx, mask=w, combiner=combiner)
+        ref = _bag_oracle(table, idx, w, combiner)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref), err_msg=name)
+
+
+def _bag_oracle(table, idx, w, combiner):
+    from repro.models.recsys.embedding import embedding_bag as bag
+
+    return bag(table, idx, mask=w, combiner=combiner)
+
+
+def test_cached_embedding_bag_int8_table():
+    """The int8-quantized table layout dequantizes identically through
+    the resident tier (rows cached dequantized) and the fallback path."""
+    from repro.core.caching import build_resident_table, cached_embedding_bag, residency_mask
+
+    V, d, B, nnz = 200, 16, 8, 5
+    q = jax.random.randint(jax.random.key(5), (V, d), -127, 128, dtype=jnp.int8)
+    s = jax.random.uniform(jax.random.key(6), (V,), minval=0.01, maxval=0.1)
+    table = {"q": q, "s": s}
+    resident = build_resident_table(table, np.arange(32, dtype=np.int64))
+    idx = jax.random.randint(jax.random.key(7), (B, nnz), 0, V)
+    out = cached_embedding_bag(table, resident, idx)
+    ref = _bag_oracle(table, idx, None, "sum")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    hits = residency_mask(resident, idx)
+    assert 0 < int(hits.sum()) < idx.size  # genuinely mixed hit/miss
+
+
 @pytest.mark.parametrize("B,F,k", [(256, 39, 10), (512, 8, 16)])
 def test_fm_interaction(B, F, k):
     e = jax.random.normal(jax.random.key(0), (B, F, k))

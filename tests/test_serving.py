@@ -1,24 +1,36 @@
 """Serving-stack tests (paper §IV.B behaviours) against the multi-pool API:
 event kernel, replica pools, router policies, shared capacity budget,
-cascade inference, rate limiting, autoscaling, and the multi-cell
-federation (cross-cell routing + spillover)."""
+cascade inference, rate limiting, autoscaling, the multi-cell federation
+(cross-cell routing + spillover), and the hot-ID caching layer
+(eviction policies, miss-cost service times, result cache, conservation
+with caching, per-cell-pair RTT matrix)."""
+import dataclasses
+
 import numpy as np
 import pytest
 
 from repro.core.serving.autoscaler import AutoScaler, CapacityBudget, ScalerConfig
+from repro.core.serving.cache import (
+    CACHE_POLICIES, CacheConfig, EmbeddingCache, ResultCache, make_cache_policy,
+)
 from repro.core.serving.cascade import CascadeConfig
 from repro.core.serving.engine import (
-    ElasticEngine, EngineConfig, PoolSpec, Request, ServingSystem, poisson_arrivals,
+    ElasticEngine, EngineConfig, PoolSpec, Request, ServingSystem,
+    attach_zipf_ids, poisson_arrivals,
 )
 from repro.core.serving.events import EventLoop
 from repro.core.serving.federation import (
-    CELL_POLICIES, CellSpec, FederatedSystem, assign_homes, make_cell_policy,
+    CELL_POLICIES, CellSpec, FederatedSystem, RttMatrix, assign_homes,
+    make_cell_policy,
 )
 from repro.core.serving.metrics import SLOMonitor, federated_rollup
 from repro.core.serving.pool import PoolConfig, ReplicaPool
 from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
-from repro.core.serving.replica import LatencyModel, ReplicaSpec
-from repro.core.serving.router import ROUTERS, Router, make_router
+from repro.core.serving.replica import (
+    LatencyModel, Replica, ReplicaSpec, sustainable_rate,
+)
+from repro.core.serving.router import CostModelRouter, ROUTERS, Router, make_router
+from repro.data.synthetic import zipf_id_stream
 
 
 def _spec(name="m", base=0.02, per=0.001):
@@ -817,3 +829,275 @@ def test_federation_second_run_raises():
     fed.run(arr, until=2.0)
     with pytest.raises(RuntimeError, match="already run"):
         fed.run(arr, until=2.0)
+
+
+# ---------------------------------------------------------------------------
+# caching layer: eviction policies, miss costs, result cache, conservation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", sorted(CACHE_POLICIES))
+def test_cache_eviction_deterministic(policy):
+    """Same stream, same capacity => bit-identical hit/miss counts,
+    eviction count and final resident set, for every policy."""
+    stream = zipf_id_stream(20_000, 3000, 1.2, seed=31)
+    runs = []
+    for _ in range(2):
+        cache = EmbeddingCache(256, policy)
+        hits, misses = cache.lookup(stream)
+        runs.append((hits, misses, cache.evictions, cache.resident_keys()))
+    assert runs[0] == runs[1]
+    hits, misses, evictions, keys = runs[0]
+    assert hits + misses == len(stream)
+    assert hits > 0 and evictions > 0
+    assert len(keys) <= 256 and len(set(keys)) == len(keys)
+
+
+def test_cache_capacity_bound_and_warm_counts():
+    cache = EmbeddingCache(16, "lru")
+    cache.warm(range(100))  # warming admits but never counts
+    assert cache.hits == cache.misses == 0
+    assert len(cache.resident_keys()) == 16
+    hits, misses = cache.lookup([99, 98, 0])  # 0 was evicted long ago
+    assert (hits, misses) == (2, 1)
+    assert cache.hit_rate == pytest.approx(2 / 3)
+
+
+def test_unknown_cache_policy_raises():
+    with pytest.raises(KeyError):
+        make_cache_policy("belady_nope", 8)
+
+
+def test_s3fifo_capacity_invariant():
+    with pytest.raises(ValueError):  # 1 row can't split small + main
+        EmbeddingCache(1, "s3fifo")
+    cache = EmbeddingCache(2, "s3fifo")
+    cache.warm(range(10))
+    assert len(cache.resident_keys()) <= 2
+
+
+def test_lru_hit_rate_matches_che_approximation():
+    """Measured LRU hit-rate on a Zipf stream lands within tolerance of
+    the Che-approximation estimate: with characteristic time T solving
+    sum_i (1 - exp(-p_i T)) = C, the hit rate is
+    sum_i p_i (1 - exp(-p_i T))."""
+    vocab, capacity, alpha = 2000, 200, 1.2
+    p = np.arange(1, vocab + 1, dtype=np.float64) ** -alpha
+    p /= p.sum()
+    lo, hi = 0.0, 1e12
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        lo, hi = (mid, hi) if np.sum(1.0 - np.exp(-p * mid)) < capacity else (lo, mid)
+    T = 0.5 * (lo + hi)
+    predicted = float(np.sum(p * (1.0 - np.exp(-p * T))))
+    cache = EmbeddingCache(capacity, "lru")
+    stream = zipf_id_stream(60_000, vocab, alpha, seed=32)
+    cache.warm(stream[:10_000])  # reach steady state before measuring
+    cache.lookup(stream[10_000:])
+    assert cache.hit_rate == pytest.approx(predicted, abs=0.03)
+
+
+def test_miss_rows_extend_service_time():
+    """The cache-aware decomposition: dense calibrated compute plus
+    embed_fetch_s per missed row — and nothing else."""
+    spec = ReplicaSpec("m", LatencyModel.analytic(0.01, 1e-4), embed_fetch_s=1e-3)
+    assert spec.service_time(4, 0) == spec.latency(4)
+    assert spec.service_time(4, 8) == pytest.approx(spec.latency(4) + 8e-3)
+    rep = Replica(0, spec, ready_at=0.0)
+    start, done = rep.start_batch(0.0, 4, miss_rows=8)
+    assert done - start == pytest.approx(spec.latency(4) + 8e-3)
+
+
+def test_result_cache_ttl_and_eviction():
+    rc = ResultCache(capacity=2, ttl_s=1.0)
+    rc.put(0.0, ("a",))
+    assert rc.get(0.5, ("a",)) is not None
+    assert rc.get(2.0, ("a",)) is None  # expired (and dropped)
+    rc.put(2.0, ("b",))
+    rc.put(2.0, ("c",))
+    rc.put(2.0, ("d",))  # capacity 2: LRU "b" evicted
+    assert rc.get(2.1, ("b",)) is None
+    assert rc.get(2.1, ("c",)) is not None
+    assert rc.get(2.1, ("d",)) is not None
+
+
+def _cached_pool_spec(name, cache=None, fetch=2e-4):
+    spec = dataclasses.replace(_spec(name, 0.01, 2e-4), embed_fetch_s=fetch)
+    return PoolSpec(
+        spec,
+        PoolConfig(n_replicas=2, autoscale=False, max_batch=32, max_wait_s=0.02),
+        cache=cache,
+    )
+
+
+@pytest.mark.parametrize("policy", sorted(ROUTERS))
+def test_request_conservation_with_caching(policy):
+    """Fleet conservation (injected == completed + rejected + in_queue,
+    queues drained) holds for every router with the caching layer live:
+    a cached pool (result cache included), an uncached pool paying full
+    fetch, id-carrying Zipf traffic and a shedding limiter."""
+    kw = {"seed": 5} if policy == "power_of_two" else {}
+    pools = {
+        "cached": _cached_pool_spec(
+            "cached", CacheConfig(512, "lru", result_capacity=512, result_ttl_s=1.0)),
+        "uncached": _cached_pool_spec("uncached"),
+    }
+    sys_ = ServingSystem(
+        pools, make_router(policy, **kw),
+        tiers={"tier0": TierPolicy(300, 30), "tier1": TierPolicy(300, 30)},
+        slo_p99_s=0.15)
+    arr = poisson_arrivals(SPIKE, 20.0, seed=33)
+    attach_zipf_ids(arr, 4000, 8, alpha=1.2, seed=34, n_distinct=500)
+    res = sys_.run(arr, until=20.0)
+    assert res["arrived"] == len(arr)
+    assert res["arrived"] == res["completed"] + res["rejected"] + res["in_queue"]
+    assert res["in_queue"] == 0
+    assert sum(p["completed"] for p in res["pools"].values()) == res["completed"]
+    assert res["cache"]["hits"] > 0  # the cache actually saw traffic
+    assert 0.0 < res["cache"]["hit_rate"] <= 1.0
+
+
+def test_result_cache_serves_repeat_queries():
+    """Repeat queries (same ids signature within the TTL) complete from
+    the result cache: counted, completed with zero stage latency, and
+    conservation still holds."""
+    pools = {"only": _cached_pool_spec(
+        "only", CacheConfig(512, "lru", result_capacity=1024, result_ttl_s=5.0))}
+    sys_ = ServingSystem(pools, slo_p99_s=5.0, adaptive_shedding=False)
+    arr = poisson_arrivals(lambda t: 200.0, 10.0, seed=35, priority_frac=0.0)
+    attach_zipf_ids(arr, 4000, 8, alpha=1.3, seed=36, n_distinct=100)
+    res = sys_.run(arr, until=10.0)
+    hits = res["cache"]["result_hits"]
+    assert hits > 0
+    assert res["completed"] == len(arr)
+    # a result hit stamps enqueue == done (zero time in the pool)
+    instant = sum(
+        1 for r in arr if r.timeline["s0_done"] == r.timeline["s0_enqueue"])
+    assert instant == hits
+
+
+def test_warm_cache_beats_no_cache_on_zipf_traffic():
+    """The experiment-6 headline in analytic form: offered load past the
+    NO-cache fleet's sustainable rate but inside the warm-cache fleet's —
+    the warm cache wins tail latency AND in-horizon completions."""
+    vocab, ids_per_req, horizon = 5000, 8, 10.0
+    spec = dataclasses.replace(_spec("baseline", 0.02, 1e-3),
+                               embed_fetch_s=2.0 * 0.052 / (32 * ids_per_req))
+    wait = 0.02
+    r_cold = sustainable_rate(spec, 2, wait, ids_per_req, hit_rate=0.0)
+    r_warm = sustainable_rate(spec, 2, wait, ids_per_req, hit_rate=0.8)
+    rate = min(1.2 * r_cold, 0.9 * r_warm)
+    results = {}
+    for label, cache in (("none", None), ("warm", CacheConfig(vocab // 8, "lru"))):
+        pools = {"baseline": PoolSpec(
+            spec, PoolConfig(n_replicas=2, autoscale=False,
+                             max_batch=32, max_wait_s=wait),
+            cache=cache)}
+        sys_ = ServingSystem(pools, slo_p99_s=0.15, adaptive_shedding=False)
+        if cache is not None:
+            sys_.pools["baseline"].embed_cache.warm(
+                zipf_id_stream(4 * vocab, vocab, 1.1, seed=37))
+        arr = poisson_arrivals(lambda t: rate, horizon, seed=38, priority_frac=0.0)
+        attach_zipf_ids(arr, vocab, ids_per_req, alpha=1.1, seed=39)
+        results[label] = sys_.run(arr, until=horizon)
+    assert results["warm"]["cache"]["hit_rate"] > 0.6
+    assert results["warm"]["p99"] < results["none"]["p99"]
+    assert (results["warm"]["completed_in_horizon"]
+            > results["none"]["completed_in_horizon"])
+
+
+def test_cost_model_router_prefers_warm_pool():
+    """Identical pools except the cache: after both served the same
+    id-carrying traffic, the cost model charges the cold pool its
+    predicted miss cost and the warm pool wins the estimate."""
+    loop = EventLoop()
+    spec = dataclasses.replace(_spec("m", 0.01, 1e-4), embed_fetch_s=1e-3)
+    cfg = lambda: PoolConfig(n_replicas=1, autoscale=False)
+    cold = ReplicaPool("cold", spec, cfg(), loop)
+    warm = ReplicaPool("warm", spec, cfg(), loop, event_key="warm2",
+                       cache_cfg=CacheConfig(64, "lru"))
+    warm.embed_cache.warm(range(64))
+    ids = tuple(range(8))
+    for pool in (cold, warm):
+        pool.submit(0.0, Request(0, 0.0, "tier0", priority=True, ids=ids))
+    loop.run()
+    assert warm.hit_rate() == 1.0
+    est_cold = CostModelRouter.estimate(cold, 1, 100.0)
+    est_warm = CostModelRouter.estimate(warm, 1, 100.0)
+    assert est_warm < est_cold
+    # the gap is exactly the predicted fetch cost of the 8 rows/item
+    assert est_cold - est_warm == pytest.approx(8 * spec.embed_fetch_s)
+
+
+def test_federation_conservation_with_cell_local_caches():
+    """Spillover with per-cell caches and DISJOINT hot id sets: fleet
+    conservation holds, and the spill-receiving cell's hit-rate drops
+    below the no-spill run's — remote requests miss cold."""
+    vocab = 4000
+
+    def cells():
+        return {
+            name: CellSpec(
+                pools={"baseline": _cached_pool_spec(
+                    "baseline", CacheConfig(vocab // 8, "lru"), fetch=1e-3)},
+                slo_p99_s=0.15, adaptive_shedding=False)
+            for name in ("hot", "cold")
+        }
+
+    res = {}
+    for spillover in (False, True):
+        fed = FederatedSystem(cells(), policy="sticky", spillover=spillover,
+                              rtt_s=0.005, slo_p99_s=0.15)
+        # hot cell: 75% of 1600/s = 1200/s vs a warm-cache equilibrium of
+        # ~830/s — past local capacity, inside the 2-cell fleet's
+        arr = poisson_arrivals(lambda t: 1600.0, 10.0, seed=40, priority_frac=0.0)
+        assign_homes(arr, {"hot": 0.75, "cold": 0.25}, seed=41)
+        for i, name in enumerate(("hot", "cold")):
+            mine = [r for r in arr if r.home == name]
+            attach_zipf_ids(mine, vocab, 8, alpha=1.2, seed=42 + i,
+                            offset=i * vocab)
+        res[spillover] = fed.run(arr, until=10.0)
+    for r in res.values():
+        assert r["injected"] == r["completed"] + r["rejected"] + r["in_flight"]
+        assert r["in_flight"] == 0
+    assert res[True]["spilled"] > 0
+    hit = lambda r, c: r["cells"][c]["cache"]["hit_rate"]
+    assert hit(res[True], "cold") < hit(res[False], "cold")
+    # fleet rollup aggregates the cell caches
+    roll = federated_rollup(res[True]["cells"])
+    assert roll["cache"]["hits"] == sum(
+        res[True]["cells"][c]["cache"]["hits"] for c in ("hot", "cold"))
+
+
+# ---------------------------------------------------------------------------
+# per-cell-pair RTT matrix
+# ---------------------------------------------------------------------------
+
+
+def test_rtt_matrix_lookup_rules():
+    m = RttMatrix(0.005, {("a", "b"): 0.02, ("b", "c"): 0.001})
+    assert m("a", "b") == 0.02
+    assert m("b", "a") == 0.02  # symmetric fallback
+    assert m("c", "b") == 0.001
+    assert m("a", "c") == 0.005  # scalar fallback
+    assert m("a", "a") == 0.0 and m("", "b") == 0.0  # same-cell / front door
+
+
+def test_spilled_stage_pays_per_pair_rtt():
+    """With an RTT matrix, a spilled rerank stage pays the (src, dst)
+    pair's transfer time — visible as exactly that gap between s1_done
+    and s2_enqueue."""
+    pair_rtt = 0.012
+    fed = FederatedSystem({"hot": _cascade_cell(1), "cold": _cascade_cell(4)},
+                          policy="sticky", spillover=True, rtt_s=0.005,
+                          rtt={("hot", "cold"): pair_rtt}, slo_p99_s=0.3)
+    arr = poisson_arrivals(lambda t: 120.0, 10.0, seed=43, priority_frac=0.0)
+    assign_homes(arr, {"hot": 0.9, "cold": 0.1}, seed=44)
+    res = fed.run(arr, until=10.0)
+    assert res["cascade_spilled"] > 0
+    gaps = [r.timeline["s2_enqueue"] - r.timeline["s1_done"]
+            for r in arr if "s2_enqueue" in r.timeline]
+    spilled = [g for g in gaps if g > 1e-9]
+    assert len(spilled) == res["cascade_spilled"]
+    for g in spilled:
+        assert g == pytest.approx(pair_rtt, abs=1e-9)
