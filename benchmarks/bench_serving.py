@@ -21,6 +21,17 @@ executables of the five Table-I variants (or analytic stand-ins under
      has headroom; spillover cuts fleet p99 under the cell-local overload
      at equal-or-better fleet throughput, paying only the inter-cell RTT
      per hop.
+  7. adaptive control plane (serving/control.py): (a) mis-calibration
+     recovery — two identical pools behind the cost-model router, one
+     whose OFFLINE latency model is 2x off its true curve; the static
+     run misroutes on the stale calibration while the adaptive run's
+     OnlineLatencyModel learns the correction from observed service
+     times and recovers p99 to within 20% of a correctly-calibrated
+     run. (b) SLO-aware batch sizing — a load step served with a static
+     max_batch_items vs a BatchSizeController that narrows the item cap
+     on SLO breach and widens it under headroom: better p99 at equal
+     offered load and throughput. Both runs replay deterministically;
+     --smoke asserts all three claims.
   6. caching: Zipf-skewed embedding-id traffic where every MISSED row
      pays an embedding-fetch cost on top of the dense service time
      (memory model, serving/cache.py). Part one sweeps cache capacity x
@@ -40,8 +51,10 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 
 from repro.core.serving.cache import CacheConfig
+from repro.core.serving.control import ControlConfig
 from repro.core.serving.cascade import CascadeConfig
 from repro.core.serving.engine import (
     ElasticEngine, EngineConfig, PoolSpec, ServingSystem, attach_zipf_ids,
@@ -402,6 +415,142 @@ def caching_rows(specs, horizon=30.0) -> list:
     return rows
 
 
+def _scaled_model(lat: LatencyModel, factor: float) -> LatencyModel:
+    """A copy of a (possibly host-calibrated) curve with every service
+    time scaled — the drift/mis-calibration model for experiment 7."""
+    return LatencyModel(lat.sizes.copy(), lat.times * factor)
+
+
+CTRL_COST = 64  # work items per ranking request in experiment 7a
+
+
+def _miscal_run(spec: ReplicaSpec, horizon: float, *, offline_factor: float,
+                control: bool) -> dict:
+    """Two identical pools behind the cost-model router; pool "drifted"
+    predicts from an offline curve `offline_factor` x its TRUE curve
+    (1.0 = correctly calibrated). With `control`, both pools learn the
+    correction online. Offered load ~80% of the true fleet capacity."""
+    true_lat = spec.latency
+    ctl = ControlConfig(online_latency=True, adapt_batch=False) if control else None
+    pcfg = lambda: PoolConfig(n_replicas=2, autoscale=False, max_batch=4,
+                              max_wait_s=0.02, priority_bypass=False)
+    pools = {
+        "accurate": PoolSpec(dataclasses.replace(spec, variant="accurate"),
+                             pcfg(), control=ctl),
+        "drifted": PoolSpec(
+            dataclasses.replace(
+                spec, variant="drifted",
+                latency=_scaled_model(true_lat, offline_factor),
+                true_latency=true_lat),
+            pcfg(), control=ctl),
+    }
+    # fleet capacity: 4 replicas, each serving 4-request batches of the
+    # TRUE curve; offer 80% of it so routing quality decides the tail
+    batch_s = true_lat(4 * CTRL_COST)
+    rate = 0.8 * 4 * (4.0 / batch_s)
+    sys_ = ServingSystem(pools, make_router("cost_model"),
+                         slo_p99_s=4 * batch_s, adaptive_shedding=False)
+    arr = poisson_arrivals(lambda t: rate, horizon, seed=0,
+                           cost=CTRL_COST, priority_frac=0.0)
+    return sys_.run(arr, until=horizon)
+
+
+def _batch_sizing_run(spec: ReplicaSpec, horizon: float, *,
+                      adaptive: bool) -> dict:
+    """One pool under a low -> high load step, ranking requests of 16
+    items, in the ITEM-CAPPED batching regime (max_wait_s sized above
+    the wide cap's fill time, so the cap — not the timeout — closes
+    batches). Static: max_batch_items stays at the wide 1024-item cap,
+    and every request eats the wide batch's fill + service time.
+    Adaptive: a BatchSizeController narrows the cap on SLO breach
+    (bounding per-batch fill and service) and widens it back under
+    headroom. All rates derive from the spec's own curve — the offered
+    load sits at 85% of the FLOOR cap's capacity on any host, so both
+    runs are equally sustainable and only the tails differ."""
+    cost, cap_wide, cap_floor = 16, 1024, 128
+    # work-item arrival rate: 85% of what 2 replicas sustain at the
+    # floor cap (the narrowest batches the controller may reach)
+    items_per_s = 0.85 * 2 * cap_floor / spec.latency(cap_floor)
+    wait = 1.5 * cap_wide / items_per_s  # wide cap fills before timeout
+    slo = 2.5 * (cap_floor / items_per_s + spec.latency(cap_floor))
+    ctl = ControlConfig(online_latency=False, adapt_batch=True,
+                        min_batch_items=cap_floor, max_batch_items=cap_wide)
+    pools = {"pool": PoolSpec(
+        spec,
+        PoolConfig(n_replicas=2, autoscale=False, max_batch=256,
+                   max_wait_s=wait, max_batch_items=cap_wide,
+                   priority_bypass=False),
+        control=ctl if adaptive else None)}
+    rate = lambda t: (0.25 if t < 0.3 * horizon else 1.0) * items_per_s / cost
+    sys_ = ServingSystem(pools, slo_p99_s=slo, adaptive_shedding=False)
+    arr = poisson_arrivals(rate, horizon, seed=1, cost=cost, priority_frac=0.0)
+    return sys_.run(arr, until=horizon)
+
+
+def control_rows(specs, horizon=30.0, check=False) -> list:
+    """Experiment 7: the adaptive control plane. Part a: mis-calibration
+    recovery under cost-model routing. Part b: static vs SLO-aware batch
+    sizing under a load step. With `check`, the headline claims (and
+    bit-determinism of the adaptive runs) are asserted, not just
+    printed — CI runs --smoke with checks on."""
+    spec = specs["baseline"]
+    rows = []
+
+    runs = {
+        "oracle": _miscal_run(spec, horizon, offline_factor=1.0, control=False),
+        "miscal_static": _miscal_run(spec, horizon, offline_factor=0.5,
+                                     control=False),
+        "miscal_adaptive": _miscal_run(spec, horizon, offline_factor=0.5,
+                                       control=True),
+    }
+    for mode, res in runs.items():
+        rows.append({
+            "experiment": "control", "part": "miscalibration", "mode": mode,
+            "p50_ms": res["p50"] * 1e3, "p99_ms": res["p99"] * 1e3,
+            "throughput": res["throughput"], "rejected": res["rejected"],
+            "latency_corr": {
+                n: p["control"]["latency_correction"]
+                for n, p in res["pools"].items()},
+        })
+    if check:
+        replay = _miscal_run(spec, horizon, offline_factor=0.5, control=True)
+        assert replay["p99"] == runs["miscal_adaptive"]["p99"], \
+            "adaptive mis-calibration run must replay bit-identically"
+        assert runs["miscal_adaptive"]["p99"] <= 1.2 * runs["oracle"]["p99"], (
+            "online latency model must recover a 2x mis-calibrated spec to "
+            f"within 20% of the oracle: adaptive {runs['miscal_adaptive']['p99']:.3f}s"
+            f" vs oracle {runs['oracle']['p99']:.3f}s")
+        assert runs["miscal_static"]["p99"] > runs["miscal_adaptive"]["p99"], \
+            "static mis-calibrated routing must be worse than adaptive"
+
+    step = {
+        "static": _batch_sizing_run(spec, horizon, adaptive=False),
+        "adaptive": _batch_sizing_run(spec, horizon, adaptive=True),
+    }
+    for mode, res in step.items():
+        pool = res["pools"]["pool"]
+        rows.append({
+            "experiment": "control", "part": "batch_sizing", "mode": mode,
+            "p50_ms": res["p50"] * 1e3, "p99_ms": res["p99"] * 1e3,
+            "throughput": res["throughput"], "rejected": res["rejected"],
+            "final_batch_items": pool["control"]["max_batch_items"],
+            "min_traced_items": min(pool["trace"]["max_batch_items"],
+                                    default=0.0),
+        })
+    if check:
+        replay = _batch_sizing_run(spec, horizon, adaptive=True)
+        assert replay["p99"] == step["adaptive"]["p99"], \
+            "adaptive batch-sizing run must replay bit-identically"
+        assert step["adaptive"]["p99"] < step["static"]["p99"], (
+            "SLO-aware batch sizing must beat the static cap on p99: "
+            f"adaptive {step['adaptive']['p99']:.3f}s vs "
+            f"static {step['static']['p99']:.3f}s")
+        assert (step["adaptive"]["completed_in_horizon"]
+                >= 0.999 * step["static"]["completed_in_horizon"]), \
+            "adaptive batch sizing must not give up throughput at equal load"
+    return rows
+
+
 def run(smoke: bool = False) -> list:
     if smoke:
         specs = analytic_specs()
@@ -410,19 +559,29 @@ def run(smoke: bool = False) -> list:
                 + cascade_rows(specs, horizon=15.0)
                 + mixed_batching_rows(specs, horizon=10.0)
                 + federation_rows(specs, horizon=12.0)
-                + caching_rows(specs, horizon=10.0))
+                + caching_rows(specs, horizon=10.0)
+                + control_rows(specs, horizon=12.0, check=True))
     specs = calibrated_specs()
     return (single_pool_rows(specs) + heterogeneous_rows(specs)
             + cascade_rows(specs) + mixed_batching_rows(specs)
-            + federation_rows(specs) + caching_rows(specs))
+            + federation_rows(specs) + caching_rows(specs)
+            + control_rows(specs))
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="analytic latency models + tiny horizons (CI guard)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also dump every experiment row (p99/throughput/...)"
+                         " as a JSON perf artifact, e.g. BENCH_serving.json")
     args = ap.parse_args(argv)
     rows = run(smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"bench": "serving", "smoke": args.smoke, "rows": rows},
+                      fh, indent=1, default=float)
+        print(f"# wrote {len(rows)} experiment rows to {args.json}")
     print("# 1. each variant alone under a 150->1000 QPS spike")
     print("variant,autoscale,p50_ms,p99_ms,throughput,rejected,max_replicas,"
           "svc_ms_b1,svc_ms_b512")
@@ -528,6 +687,32 @@ def main(argv=None):
     fleet_hit = lambda r: min(r["hit_rate"].values())
     print(f"spillover_rescues_hot_cell={on['p99_ms'] < off['p99_ms']}"
           f" but_pays_cold_misses={fleet_hit(on) < fleet_hit(off)}")
+
+    print(f"\n# 7. adaptive control plane: (a) cost-model routing with one"
+          f" pool's offline calibration 2x off, (b) static vs SLO-aware"
+          f" batch sizing under a load step")
+    print("part,mode,p50_ms,p99_ms,throughput,rejected,detail")
+    ctl = {}
+    for r in rows:
+        if r["experiment"] != "control":
+            continue
+        ctl[(r["part"], r["mode"])] = r
+        if r["part"] == "miscalibration":
+            detail = "corr " + " ".join(
+                f"{n}:{c:.2f}" for n, c in r["latency_corr"].items())
+        else:
+            detail = (f"cap {r['final_batch_items']}"
+                      f" (min traced {r['min_traced_items']:.0f})")
+        print(f"{r['part']},{r['mode']},{r['p50_ms']:.1f},{r['p99_ms']:.1f},"
+              f"{r['throughput']:.0f},{r['rejected']},{detail}")
+    recovers = (ctl[("miscalibration", "miscal_adaptive")]["p99_ms"]
+                <= 1.2 * ctl[("miscalibration", "oracle")]["p99_ms"])
+    print(f"online_model_recovers_miscalibrated_spec={recovers}")
+    adapt_wins = (ctl[("batch_sizing", "adaptive")]["p99_ms"]
+                  < ctl[("batch_sizing", "static")]["p99_ms"]
+                  and ctl[("batch_sizing", "adaptive")]["throughput"]
+                  >= 0.999 * ctl[("batch_sizing", "static")]["throughput"])
+    print(f"adaptive_batch_sizing_beats_static={adapt_wins}")
     return rows
 
 

@@ -5,14 +5,19 @@ new scenarios — (d) a heterogeneous baseline+distilled fleet behind each
 router policy (including the recommended cost_model), (e) ranking traffic
 as a RecPipe-style cascade vs the baseline pool alone under one shared
 capacity budget, and the cost-aware serving path — (f) mixed pointwise +
-ranking traffic with count-closed vs item-closed batches, and (g) a
+ranking traffic with count-closed vs item-closed batches, (g) a
 per-pool cost-weighted rate limiter protecting the heavy pool while the
-cheap pool keeps absorbing tail traffic.
+cheap pool keeps absorbing tail traffic, and (h) the adaptive control
+plane — a pool whose offline calibration is 2x off its true service
+times misroutes under cost-model routing until an OnlineLatencyModel
+learns the correction from observed batches, and SLO-aware batch sizing
+narrows a too-wide item cap on breach (serving/control.py).
 
     PYTHONPATH=src python examples/elastic_scaling.py
 """
 from repro.core.serving.autoscaler import ScalerConfig
 from repro.core.serving.cascade import CascadeConfig
+from repro.core.serving.control import ControlConfig
 from repro.core.serving.engine import (
     ElasticEngine, EngineConfig, PoolSpec, ServingSystem, poisson_arrivals,
 )
@@ -143,6 +148,60 @@ def per_pool_admission(protected):
               f"stage_p99={p['p99']*1e3:.0f}ms")
 
 
+def adaptive_control(mode):
+    """The control plane (serving/control.py) closing the feedback loop:
+    the "drifted" pool's offline calibration claims it is 2x faster than
+    it really is, so the cost-model router floods it. Static: the stale
+    calibration stands for the whole run. Adaptive: every completed
+    batch's measured service time EWMA-corrects the predicted curve
+    (watch the learned correction converge to ~2.0), and the router
+    recovers the oracle split."""
+    truth = LatencyModel.analytic(0.020, 0.001)
+    claims_2x_faster = LatencyModel.analytic(0.010, 0.0005)
+    ctl = ControlConfig(online_latency=True, adapt_batch=False)
+    pcfg = lambda: PoolConfig(n_replicas=2, autoscale=False, max_batch=4,
+                              max_wait_s=0.02, priority_bypass=False)
+    pools = {
+        "accurate": PoolSpec(
+            ReplicaSpec("accurate", truth, cold_start_s=5.0, warm_start_s=0.2),
+            pcfg(), control=ctl if mode == "adaptive" else None),
+        "drifted": PoolSpec(
+            ReplicaSpec("drifted", claims_2x_faster, cold_start_s=5.0,
+                        warm_start_s=0.2, true_latency=truth),
+            pcfg(), control=ctl if mode == "adaptive" else None),
+    }
+    sys_ = ServingSystem(pools, make_router("cost_model"), slo_p99_s=1.0,
+                         adaptive_shedding=False)
+    arrivals = poisson_arrivals(lambda t: 45.0, 30.0, seed=0, cost=64,
+                                priority_frac=0.0)
+    res = report(f"2x mis-calibrated pool [{mode}]", sys_.run(arrivals, until=30.0))
+    corr = ", ".join(f"{n}: corr={p['control']['latency_correction']:.2f}"
+                     for n, p in res["pools"].items())
+    print(f"{'':38s} learned {corr}")
+
+
+def adaptive_batch_sizing(mode):
+    """SLO-aware batch sizing: ranking traffic in the item-capped
+    batching regime, where a static 1024-item cap makes every request
+    eat the wide batch's fill + service time. The BatchSizeController
+    narrows the effective cap on SLO breach and widens it under
+    headroom, per scale tick, from the pool's own windowed p99."""
+    ctl = ControlConfig(online_latency=False, adapt_batch=True,
+                        min_batch_items=128, max_batch_items=1024)
+    pools = {"bulk": PoolSpec(
+        BASELINE(),
+        PoolConfig(n_replicas=2, autoscale=False, max_batch=256,
+                   max_wait_s=1.0, max_batch_items=1024,
+                   priority_bypass=False),
+        control=ctl if mode == "adaptive" else None)}
+    sys_ = ServingSystem(pools, slo_p99_s=0.6, adaptive_shedding=False)
+    arrivals = poisson_arrivals(lambda t: 90.0, 30.0, seed=0, cost=16,
+                                priority_frac=0.0)
+    res = report(f"1024-item cap vs SLO [{mode}]", sys_.run(arrivals, until=30.0))
+    cap = res["pools"]["bulk"]["control"]["max_batch_items"]
+    print(f"{'':38s} effective max_batch_items at end: {cap}")
+
+
 def main():
     print("traffic: 120 QPS -> 1100 QPS spike -> 150 QPS; SLO p99 = 150ms")
     single_pool("fixed 2 replicas", autoscale=False, warm_pool=False, bypass=False)
@@ -163,6 +222,11 @@ def main():
     print("\nper-pool cost-weighted admission under a ranking overload:")
     per_pool_admission(protected=False)
     per_pool_admission(protected=True)
+    print("\nadaptive control plane (serving/control.py):")
+    adaptive_control("static")
+    adaptive_control("adaptive")
+    adaptive_batch_sizing("static")
+    adaptive_batch_sizing("adaptive")
 
 
 if __name__ == "__main__":

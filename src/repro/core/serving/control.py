@@ -1,0 +1,181 @@
+"""Adaptive serving control plane: online-learned latency + SLO-aware
+batch sizing (paper §IV's elastic-scheduling feedback loop, closed).
+
+The routers and pools predict completion times from OFFLINE-calibrated
+LatencyModels (replica.py). Calibration drifts — interference, thermal
+throttling, a model pushed with a stale ladder — and a static prediction
+then misroutes traffic and missizes batches no matter how good the live
+queue signals are. DeepRecSys (arXiv 2001.02772) closes exactly this
+loop: per-pool batch sizing driven by live SLO headroom, cost estimates
+tracked against observed service times. This module is that feedback
+layer for the simulator:
+
+    Ewma                 one exponentially-weighted mean, shared by every
+                         windowed estimator in the control plane (the
+                         latency correction AND the pool's id-rows-per-
+                         item average, which used to be a never-decaying
+                         lifetime counter)
+    OnlineLatencyModel   wraps the calibrated offline LatencyModel and
+                         EWMA-corrects it with a multiplicative factor
+                         learned from observed (batch items, miss rows,
+                         measured service seconds) samples at each
+                         batch_done — `ReplicaPool.dense_latency`,
+                         `predicted_latency` and `CostModelRouter.
+                         estimate` consult the corrected curve
+    BatchSizeController  per-pool effective `max_batch_items`, widened
+                         under SLO headroom (throughput) and narrowed on
+                         breach (latency), driven from `scale_tick`
+    ControlConfig        opt-in knobs, carried by `PoolSpec.control`
+
+Signal path (pool.py wires it):
+
+    batch_done ──► OnlineLatencyModel.observe(items, miss_rows, measured)
+                        │  correction = EWMA(measured / predicted)
+                        ▼
+    predicted_latency / CostModelRouter.estimate  (corrected curve)
+
+    scale_tick ──► BatchSizeController.tick(p99, slo)
+                        │  breach: cap ×= narrow   headroom: cap ×= widen
+                        ▼
+    ReplicaPool item cap (batch close + next-batch split), traced per tick
+
+Invariants: everything here is deterministic — corrections depend only on
+the observation sequence, the controller only on the (p99, slo) tick
+sequence; two identical runs adapt bit-identically (tests replay them).
+The correction never flips the curve's sign (clamped positive), and the
+controller never leaves [min_batch_items, max_batch_items]. Times are
+seconds, batch caps are work ITEMS on the same scale as `Request.cost`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.serving.replica import LatencyModel
+
+
+class Ewma:
+    """Exponentially-weighted mean: the control plane's one windowed
+    estimator. The first sample initialises the mean exactly (no bias
+    toward a made-up prior); `value` is None until then. An `alpha` of
+    1.0 degenerates to last-sample, 0.0 to first-sample-forever."""
+
+    def __init__(self, alpha: float):
+        if not 0.0 <= alpha <= 1.0:
+            raise ValueError(f"EWMA alpha must be in [0, 1], got {alpha}")
+        self.alpha = alpha
+        self.value: Optional[float] = None
+        self.samples = 0
+
+    def update(self, x: float) -> float:
+        self.value = x if self.value is None else (
+            self.value + self.alpha * (x - self.value))
+        self.samples += 1
+        return self.value
+
+
+@dataclasses.dataclass
+class ControlConfig:
+    """Per-pool control-plane knobs (`PoolSpec.control`; None = the
+    static pre-control behaviour everywhere).
+
+    `online_latency` turns on the EWMA-corrected latency curve;
+    `ewma_alpha` is its smoothing factor (also used for the id-rows-per-
+    item estimator the miss-cost prediction reads). `adapt_batch` turns
+    on SLO-aware batch sizing: each scale tick the pool's effective item
+    cap is multiplied by `narrow` while the windowed p99 breaches the
+    SLO and by `widen` while p99 sits below `headroom` of it (the band
+    between holds the cap steady), clamped to [min_batch_items,
+    max_batch_items]. The controller starts from the pool's configured
+    `max_batch_items` (or this config's ceiling when the pool had no
+    item cap) and only moves on a real p99 signal — initialisation
+    never changes the cap. A pool configured TIGHTER than
+    `min_batch_items` keeps its own cap as the narrow floor (the floor
+    clamp never lifts it); sustained headroom may still widen any pool
+    up to this config's ceiling — that band is what opting in
+    declares."""
+
+    online_latency: bool = True
+    ewma_alpha: float = 0.25
+    adapt_batch: bool = True
+    min_batch_items: int = 16
+    max_batch_items: int = 4096
+    widen: float = 1.25
+    narrow: float = 0.6
+    headroom: float = 0.6
+
+
+class OnlineLatencyModel:
+    """The calibrated offline curve, EWMA-corrected from observation.
+
+    Each completed batch contributes one sample: the ratio of MEASURED
+    service seconds to the offline prediction at that batch's (items,
+    miss rows). The smoothed ratio multiplies every prediction, so a
+    spec whose offline calibration is 2x off converges onto the observed
+    curve after a handful of batches — and keeps tracking slow drift.
+    A single multiplicative factor (not per-size residuals) keeps the
+    estimator sample-efficient at every batch size at once: mis-
+    calibration and interference overwhelmingly scale the whole curve."""
+
+    def __init__(self, offline: LatencyModel, embed_fetch_s: float = 0.0,
+                 alpha: float = 0.25):
+        self.offline = offline
+        self.embed_fetch_s = embed_fetch_s
+        self._corr = Ewma(alpha)
+
+    @property
+    def correction(self) -> float:
+        """Multiplicative observed/offline factor (1.0 until the first
+        sample — an unobserved pool trusts its calibration)."""
+        return 1.0 if self._corr.value is None else self._corr.value
+
+    @property
+    def samples(self) -> int:
+        return self._corr.samples
+
+    def observe(self, items: int, miss_rows: int, measured_s: float) -> None:
+        """One batch_done sample: measured service seconds for a batch
+        of `items` work items whose lookups missed `miss_rows` rows."""
+        predicted = self.offline(items) + miss_rows * self.embed_fetch_s
+        if predicted > 0.0 and measured_s >= 0.0:
+            self._corr.update(measured_s / predicted)
+
+    def dense(self, items: int) -> float:
+        """Corrected dense service time at `items` work items."""
+        return self.correction * self.offline(items)
+
+    @property
+    def fetch_s(self) -> float:
+        """Corrected per-missed-row embedding-fetch seconds."""
+        return self.correction * self.embed_fetch_s
+
+
+class BatchSizeController:
+    """SLO-aware effective `max_batch_items` (DeepRecSys-style): widen
+    under headroom to amortise the per-batch base cost (throughput),
+    narrow on breach to bound per-batch service time (latency). Driven
+    once per scale tick from the pool's OWN windowed p99; a tick with no
+    signal (p99 == 0, empty window) holds the cap — adapting to silence
+    would race the first real traffic to the clamp rails."""
+
+    def __init__(self, cfg: ControlConfig, initial: Optional[int] = None):
+        self.cfg = cfg
+        start = initial if initial is not None else cfg.max_batch_items
+        # a pool configured TIGHTER than the controller's default floor
+        # keeps its own cap as the narrow floor: initialisation and the
+        # floor clamp never lift a static cap without a headroom signal
+        self._min = float(min(cfg.min_batch_items, start))
+        self._cap = float(min(start, cfg.max_batch_items))
+
+    @property
+    def cap(self) -> int:
+        """The pool's current effective item cap, in work items."""
+        return int(round(self._cap))
+
+    def tick(self, p99: float, slo_s: float) -> int:
+        if p99 > slo_s:
+            self._cap = max(self._min, self._cap * self.cfg.narrow)
+        elif 0.0 < p99 < self.cfg.headroom * slo_s:
+            self._cap = min(float(self.cfg.max_batch_items),
+                            self._cap * self.cfg.widen)
+        return self.cap

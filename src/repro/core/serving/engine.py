@@ -11,6 +11,9 @@ Post-refactor layering — the engine is an orchestrator, not a monolith:
     cache.py     EmbeddingCache/ResultCache  per-pool hot-ID caching:
                                   misses pay embed_fetch_s, repeats can
                                   complete straight from the result cache
+    control.py   OnlineLatencyModel/BatchSizeController  adaptive control
+                                  plane: EWMA-corrected latency curve +
+                                  SLO-aware per-pool batch sizing
     autoscaler.py CapacityBudget  fleet-wide replica cap shared by pools
     this file    ServingSystem    admission (rate limit) -> route -> pools
     federation.py Cell/FederatedSystem  cells (one system each) on one
@@ -47,8 +50,11 @@ import numpy as np
 from repro.core.serving.autoscaler import CapacityBudget, ScalerConfig
 from repro.core.serving.cache import CacheConfig
 from repro.core.serving.cascade import CascadeConfig, CascadeDispatcher
+from repro.core.serving.control import ControlConfig
 from repro.core.serving.events import EventLoop
-from repro.core.serving.metrics import SLOMonitor, fleet_cache_rollup
+from repro.core.serving.metrics import (
+    SLOMonitor, fleet_cache_rollup, fleet_control_rollup,
+)
 from repro.core.serving.pool import PoolConfig, ReplicaPool, Request
 from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
 from repro.core.serving.replica import ReplicaSpec
@@ -62,13 +68,17 @@ class PoolSpec:
     signal); None leaves admission to the fleet-global limiter alone.
     `cache` gives the pool its own hot-ID embedding cache (and optionally
     a result cache) — see serving/cache.py; None means every embedding
-    row the pool's traffic carries pays `ReplicaSpec.embed_fetch_s`."""
+    row the pool's traffic carries pays `ReplicaSpec.embed_fetch_s`.
+    `control` opts the pool into the adaptive control plane — an online-
+    corrected latency curve and/or SLO-aware batch sizing (see
+    serving/control.py); None keeps the static pre-control behaviour."""
 
     spec: ReplicaSpec
     cfg: PoolConfig = dataclasses.field(default_factory=PoolConfig)
     scaler: Optional[ScalerConfig] = None
     tiers: Optional[Dict[str, TierPolicy]] = None
     cache: Optional[CacheConfig] = None
+    control: Optional[ControlConfig] = None
 
 
 @dataclasses.dataclass
@@ -127,7 +137,7 @@ class ServingSystem:
                 on_complete=self._stage_complete, slo_s=slo_p99_s,
                 picker=self.router.select_replica, tiers=ps.tiers,
                 event_key=f"{event_ns}/{name}" if event_ns else name,
-                cache_cfg=ps.cache,
+                cache_cfg=ps.cache, control_cfg=ps.control,
             )
         self.cascade = CascadeDispatcher(cascade) if cascade is not None else None
         if self.cascade is not None:
@@ -221,7 +231,11 @@ class ServingSystem:
         directly (and later drains the loop itself)."""
         self._ran = True
         self._horizon = horizon
-        self.loop.push(self.scale_tick_s, self._event("scale"))
+        # clamp the FIRST tick into the horizon: with horizon <
+        # scale_tick_s the old `push(scale_tick_s)` fired past it, so
+        # short runs got empty traces and the limiter/scaler/controller
+        # loops never ran at all
+        self.loop.push(min(self.scale_tick_s, horizon), self._event("scale"))
 
     def run(self, arrivals: List[Request], until: Optional[float] = None) -> Dict:
         if self._ran:
@@ -258,6 +272,9 @@ class ServingSystem:
             "final_replicas": sum(len(p.replicas) for p in self.pools.values()),
             "cache": fleet_cache_rollup(
                 p.cache_summary() for p in self.pools.values()
+            ),
+            "control": fleet_control_rollup(
+                p.control_summary() for p in self.pools.values()
             ),
             "trace": self.trace,
             "pools": {name: p.summary() for name, p in self.pools.items()},

@@ -54,6 +54,13 @@ keyed by (src, dst) cell-name pairs (RttMatrix: symmetric fallback, then
 the scalar), and every hop — policy charge, spill transit, cascade-stage
 spill — consults the pair's own value.
 
+Control is cell-local too (serving/control.py via each pool's
+PoolSpec.control): every cell's pools learn their own latency
+corrections and adapt their own batch caps from their own SLO signals —
+there is no fleet-wide controller to fight cell-local drift — and the
+per-cell control summaries roll up through `federated_rollup` next to
+the cache tallies.
+
 Caches are cell-local (serving/cache.py via each pool's PoolSpec.cache):
 a request spilled to a remote cell runs its ids through THAT cell's
 caches, so with per-cell hot sets a spill pays cold misses remotely —
@@ -456,7 +463,9 @@ class FederatedSystem:
             # start() marks each embedded system as started, so calling
             # run() directly on a federation cell raises
             cell.system.start(self._horizon)
-        self.loop.push(self.scale_tick_s, "scale")
+        # first fleet tick clamped into the horizon (engine.start does the
+        # same for each cell): short runs still trace and adapt
+        self.loop.push(min(self.scale_tick_s, self._horizon), "scale")
         self.loop.run()
         return self.summary()
 

@@ -25,6 +25,14 @@ pool's hit/miss/eviction/result-hit counters roll up per system and per
 federation via `fleet_cache_rollup`, and every pool traces its live
 hit-rate at each scale tick — so a latency regression is attributable to
 a cooling cache, not just observed at the front door.
+
+So does the adaptive control plane (serving/control.py):
+`fleet_control_rollup` sums per-pool control summaries (learned latency
+corrections + observation counts, adaptive-batch participation) per
+system and per federation, and every pool traces its effective
+`max_batch_items` and latency correction at each scale tick — a p99
+recovery is attributable to the controller narrowing batches or the
+online model re-learning a drifted calibration.
 """
 from __future__ import annotations
 
@@ -64,6 +72,33 @@ def fleet_cache_rollup(cache_summaries) -> Dict:
     return out
 
 
+def fleet_control_rollup(control_summaries) -> Dict:
+    """Sum control summaries into one fleet view of the adaptive
+    control plane (serving/control.py): how many pools learn their
+    latency online / adapt their batch size, total observation samples,
+    and the SAMPLE-WEIGHTED mean learned correction (1.0 when nothing
+    observed traffic — an unobserved fleet trusts its calibration).
+    Accepts per-pool summaries (ReplicaPool.control_summary()) and,
+    because the output keys are themselves accepted as input, per-cell
+    rollups — `federated_rollup` feeds cells' "control" blocks straight
+    back through, and the sample weighting keeps a one-sample cell from
+    diluting a heavily observed drifted one."""
+    out = {"online_pools": 0, "adaptive_batch_pools": 0, "samples": 0}
+    corr_sum = 0.0
+    for s in control_summaries:
+        out["online_pools"] += s.get(
+            "online_pools", int(bool(s.get("online_latency"))))
+        out["adaptive_batch_pools"] += s.get(
+            "adaptive_batch_pools", int(bool(s.get("adaptive_batch"))))
+        n = s.get("samples", 0)
+        out["samples"] += n
+        corr_sum += n * s.get("latency_correction",
+                              s.get("mean_latency_correction", 1.0))
+    out["mean_latency_correction"] = (
+        corr_sum / out["samples"] if out["samples"] else 1.0)
+    return out
+
+
 def federated_rollup(cells: Dict[str, Dict]) -> Dict[str, int]:
     """Sum per-cell summaries (each a ServingSystem.summary() dict plus a
     "spill" sub-dict) into fleet-wide counters. Latency percentiles do NOT
@@ -84,6 +119,11 @@ def federated_rollup(cells: Dict[str, Dict]) -> Dict[str, int]:
             out[key] += spill.get(key, 0)
     out["cache"] = fleet_cache_rollup(
         s.get("cache", {}) for s in cells.values()
+    )
+    # per-cell control planes roll up through the same helper (cells
+    # adapt independently; sample weighting keeps the fleet mean honest)
+    out["control"] = fleet_control_rollup(
+        s.get("control", {}) for s in cells.values()
     )
     return out
 

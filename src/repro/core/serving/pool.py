@@ -53,6 +53,19 @@ A pool with NO cache fetches every id row its traffic carries: the
 memory-bound baseline the cache exists to beat. Hit-rate feeds the trace,
 the summary and the routers' predicted miss cost.
 
+The control plane is per-pool too (serving/control.py, opt-in via a
+ControlConfig): an OnlineLatencyModel EWMA-corrects the offline-
+calibrated curve from each completed batch's (items, miss rows,
+measured seconds) — `dense_latency`, `predicted_latency` and the cost-
+model router then consult the corrected curve instead of trusting a
+possibly drifted calibration — and a BatchSizeController retunes the
+pool's EFFECTIVE `max_batch_items` each scale tick from SLO headroom
+(breach narrows for latency, headroom widens for throughput), traced
+per tick next to replicas/p99. The id-rows-per-item average feeding
+`predicted_miss_cost` is a windowed EWMA of per-batch ratios (it was a
+never-decaying lifetime counter), so a traffic-mix shift stops
+haunting the miss-cost prediction forever.
+
 Scaling is per-pool but capacity is fleet-wide: every grow request goes
 through the shared CapacityBudget, so heterogeneous pools compete for
 the same accelerators instead of each assuming it owns the cluster. In a
@@ -71,6 +84,9 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.serving.autoscaler import AutoScaler, CapacityBudget, ScalerConfig
 from repro.core.serving.cache import CacheConfig, EmbeddingCache, ResultCache
+from repro.core.serving.control import (
+    BatchSizeController, ControlConfig, Ewma, OnlineLatencyModel,
+)
 from repro.core.serving.events import EventLoop
 from repro.core.serving.metrics import SLOMonitor
 from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
@@ -125,6 +141,7 @@ class ReplicaPool:
         tiers: Optional[Dict[str, TierPolicy]] = None,
         event_key: Optional[str] = None,
         cache_cfg: Optional[CacheConfig] = None,
+        control_cfg: Optional[ControlConfig] = None,
     ):
         self.name = name
         # events are keyed by event_key, not name: a federation runs several
@@ -154,10 +171,22 @@ class ReplicaPool:
                 self.result_cache = ResultCache(
                     cache_cfg.result_capacity, cache_cfg.result_ttl_s
                 )
-        # running id-rows-per-item average: the routers' predicted miss
-        # cost for a prospective batch, learned from dispatched traffic
-        self._id_rows_seen = 0
-        self._items_seen = 0
+        # control plane (serving/control.py): online-corrected latency
+        # curve + SLO-aware effective item cap, both opt-in
+        self.control_cfg = control_cfg
+        ewma_alpha = control_cfg.ewma_alpha if control_cfg is not None else 0.25
+        self.model: Optional[OnlineLatencyModel] = None
+        if control_cfg is not None and control_cfg.online_latency:
+            self.model = OnlineLatencyModel(
+                spec.latency, spec.embed_fetch_s, alpha=ewma_alpha)
+        self.controller: Optional[BatchSizeController] = None
+        if control_cfg is not None and control_cfg.adapt_batch:
+            self.controller = BatchSizeController(
+                control_cfg, initial=cfg.max_batch_items)
+        # windowed id-rows-per-item average (per-batch ratios, EWMA): the
+        # routers' predicted miss cost for a prospective batch, learned
+        # from dispatched traffic and able to FORGET an old traffic mix
+        self._rows_per_item = Ewma(ewma_alpha)
 
         if budget is not None and budget.acquire(cfg.n_replicas) < cfg.n_replicas:
             raise ValueError(
@@ -174,34 +203,49 @@ class ReplicaPool:
         self.queued_cost = 0  # running sum of queue costs (O(1) router signal)
         self._batch_deadline: Optional[float] = None
         self.trace: Dict[str, List[float]] = {
-            "t": [], "replicas": [], "queue": [], "p99": [], "hit_rate": []
+            "t": [], "replicas": [], "queue": [], "p99": [], "hit_rate": [],
+            "max_batch_items": [], "latency_corr": []
         }
 
         loop.on(f"batch_timeout:{self.event_key}", self._handle_timeout)
         loop.on(f"batch_done:{self.event_key}", self._handle_done)
 
     # ---- routing signals ----
+    def dense_latency(self, items: int) -> float:
+        """Predicted dense service time at `items` work items: the
+        online-corrected curve when the control plane is learning one,
+        else the offline calibration — the ONE dense-latency lens every
+        predictor (predicted_latency, CostModelRouter.estimate) looks
+        through, so a drifted calibration stops misrouting as soon as
+        observations arrive."""
+        if self.model is not None:
+            return self.model.dense(items)
+        return self.spec.latency(items)
+
     def predicted_latency(self, now: float, cost: int = 1) -> float:
         """Router signal: wait for the freest replica + service time of the
         backlog this request would join (dense + predicted miss cost)."""
         ready = [r for r in self.replicas if r.ready_at <= now] or self.replicas
         wait = min(r.load(now) for r in ready)
         items = self.queued_cost + cost
-        return wait + self.spec.latency(items) + self.predicted_miss_cost(items)
+        return wait + self.dense_latency(items) + self.predicted_miss_cost(items)
 
     def predicted_miss_cost(self, items: int) -> float:
         """Expected embedding-fetch seconds for a batch of `items` work
-        items: the pool's learned id-rows-per-item average, discounted by
-        the live cache hit-rate (no cache = every row fetches). Zero until
-        the pool has dispatched id-carrying traffic — cold pools compete
-        on dense cost alone."""
-        if self.spec.embed_fetch_s <= 0.0 or self._items_seen == 0:
+        items: the pool's learned id-rows-per-item average (windowed
+        EWMA of per-batch ratios), discounted by the live cache hit-rate
+        (no cache = every row fetches). Zero until the pool has
+        dispatched id-carrying traffic — cold pools compete on dense
+        cost alone. The per-row fetch consults the online-corrected
+        model when one is learning."""
+        fetch = self.model.fetch_s if self.model is not None else self.spec.embed_fetch_s
+        if fetch <= 0.0 or self._rows_per_item.value is None:
             return 0.0
-        rows = self._id_rows_seen / self._items_seen * items
+        rows = self._rows_per_item.value * items
         miss_frac = (
             1.0 if self.embed_cache is None else 1.0 - self.embed_cache.hit_rate
         )
-        return rows * miss_frac * self.spec.embed_fetch_s
+        return rows * miss_frac * fetch
 
     def hit_rate(self) -> float:
         return self.embed_cache.hit_rate if self.embed_cache is not None else 0.0
@@ -225,7 +269,10 @@ class ReplicaPool:
             self.result_cache is not None
             and not force
             and req.ids is not None
-            and self.result_cache.get(now, req.ids) is not None
+            # signature = (ids, cost): a pointwise probe and a 512-candidate
+            # ranking request over the SAME ids are different computations
+            # and must never share a cached result
+            and self.result_cache.get(now, (req.ids, req.cost)) is not None
         ):
             req.t_enqueue = now
             req.stamp("enqueue", now)
@@ -254,10 +301,18 @@ class ReplicaPool:
             self._arm(now + self.cfg.max_wait_s)
         return True
 
+    def item_cap(self) -> Optional[int]:
+        """The pool's EFFECTIVE max_batch_items: the BatchSizeController's
+        live cap when SLO-aware batch sizing is on, else the static
+        configured value (None = no item budget)."""
+        if self.controller is not None:
+            return self.controller.cap
+        return self.cfg.max_batch_items
+
     def _batch_full(self) -> bool:
+        cap = self.item_cap()
         return len(self.queue) >= self.cfg.max_batch or (
-            self.cfg.max_batch_items is not None
-            and self.queued_cost >= self.cfg.max_batch_items
+            cap is not None and self.queued_cost >= cap
         )
 
     def _arm(self, deadline: float) -> None:
@@ -268,7 +323,7 @@ class ReplicaPool:
         """Pop the next batch off the queue head: up to max_batch requests
         AND (when item batching is on) max_batch_items work items. A single
         request larger than the item budget still dispatches — alone."""
-        cap = self.cfg.max_batch_items
+        cap = self.item_cap()
         k = 0  # split index, then one slice-delete: O(queue) per batch
         items = 0
         while k < len(self.queue) and k < self.cfg.max_batch:
@@ -290,18 +345,24 @@ class ReplicaPool:
         # row extends the batch's service time by spec.embed_fetch_s. A
         # pool with no cache fetches every row — the memory-bound baseline.
         miss_rows = 0
+        id_rows = 0
         for r in take:
             if r.ids:
-                self._id_rows_seen += len(r.ids)
+                id_rows += len(r.ids)
                 if self.embed_cache is not None:
                     miss_rows += self.embed_cache.lookup(r.ids)[1]
                 else:
                     miss_rows += len(r.ids)
-        self._items_seen += items
+        if items > 0:
+            self._rows_per_item.update(id_rows / items)
         start, done = rep.start_batch(now, items, miss_rows)
         for r in take:
             r.stamp("start", start)
-        self.loop.push(done, f"batch_done:{self.event_key}", (rep.rid, take))
+        # the payload carries the batch observation (items, miss rows,
+        # service start) so batch_done can feed the online latency model
+        # the MEASURED service time without re-deriving the batch shape
+        self.loop.push(done, f"batch_done:{self.event_key}",
+                       (rep.rid, take, items, miss_rows, start))
 
     def _flush(self, now: float) -> None:
         while self.queue:
@@ -321,14 +382,18 @@ class ReplicaPool:
             self._flush(now)
 
     def _handle_done(self, now: float, payload) -> None:
-        rep_id, take = payload
+        rep_id, take, items, miss_rows, started = payload
         self._registry[rep_id].in_flight -= 1
+        if self.model is not None:
+            # one observation per completed batch: the measured service
+            # seconds against the offline prediction for this batch shape
+            self.model.observe(items, miss_rows, now - started)
         for r in take:
             r.stamp("done", now)
             self.monitor.record(now, now - r.t_enqueue)
             if self.result_cache is not None and r.stage == 0 and r.ids is not None:
                 # freshly computed scores become servable repeats
-                self.result_cache.put(now, r.ids)
+                self.result_cache.put(now, (r.ids, r.cost))
             self.on_complete(now, r, self)
 
     # ---- scaling ----
@@ -348,6 +413,11 @@ class ReplicaPool:
             # pool-local shedding reacts to the pool's OWN stage latency,
             # not the fleet-wide end-to-end signal
             self.limiter.adapt(stats["p99"], self.monitor.slo_s)
+        if self.controller is not None and self.monitor.slo_s is not None:
+            # SLO-aware batch sizing: same per-pool windowed p99 signal
+            # the limiter adapts from — breach narrows the effective item
+            # cap (latency), headroom widens it (throughput)
+            self.controller.tick(stats["p99"], self.monitor.slo_s)
         if self.cfg.autoscale:
             util = self.utilisation(now, tick_s)
             want = self.scaler.desired(now, len(self.replicas), util)
@@ -376,6 +446,10 @@ class ReplicaPool:
         self.trace["queue"].append(len(self.queue))
         self.trace["p99"].append(stats["p99"])
         self.trace["hit_rate"].append(self.hit_rate())
+        # control-plane visibility: 0.0 = no item cap in force
+        self.trace["max_batch_items"].append(float(self.item_cap() or 0))
+        self.trace["latency_corr"].append(
+            self.model.correction if self.model is not None else 1.0)
 
     # ---- reporting ----
     def cache_summary(self) -> Dict:
@@ -391,6 +465,20 @@ class ReplicaPool:
             out["result_hits"] = self.result_cache.hits
         return out
 
+    def control_summary(self) -> Dict:
+        """Control-plane counters in one flat dict (identity values when
+        no control is configured, so fleet rollups work unconditionally):
+        the learned latency correction + sample count and the effective
+        item cap (0 = uncapped)."""
+        return {
+            "online_latency": self.model is not None,
+            "latency_correction": (
+                self.model.correction if self.model is not None else 1.0),
+            "samples": self.model.samples if self.model is not None else 0,
+            "adaptive_batch": self.controller is not None,
+            "max_batch_items": int(self.item_cap() or 0),
+        }
+
     def summary(self) -> Dict:
         tot = self.monitor.totals()
         return {
@@ -405,5 +493,6 @@ class ReplicaPool:
             "max_replicas": max(self.trace["replicas"], default=len(self.replicas)),
             "served_items": sum(r.served for r in self._registry.values()),
             "cache": self.cache_summary(),
+            "control": self.control_summary(),
             "trace": self.trace,
         }

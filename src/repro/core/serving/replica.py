@@ -70,17 +70,26 @@ class LatencyModel:
 
 @dataclasses.dataclass
 class ReplicaSpec:
+    """`latency` is the OFFLINE-calibrated curve — what routers, pools
+    and planning math predict from. `true_latency`, when set, is what
+    batches actually take: the drift/interference/mis-calibration model
+    the control plane (serving/control.py) exists to learn back. None
+    (the default) means the calibration is accurate."""
+
     variant: str  # which Table-I variant this pool serves
     latency: LatencyModel
     cold_start_s: float = 8.0  # load weights + compile
     warm_start_s: float = 0.25  # pre-initialized pool activation
     embed_fetch_s: float = 0.0  # per MISSED embedding row (caching layer)
+    true_latency: Optional[LatencyModel] = None  # observed curve if drifted
 
     def service_time(self, items: int, miss_rows: int = 0) -> float:
-        """Cache-aware decomposition: calibrated dense compute at `items`
-        work items + the embedding-fetch cost of the rows the pool's
-        hot-ID cache missed for this batch."""
-        return self.latency(items) + miss_rows * self.embed_fetch_s
+        """Cache-aware decomposition: ACTUAL dense compute at `items`
+        work items (the drifted curve when calibration is off) + the
+        embedding-fetch cost of the rows the pool's hot-ID cache missed
+        for this batch."""
+        dense = self.true_latency if self.true_latency is not None else self.latency
+        return dense(items) + miss_rows * self.embed_fetch_s
 
 
 def sustainable_rate(
@@ -102,13 +111,19 @@ def sustainable_rate(
     operating-point model the benchmarks, tests and examples share to
     place offered load relative to a fleet's capacity (cold: hit_rate 0;
     warm: the cache's steady-state hit-rate). Clamped below by 1 rps for
-    hosts whose calibrated base exceeds the batching window."""
+    hosts whose calibrated base exceeds the batching window. A FLAT
+    curve with no embedding traffic (marginal + miss_fetch == 0, e.g.
+    `LatencyModel.analytic(base, 0.0)` and ids_per_request 0) means
+    per-request cost is pure base amortisation: the rate is unbounded
+    when the base fits the batching window, else the 1 rps floor —
+    never a ZeroDivisionError."""
     b1 = spec.latency(1)
     marginal = (spec.latency(32) - b1) / 31.0
     miss_fetch = (1.0 - hit_rate) * ids_per_request * spec.embed_fetch_s
-    return max(
-        (replicas * max_wait_s - b1) / (max_wait_s * (marginal + miss_fetch)), 1.0
-    )
+    denom = max_wait_s * (marginal + miss_fetch)
+    if denom <= 0.0:
+        return float("inf") if replicas * max_wait_s > b1 else 1.0
+    return max((replicas * max_wait_s - b1) / denom, 1.0)
 
 
 class Replica:

@@ -13,10 +13,13 @@ Public API
 Invariants: all policies are deterministic given their constructor
 arguments — the power-of-two sampler draws from its own seeded generator,
 so two runs of the same trace through the same policy are bit-identical.
-Policies only READ pool signals (`predicted_latency`, `recent_p99`,
-`queue`, `queued_cost`, `replicas`, `predicted_miss_cost`, `hit_rate`) —
-they never mutate pool state. All latency signals are in seconds; `cost`
-is in work items.
+Policies only READ pool signals (`predicted_latency`, `dense_latency`,
+`recent_p99`, `queue`, `queued_cost`, `replicas`, `predicted_miss_cost`,
+`hit_rate`) — they never mutate pool state. All latency signals are in
+seconds; `cost` is in work items. Dense-latency signals go through
+`pool.dense_latency`, which serves the ONLINE-corrected curve when the
+pool runs a control plane (serving/control.py) — routing decisions track
+observed service times, not just the offline calibration.
 
 DeepRecSys (arXiv 2001.02772) motivates the pool-level decision: with
 heterogeneous variants live at once, WHERE a query lands matters as much
@@ -113,11 +116,15 @@ class CostModelRouter(Router):
         """slot wait + dense service of the joined batch + predicted
         embedding-miss cost at the pool's LIVE hit-rate — a warm cache
         makes a pool genuinely cheaper than an identical cold one, and
-        the router sees it (caching layer, serving/cache.py)."""
+        the router sees it (caching layer, serving/cache.py). The dense
+        term goes through `pool.dense_latency`: with a control plane
+        (serving/control.py) that is the ONLINE-corrected curve, so a
+        mis-calibrated or drifted spec stops misrouting as soon as
+        observed service times disagree with it."""
         ready = [r for r in pool.replicas if r.ready_at <= now] or pool.replicas
         slot_wait = sum(r.residual(now) for r in ready) / len(ready)
         items = pool.queued_cost + cost
-        return slot_wait + pool.spec.latency(items) + pool.predicted_miss_cost(items)
+        return slot_wait + pool.dense_latency(items) + pool.predicted_miss_cost(items)
 
 
 class SLOAwareRouter(Router):
@@ -146,7 +153,7 @@ class SLOAwareRouter(Router):
             for name in self.quality_order:
                 if name in by_name:
                     return by_name[name]
-        return min(meeting, key=lambda p: p.spec.latency(req.cost))
+        return min(meeting, key=lambda p: p.dense_latency(req.cost))
 
 
 ROUTERS: Dict[str, type] = {

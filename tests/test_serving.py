@@ -1,9 +1,11 @@
 """Serving-stack tests (paper §IV.B behaviours) against the multi-pool API:
 event kernel, replica pools, router policies, shared capacity budget,
 cascade inference, rate limiting, autoscaling, the multi-cell federation
-(cross-cell routing + spillover), and the hot-ID caching layer
+(cross-cell routing + spillover), the hot-ID caching layer
 (eviction policies, miss-cost service times, result cache, conservation
-with caching, per-cell-pair RTT matrix)."""
+with caching, per-cell-pair RTT matrix), and the adaptive control plane
+(online-learned latency corrections, SLO-aware batch sizing, control-
+loop regressions)."""
 import dataclasses
 
 import numpy as np
@@ -14,6 +16,9 @@ from repro.core.serving.cache import (
     CACHE_POLICIES, CacheConfig, EmbeddingCache, ResultCache, make_cache_policy,
 )
 from repro.core.serving.cascade import CascadeConfig
+from repro.core.serving.control import (
+    BatchSizeController, ControlConfig, Ewma, OnlineLatencyModel,
+)
 from repro.core.serving.engine import (
     ElasticEngine, EngineConfig, PoolSpec, Request, ServingSystem,
     attach_zipf_ids, poisson_arrivals,
@@ -23,7 +28,9 @@ from repro.core.serving.federation import (
     CELL_POLICIES, CellSpec, FederatedSystem, RttMatrix, assign_homes,
     make_cell_policy,
 )
-from repro.core.serving.metrics import SLOMonitor, federated_rollup
+from repro.core.serving.metrics import (
+    SLOMonitor, federated_rollup, fleet_control_rollup,
+)
 from repro.core.serving.pool import PoolConfig, ReplicaPool
 from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
 from repro.core.serving.replica import (
@@ -1101,3 +1108,289 @@ def test_spilled_stage_pays_per_pair_rtt():
     assert len(spilled) == res["cascade_spilled"]
     for g in spilled:
         assert g == pytest.approx(pair_rtt, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# adaptive control plane (serving/control.py) + control-loop regressions
+# ---------------------------------------------------------------------------
+
+
+def test_sustainable_rate_flat_curve_no_zero_division():
+    """Regression: a flat latency curve with no embedding traffic made
+    marginal + miss_fetch == 0 and sustainable_rate divide by zero."""
+    flat = ReplicaSpec("m", LatencyModel.analytic(0.01, 0.0))
+    # base fits the batching window: unbounded, not a crash
+    assert sustainable_rate(flat, 2, 0.02) == float("inf")
+    # base exceeds the window: the documented 1 rps floor
+    assert sustainable_rate(flat, 1, 0.005) == 1.0
+    # embedding traffic restores a finite equilibrium on the same curve
+    fetchy = dataclasses.replace(flat, embed_fetch_s=1e-3)
+    rate = sustainable_rate(fetchy, 2, 0.02, ids_per_request=8)
+    assert np.isfinite(rate) and rate > 1.0
+
+
+def test_result_cache_keys_on_ids_and_cost():
+    """Regression: the result-cache signature was req.ids alone, so a
+    pointwise probe and a 512-candidate ranking request over the same
+    ids shared a cached result."""
+    loop = EventLoop()
+    pool = ReplicaPool(
+        "p", _spec(), PoolConfig(n_replicas=1, autoscale=False,
+                                 priority_bypass=False, max_wait_s=0.005),
+        loop, slo_s=1.0,
+        cache_cfg=CacheConfig(64, "lru", result_capacity=16, result_ttl_s=60.0))
+    ids = (1, 2, 3)
+    pool.submit(0.0, Request(0, 0.0, "tier0", cost=1, ids=ids))
+    loop.run()
+    # same ids, different cost: a different computation — must be served,
+    # not replayed from the pointwise result
+    rank = Request(1, 1.0, "tier0", cost=512, ids=ids)
+    pool.submit(1.0, rank)
+    loop.run()
+    assert rank.timeline["s0_done"] > rank.timeline["s0_enqueue"]
+    # same ids, same cost: a true repeat — instant
+    repeat = Request(2, 2.0, "tier0", cost=1, ids=ids)
+    pool.submit(2.0, repeat)
+    loop.run()
+    assert repeat.timeline["s0_done"] == repeat.timeline["s0_enqueue"]
+    assert pool.result_cache.hits == 1
+
+
+def test_first_scale_tick_clamped_into_short_horizon():
+    """Regression: with horizon < scale_tick_s the first scale event
+    fired past the horizon — traces stayed empty and the limiter /
+    scaler / batch controller never adapted on short runs."""
+    eng = ElasticEngine(_spec("m", 0.002, 1e-5),
+                        EngineConfig(n_replicas=1, autoscale=False))
+    arr = poisson_arrivals(lambda t: 100.0, 0.4, seed=50)
+    res = eng.run(arr, until=0.4)
+    assert res["trace"]["t"] == [0.4]
+    assert res["pools"]["m"]["trace"]["t"] == [0.4]
+
+
+def test_first_scale_tick_clamped_in_federation():
+    fed = FederatedSystem({"only": _cell_spec()}, policy="sticky",
+                          slo_p99_s=0.15)
+    arr = poisson_arrivals(lambda t: 100.0, 0.4, seed=51, priority_frac=0.0)
+    res = fed.run(arr, until=0.4)
+    assert res["trace"]["t"] == [0.4]
+    assert res["cells"]["only"]["trace"]["t"] == [0.4]
+
+
+def test_ewma_first_sample_exact_then_decays():
+    with pytest.raises(ValueError):
+        Ewma(1.5)
+    e = Ewma(0.5)
+    assert e.value is None
+    assert e.update(4.0) == 4.0  # first sample initialises exactly
+    assert e.update(8.0) == 6.0
+    assert e.samples == 2
+
+
+def test_online_latency_model_converges_on_miscalibration():
+    """A spec whose offline calibration is 2x off: the correction locks
+    onto the observed/offline ratio and the corrected curve matches the
+    true one at every batch size."""
+    offline = LatencyModel.analytic(0.01, 1e-4)
+    truth = LatencyModel.analytic(0.02, 2e-4)
+    model = OnlineLatencyModel(offline, embed_fetch_s=1e-3, alpha=0.25)
+    assert model.correction == 1.0  # unobserved: trust the calibration
+    assert model.dense(64) == pytest.approx(offline(64))
+    for items in (1, 8, 32, 128, 512) * 4:
+        model.observe(items, 0, truth(items))
+    assert model.correction == pytest.approx(2.0, abs=1e-9)
+    for items in (1, 16, 100, 1000):
+        assert model.dense(items) == pytest.approx(truth(items), rel=1e-9)
+    assert model.fetch_s == pytest.approx(2e-3)  # fetch corrected too
+    # noisy ratios converge to the mean ratio, and keep tracking drift
+    noisy = OnlineLatencyModel(offline, alpha=0.25)
+    for i in range(60):
+        noisy.observe(32, 0, (1.5 if i % 2 else 2.5) * offline(32))
+    assert noisy.correction == pytest.approx(2.0, abs=0.3)
+
+
+def test_batch_size_controller_narrow_widen_clamp():
+    cfg = ControlConfig(min_batch_items=64, max_batch_items=1024,
+                        widen=2.0, narrow=0.5, headroom=0.5)
+    c = BatchSizeController(cfg, initial=256)
+    assert c.cap == 256
+    assert c.tick(p99=1.0, slo_s=0.1) == 128  # breach narrows
+    assert c.tick(p99=1.0, slo_s=0.1) == 64
+    assert c.tick(p99=1.0, slo_s=0.1) == 64  # clamped at the floor
+    assert c.tick(p99=0.07, slo_s=0.1) == 64  # in the deadband: hold
+    assert c.tick(p99=0.0, slo_s=0.1) == 64  # no signal: hold
+    assert c.tick(p99=0.01, slo_s=0.1) == 128  # headroom widens
+    for _ in range(10):
+        c.tick(p99=0.01, slo_s=0.1)
+    assert c.cap == 1024  # clamped at the ceiling
+    # an uncapped pool starts the controller at the clamp ceiling
+    assert BatchSizeController(cfg, initial=None).cap == 1024
+    # a pool configured TIGHTER than the controller's default floor keeps
+    # its own cap as the floor — adaptation never silently raises it
+    tight = BatchSizeController(cfg, initial=8)
+    assert tight.cap == 8
+    assert tight.tick(p99=1.0, slo_s=0.1) == 8
+
+
+def test_adaptive_cap_binds_batch_splits():
+    """The controller's LIVE cap — not the static config — closes and
+    splits batches: after a breach narrows the cap, dispatched batches
+    respect the narrowed budget."""
+    loop = EventLoop()
+    pool = ReplicaPool(
+        "p", _spec("m", 0.005, 1e-4),
+        PoolConfig(max_batch=64, max_batch_items=256, max_wait_s=0.01,
+                   n_replicas=2, autoscale=False, priority_bypass=False),
+        loop, slo_s=0.1,
+        control_cfg=ControlConfig(online_latency=False, adapt_batch=True,
+                                  min_batch_items=32, narrow=0.5))
+    batches = []
+    orig = pool._dispatch
+    pool._dispatch = lambda now, take: (batches.append(sum(r.cost for r in take)),
+                                        orig(now, take))
+    pool.controller.tick(1.0, 0.1)  # breach: 256 -> 128
+    assert pool.item_cap() == 128
+    for i in range(16):
+        loop.push(0.001 * i, "arrive", Request(i, 0.001 * i, "tier0", cost=16))
+    loop.on("arrive", lambda now, r: pool.submit(now, r))
+    loop.run()
+    assert sum(batches) == 16 * 16
+    assert max(batches) <= 128  # the narrowed cap, not the configured 256
+
+
+def _control_system(router, *, drift=False, control=True, **kw):
+    """Twin pools (same TRUE curve, so both compete for every request)
+    with the full control plane on; the "drifted" pool's offline
+    calibration optionally claims 2x faster than its true curve."""
+    truth = LatencyModel.analytic(0.02, 1e-3)
+    drifted_spec = ReplicaSpec(
+        "drifted",
+        LatencyModel.analytic(0.01, 5e-4) if drift else truth,
+        cold_start_s=5.0, warm_start_s=0.2,
+        true_latency=truth if drift else None)
+    ctl = ControlConfig() if control else None
+    pcfg = lambda: PoolConfig(n_replicas=2, max_batch_items=256,
+                              autoscale=False, priority_bypass=False)
+    pools = {
+        "accurate": PoolSpec(ReplicaSpec("accurate", truth, cold_start_s=5.0,
+                                         warm_start_s=0.2),
+                             pcfg(), control=ctl),
+        "drifted": PoolSpec(drifted_spec, pcfg(), control=ctl),
+    }
+    return ServingSystem(pools, router, **kw)
+
+
+@pytest.mark.parametrize("policy", sorted(ROUTERS))
+def test_request_conservation_with_adaptive_control(policy):
+    """Conservation (arrived == completed + rejected + in_queue, queues
+    drained) holds for every router with online latency learning AND
+    adaptive batch sizing live."""
+    kw = {"seed": 5} if policy == "power_of_two" else {}
+    sys_ = _control_system(
+        make_router(policy, **kw), drift=True,
+        tiers={"tier0": TierPolicy(300, 30), "tier1": TierPolicy(300, 30)},
+        slo_p99_s=0.15)
+    arr = poisson_arrivals(SPIKE, 30.0, seed=52)
+    res = sys_.run(arr, until=30.0)
+    assert res["arrived"] == len(arr)
+    assert res["arrived"] == res["completed"] + res["rejected"] + res["in_queue"]
+    assert res["in_queue"] == 0
+    assert sum(p["completed"] for p in res["pools"].values()) == res["completed"]
+    assert res["control"]["online_pools"] == 2
+    assert res["control"]["samples"] > 0
+
+
+def test_adaptive_control_deterministic_replay():
+    """Two identical runs with the full control plane adapting (learned
+    corrections, moving batch caps) produce bit-identical timelines,
+    traces and summaries."""
+    runs, timelines = [], []
+    for _ in range(2):
+        sys_ = _control_system(make_router("cost_model"), drift=True,
+                               slo_p99_s=0.15)
+        arr = poisson_arrivals(SPIKE, 20.0, seed=53)
+        runs.append(sys_.run(arr, until=20.0))
+        timelines.append({r.rid: dict(r.timeline) for r in arr})
+    assert runs[0]["p99"] == runs[1]["p99"]
+    assert runs[0]["completed"] == runs[1]["completed"]
+    assert timelines[0] == timelines[1]
+    for name in ("accurate", "drifted"):
+        a, b = runs[0]["pools"][name], runs[1]["pools"][name]
+        assert a["trace"]["max_batch_items"] == b["trace"]["max_batch_items"]
+        assert a["trace"]["latency_corr"] == b["trace"]["latency_corr"]
+        assert a["control"] == b["control"]
+
+
+def test_online_model_recovers_miscalibrated_system():
+    """System-level convergence: under cost-model routing, the drifted
+    pool's learned correction converges onto the 2x mis-calibration
+    while the accurate twin stays at ~1.0 (the p99-recovery claim at a
+    tuned operating point is asserted by bench_serving experiment 7)."""
+    res = {}
+    for control in (False, True):
+        sys_ = _control_system(make_router("cost_model"), drift=True,
+                               control=control, slo_p99_s=0.5,
+                               adaptive_shedding=False)
+        arr = poisson_arrivals(lambda t: 45.0, 20.0, seed=54,
+                               priority_frac=0.0, cost=64)
+        res[control] = sys_.run(arr, until=20.0)
+    ctl = res[True]["pools"]["drifted"]["control"]
+    assert ctl["samples"] > 10
+    assert ctl["latency_correction"] == pytest.approx(2.0, abs=0.2)
+    acc = res[True]["pools"]["accurate"]["control"]
+    assert acc["latency_correction"] == pytest.approx(1.0, abs=0.1)
+    # the static run keeps trusting the stale spec (identity correction)
+    assert res[False]["pools"]["drifted"]["control"]["latency_correction"] == 1.0
+    # the rollup sees the fleet's learned state
+    roll = res[True]["control"]
+    assert roll["online_pools"] == roll["adaptive_batch_pools"] == 2
+    assert 1.0 < roll["mean_latency_correction"] < 2.0
+
+
+def test_fleet_control_rollup_identity_when_uncontrolled():
+    assert fleet_control_rollup([]) == {
+        "online_pools": 0, "adaptive_batch_pools": 0, "samples": 0,
+        "mean_latency_correction": 1.0}
+    # the mean is sample-weighted (a one-sample pool cannot dilute a
+    # heavily observed drifted one) and the output keys round-trip as
+    # input, which is how federated_rollup reuses the helper per cell
+    roll = fleet_control_rollup([
+        {"online_latency": True, "adaptive_batch": False,
+         "latency_correction": 2.0, "samples": 99},
+        {"online_latency": True, "adaptive_batch": True,
+         "latency_correction": 1.0, "samples": 1},
+    ])
+    assert roll["online_pools"] == 2 and roll["adaptive_batch_pools"] == 1
+    assert roll["mean_latency_correction"] == pytest.approx(1.99)
+    assert fleet_control_rollup([roll]) == roll
+    sys_ = _hetero_system(make_router("least_loaded"))
+    arr = poisson_arrivals(lambda t: 100.0, 4.0, seed=55)
+    res = sys_.run(arr, until=6.0)
+    assert res["control"]["online_pools"] == 0
+    assert res["control"]["mean_latency_correction"] == 1.0
+
+
+def test_windowed_rows_per_item_forgets_old_mix():
+    """Regression for the lifetime average: after the traffic mix shifts
+    from 16 ids/item to 2 ids/item, the windowed estimator tracks the
+    new mix instead of being dragged by everything ever dispatched."""
+    loop = EventLoop()
+    spec = dataclasses.replace(_spec("m", 0.005, 1e-4), embed_fetch_s=1e-4)
+    pool = ReplicaPool("p", spec,
+                       PoolConfig(n_replicas=2, autoscale=False,
+                                  priority_bypass=False, max_batch=1),
+                       loop, slo_s=1.0)
+    t = 0.0
+    for i in range(50):  # old mix: 16 ids per 1-item request
+        pool.submit(t, Request(i, t, "tier0", cost=1, ids=tuple(range(16))))
+        t += 0.05
+        loop.run()
+    for i in range(50, 80):  # new mix: 2 ids per request
+        pool.submit(t, Request(i, t, "tier0", cost=1, ids=(1, 2)))
+        t += 0.05
+        loop.run()
+    rows_per_item = pool._rows_per_item.value
+    assert rows_per_item == pytest.approx(2.0, abs=0.05)  # lifetime avg ~10.75
+    # and the miss-cost prediction follows (no cache: every row fetches)
+    assert pool.predicted_miss_cost(10) == pytest.approx(
+        rows_per_item * 10 * 1e-4)
