@@ -1,0 +1,246 @@
+"""Event-kernel benchmark: the simulator measuring itself.
+
+Two synthetic workloads, each run through the PRE-PR kernel ("legacy":
+the seed's single binary heap with every arrival pushed upfront) and the
+fast path ("fast": calendar-queue scheduler + lazily merged arrival
+stream):
+
+  kernel   the event loop alone — N mostly-monotone arrivals where every
+           64th handler schedules an out-of-band completion, i.e. the
+           push pattern pools generate, with no pool work attached. This
+           isolates scheduler + dispatch cost and is where the >= 5x
+           headline is measured.
+  system   a full ServingSystem (2 pools, autoscaling, admission,
+           batching) under Poisson traffic — how much of the end-to-end
+           wall clock the kernel win actually buys back.
+
+Each (workload, mode, n) cell runs in its OWN subprocess so peak RSS
+(resource.ru_maxrss) is attributable to that cell — the legacy mode's
+N-tuple heap shows up as resident memory the streamed mode never
+allocates.
+
+`--smoke` keeps the 100k and 1M kernel cells (the 1M run IS the CI
+criterion) but shrinks the system horizon, asserts events/sec floors,
+and a CONSERVATIVE speedup floor (the demonstrated speedup is >= 5x;
+the floor is set low enough to survive noisy shared CI runners).
+`--json PATH` dumps every cell as a perf artifact (BENCH_engine.json)
+so the kernel's own perf trajectory is tracked alongside
+BENCH_serving.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import subprocess
+import sys
+import time
+
+# the kernel cells need no jax and no benchmarks.common — keep it that way
+from repro.core.serving.events import EventLoop
+
+SMOKE_SPEEDUP_FLOOR = 2.5  # conservative CI floor; demonstrated >= 5x
+SMOKE_EVENTS_PER_S_FLOOR = 200_000.0  # fast kernel mode, 1M arrivals
+
+
+# ---------------------------------------------------------------------------
+# workloads (run inside the worker subprocess)
+# ---------------------------------------------------------------------------
+
+
+def kernel_cell(mode: str, n: int) -> dict:
+    """The loop alone: n arrivals 10us apart; every 64th arrival's
+    handler pushes a completion 2ms out (an out-of-band push landing in
+    the calendar's current window). legacy = heap scheduler + one pushed
+    tuple per arrival (the pre-PR kernel, bit-for-bit); fast = calendar
+    scheduler + lazy arrival stream."""
+    loop = EventLoop(scheduler="heap" if mode == "legacy" else "calendar")
+
+    def on_arrive(t, payload):
+        if not (payload & 63):
+            loop.push(t + 0.002, "done", payload)
+
+    loop.on("arrive", on_arrive)
+    loop.on("done", lambda t, p: None)
+
+    dt = 1e-5
+    t0 = time.perf_counter()
+    if mode == "legacy":
+        for i in range(n):
+            loop.push(i * dt, "arrive", i)
+    else:
+        loop.add_stream("arrive", ((i * dt, i) for i in range(n)))
+    loop.run()
+    wall = time.perf_counter() - t0
+    return {"events": loop.processed, "wall_s": wall}
+
+
+def system_cell(mode: str, n: int) -> dict:
+    """Full serving stack under Poisson traffic sized to ~n arrivals.
+    legacy reproduces the pre-PR ServingSystem.run: heap scheduler and
+    every arrival pushed upfront; fast is the shipped run() path."""
+    from repro.core.serving.engine import (
+        PoolSpec, ServingSystem, poisson_arrivals,
+    )
+    from repro.core.serving.pool import PoolConfig
+    from repro.core.serving.replica import LatencyModel, ReplicaSpec
+
+    rate = 2000.0
+    horizon = n / rate
+    arrivals = poisson_arrivals(lambda t: rate, horizon, seed=0)
+    spec = ReplicaSpec("bench", LatencyModel.analytic(0.004, 1.5e-4),
+                       cold_start_s=5.0, warm_start_s=0.2)
+    pools = {
+        name: PoolSpec(spec, PoolConfig(n_replicas=2, max_batch=64,
+                                        max_wait_s=0.005))
+        for name in ("a", "b")
+    }
+    sys_ = ServingSystem(pools, slo_p99_s=0.15, capacity=16,
+                         scheduler="heap" if mode == "legacy" else "calendar")
+    t0 = time.perf_counter()
+    if mode == "legacy":
+        # the pre-PR ServingSystem.run, replayed on its public pieces:
+        # one pushed heap tuple per arrival, then drain
+        for r in arrivals:
+            sys_.loop.push(r.t_arrive, "arrive", r)
+        sys_.start(horizon)
+        sys_.loop.run()
+        sys_.summary()
+    else:
+        sys_.run(arrivals, until=horizon)
+    wall = time.perf_counter() - t0
+    return {"events": sys_.loop.processed, "wall_s": wall}
+
+
+WORKLOADS = {"kernel": kernel_cell, "system": system_cell}
+
+
+def worker(spec: dict) -> dict:
+    row = WORKLOADS[spec["workload"]](spec["mode"], spec["n"])
+    # Linux reports ru_maxrss in KiB; this is the subprocess's own peak
+    rss_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    row.update(spec)
+    row["peak_rss_mb"] = rss_kb / 1024.0
+    row["events_per_s"] = row["events"] / max(row["wall_s"], 1e-9)
+    return row
+
+
+def run_cell(spec: dict) -> dict:
+    """One (workload, mode, n) cell in its own interpreter, so each
+    cell's peak RSS is its own."""
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--worker", json.dumps(spec)],
+        capture_output=True, text=True, env=os.environ.copy(),
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"bench cell {spec} failed:\n{proc.stdout}\n{proc.stderr}")
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
+def run(smoke: bool = False) -> list:
+    cells = [
+        {"workload": "kernel", "mode": mode, "n": n}
+        for n in (100_000, 1_000_000)
+        for mode in ("legacy", "fast")
+    ] + [
+        {"workload": "system", "mode": mode, "n": 20_000 if smoke else 200_000}
+        for mode in ("legacy", "fast")
+    ]
+    rows = []
+    for spec in cells:
+        row = run_cell(spec)
+        rows.append(row)
+        print(f"{row['workload']},{row['mode']},{row['n']},"
+              f"{row['events']},{row['events_per_s']:.0f},"
+              f"{row['wall_s']:.2f},{row['peak_rss_mb']:.1f}", flush=True)
+    return rows
+
+
+def speedups(rows: list) -> dict:
+    """fast-over-legacy events/sec ratio per (workload, n) pair."""
+    by_key = {(r["workload"], r["n"], r["mode"]): r for r in rows}
+    out = {}
+    for (workload, n, mode) in list(by_key):
+        if mode != "fast":
+            continue
+        legacy = by_key.get((workload, n, "legacy"))
+        if legacy:
+            out[f"{workload}_{n}"] = (
+                by_key[(workload, n, "fast")]["events_per_s"]
+                / legacy["events_per_s"])
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI guard: smaller system cell + perf-floor asserts "
+                         "(the 100k/1M kernel cells always run)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="dump every cell as a JSON perf artifact, "
+                         "e.g. BENCH_engine.json")
+    ap.add_argument("--profile", action="store_true",
+                    help="run under cProfile and print the top-25 "
+                         "cumulative table (in-process, no subprocesses: "
+                         "RSS numbers are fleet-wide, not per-cell)")
+    ap.add_argument("--worker", metavar="JSON", default=None,
+                    help=argparse.SUPPRESS)  # internal: one cell, then exit
+    args = ap.parse_args(argv)
+
+    if args.worker:
+        print(json.dumps(worker(json.loads(args.worker))))
+        return None
+
+    print("workload,mode,n,events,events_per_s,wall_s,peak_rss_mb")
+    if args.profile:
+        # profile in-process (subprocess RSS isolation would hide the
+        # profile): run each cell's workload directly. Script-mode runs
+        # have benchmarks/ itself on sys.path, not the repo root.
+        try:
+            from benchmarks.profiling import profiled
+        except ImportError:
+            from profiling import profiled
+
+        rows = profiled(
+            lambda: [worker(s) for s in (
+                {"workload": "kernel", "mode": "legacy", "n": 100_000},
+                {"workload": "kernel", "mode": "fast", "n": 100_000},
+            )]
+        )
+        for row in rows:
+            print(f"{row['workload']},{row['mode']},{row['n']},"
+                  f"{row['events']},{row['events_per_s']:.0f},"
+                  f"{row['wall_s']:.2f},{row['peak_rss_mb']:.1f}")
+    else:
+        rows = run(smoke=args.smoke)
+
+    ratios = speedups(rows)
+    for key, ratio in sorted(ratios.items()):
+        print(f"speedup_{key}={ratio:.2f}x")
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"bench": "engine", "smoke": args.smoke,
+                       "rows": rows, "speedups": ratios}, fh, indent=1,
+                      default=float)
+        print(f"# wrote {len(rows)} cells to {args.json}")
+
+    if args.smoke and not args.profile:
+        fast_1m = next(r for r in rows
+                       if r["workload"] == "kernel" and r["n"] == 1_000_000
+                       and r["mode"] == "fast")
+        assert fast_1m["events_per_s"] >= SMOKE_EVENTS_PER_S_FLOOR, (
+            f"fast kernel fell below the events/sec floor: "
+            f"{fast_1m['events_per_s']:,.0f} < {SMOKE_EVENTS_PER_S_FLOOR:,.0f}")
+        assert ratios["kernel_1000000"] >= SMOKE_SPEEDUP_FLOOR, (
+            f"calendar+stream kernel speedup fell below the CI floor: "
+            f"{ratios['kernel_1000000']:.2f}x < {SMOKE_SPEEDUP_FLOOR}x")
+        print(f"smoke_floors_ok=True (>= {SMOKE_SPEEDUP_FLOOR}x, "
+              f">= {SMOKE_EVENTS_PER_S_FLOOR:,.0f} ev/s)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

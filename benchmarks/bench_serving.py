@@ -575,8 +575,21 @@ def main(argv=None):
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also dump every experiment row (p99/throughput/...)"
                          " as a JSON perf artifact, e.g. BENCH_serving.json")
+    ap.add_argument("--profile", action="store_true",
+                    help="run under cProfile and print the top-25 cumulative"
+                         " table (hot-loop regressions diagnosable without"
+                         " editing code)")
     args = ap.parse_args(argv)
-    rows = run(smoke=args.smoke)
+    if args.profile:
+        # script-mode runs have benchmarks/ itself on sys.path, not the root
+        try:
+            from benchmarks.profiling import profiled
+        except ImportError:
+            from profiling import profiled
+
+        rows = profiled(run, smoke=args.smoke)
+    else:
+        rows = run(smoke=args.smoke)
     if args.json:
         with open(args.json, "w") as fh:
             json.dump({"bench": "serving", "smoke": args.smoke, "rows": rows},

@@ -1,0 +1,25 @@
+"""cProfile helper shared by the benchmark CLIs (`--profile`).
+
+Kept separate from benchmarks/common.py on purpose: common.py imports
+jax at module level, and the profiler is wanted by kernel-free benches
+(bench_engine) too. No repro imports either — this wraps any callable.
+"""
+from __future__ import annotations
+
+import cProfile
+import pstats
+
+
+def profiled(fn, *args, top: int = 25, **kwargs):
+    """Run `fn(*args, **kwargs)` under cProfile, print the top-`top`
+    functions by cumulative time, and return fn's result — so a bench
+    behaves identically with and without `--profile`, just slower and
+    chattier. Hot-loop regressions become diagnosable from the table
+    without editing code."""
+    prof = cProfile.Profile()
+    try:
+        result = prof.runcall(fn, *args, **kwargs)
+    finally:
+        print(f"\n# cProfile: top {top} by cumulative time")
+        pstats.Stats(prof).sort_stats("cumulative").print_stats(top)
+    return result

@@ -15,12 +15,16 @@ import traceback
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="", help="comma list: table1,fig5,fig6,fig7,kernels,roofline,serving")
+    ap.add_argument("--only", default="", help="comma list: table1,fig5,fig6,fig7,kernels,roofline,serving,engine")
+    ap.add_argument("--profile", action="store_true",
+                    help="run each chosen benchmark under cProfile and print"
+                         " the top-25 cumulative table after its section")
     args = ap.parse_args()
 
     from benchmarks import (  # noqa: E402 (import here: jax init)
-        bench_fig5_perf, bench_fig6_accuracy, bench_fig7_resources,
-        bench_kernels, bench_serving, bench_table1, roofline,
+        bench_engine, bench_fig5_perf, bench_fig6_accuracy,
+        bench_fig7_resources, bench_kernels, bench_serving, bench_table1,
+        roofline,
     )
 
     benches = {
@@ -31,9 +35,13 @@ def main() -> None:
         "kernels": bench_kernels.main,
         # empty argv: don't let bench_serving's --smoke parser see --only
         "serving": lambda: bench_serving.main([]),
+        "engine": lambda: bench_engine.main([]),
         "roofline": roofline.main,
     }
     chosen = args.only.split(",") if args.only else list(benches)
+
+    if args.profile:
+        from benchmarks.profiling import profiled
 
     summary = []
     failed = 0
@@ -41,7 +49,10 @@ def main() -> None:
         print(f"\n===== {name} =====", flush=True)
         t0 = time.time()
         try:
-            benches[name]()
+            if args.profile:
+                profiled(benches[name])
+            else:
+                benches[name]()
             summary.append((name, (time.time() - t0) * 1e6, "ok"))
         except Exception:
             traceback.print_exc()

@@ -53,7 +53,7 @@ from repro.core.serving.cascade import CascadeConfig, CascadeDispatcher
 from repro.core.serving.control import ControlConfig
 from repro.core.serving.events import EventLoop
 from repro.core.serving.metrics import (
-    SLOMonitor, fleet_cache_rollup, fleet_control_rollup,
+    SLOMonitor, TraceBuffer, fleet_cache_rollup, fleet_control_rollup,
 )
 from repro.core.serving.pool import PoolConfig, ReplicaPool, Request
 from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
@@ -109,11 +109,20 @@ class ServingSystem:
         adaptive_shedding: bool = True,
         loop: Optional[EventLoop] = None,
         event_ns: str = "",
+        scheduler: str = "calendar",
+        strict_events: bool = False,
     ):
         # `loop`/`event_ns` let a federation embed several systems (cells)
         # on ONE shared clock: each system's events — and its pools' — are
         # suffixed with the namespace so same-named pools never collide.
-        self.loop = loop if loop is not None else EventLoop()
+        # `scheduler` picks the pending-event store ("calendar" fast path
+        # or the seed "heap"); `strict_events` makes unhandled event kinds
+        # raise instead of being counted (both forwarded to EventLoop and
+        # ignored when an existing `loop` is passed in).
+        self.loop = (
+            loop if loop is not None
+            else EventLoop(scheduler=scheduler, strict=strict_events)
+        )
         self.event_ns = event_ns
         self.router = router or LeastLoadedRouter()
         self.slo_p99_s = slo_p99_s
@@ -152,9 +161,9 @@ class ServingSystem:
         self._horizon = float("inf")
         self._completed_in_horizon = 0
         self._ran = False
-        self.trace: Dict[str, List[float]] = {
-            "t": [], "p99": [], "qps": [], "replicas": [], "queue": []
-        }
+        self.trace = TraceBuffer([
+            "t", "p99", "qps", ("replicas", np.int64), ("queue", np.int64)
+        ])
         self.loop.on(self._event("arrive"), self._handle_arrive)
         self.loop.on(self._event("scale"), self._handle_scale)
 
@@ -215,11 +224,11 @@ class ServingSystem:
             self.limiter.adapt(stats["p99"], self.slo_p99_s)
         for pool in self.pools.values():
             pool.scale_tick(now, self.scale_tick_s)
-        self.trace["t"].append(now)
-        self.trace["p99"].append(stats["p99"])
-        self.trace["qps"].append(stats["qps"])
-        self.trace["replicas"].append(sum(len(p.replicas) for p in self.pools.values()))
-        self.trace["queue"].append(sum(len(p.queue) for p in self.pools.values()))
+        self.trace.append(
+            now, stats["p99"], stats["qps"],
+            sum(len(p.replicas) for p in self.pools.values()),
+            sum(len(p.queue) for p in self.pools.values()),
+        )
         if now + self.scale_tick_s <= self._horizon:
             self.loop.push(now + self.scale_tick_s, self._event("scale"))
 
@@ -243,8 +252,17 @@ class ServingSystem:
                 "this ServingSystem has already run once; monitors, queues and "
                 "replica state accumulate across runs — build a fresh system"
             )
-        for r in arrivals:
-            self.loop.push(r.t_arrive, self._event("arrive"), r)
+        if arrivals:
+            # lazily merged stream instead of one heap tuple per arrival:
+            # pending memory is O(1) per stream. The stable sort by
+            # t_arrive reproduces the seed's (t, push-order) fire order
+            # exactly, even for unsorted arrival lists, and stream events
+            # beat queued events at equal timestamps just as the
+            # arrival pushes (lowest sequence numbers) used to.
+            ordered = sorted(arrivals, key=lambda r: r.t_arrive)
+            self.loop.add_stream(
+                self._event("arrive"), ((r.t_arrive, r) for r in ordered)
+            )
         # `until is not None` (not truthiness): until=0.0 is a valid horizon
         self.start(until if until is not None else default_horizon(arrivals))
         self.loop.run()
@@ -276,7 +294,11 @@ class ServingSystem:
             "control": fleet_control_rollup(
                 p.control_summary() for p in self.pools.values()
             ),
-            "trace": self.trace,
+            # events that fired with no registered handler on this system's
+            # loop (shared with every cell when federated); the seed kernel
+            # dropped these silently
+            "dropped_events": self.loop.dropped_events,
+            "trace": self.trace.as_dict(),
             "pools": {name: p.summary() for name, p in self.pools.items()},
         }
 
@@ -319,10 +341,14 @@ class ElasticEngine(ServingSystem):
 
 
 def default_horizon(arrivals: List[Request]) -> float:
-    """Reporting horizon when the caller gives none: last arrival plus a
-    drain margin. Shared by ServingSystem.run and FederatedSystem.run so
-    standalone and federated runs stay comparable."""
-    return arrivals[-1].t_arrive + 5.0 if arrivals else 5.0
+    """Reporting horizon when the caller gives none: LATEST arrival plus
+    a drain margin. Shared by ServingSystem.run and FederatedSystem.run
+    so standalone and federated runs stay comparable. (This used to read
+    `arrivals[-1]`, which silently under-reported the horizon for
+    unsorted arrival lists.)"""
+    if not arrivals:
+        return 5.0
+    return max(r.t_arrive for r in arrivals) + 5.0
 
 
 def attach_zipf_ids(

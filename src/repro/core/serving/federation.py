@@ -78,7 +78,9 @@ from repro.core.serving.autoscaler import CapacityBudget
 from repro.core.serving.cascade import CascadeConfig
 from repro.core.serving.engine import PoolSpec, ServingSystem, default_horizon
 from repro.core.serving.events import EventLoop
-from repro.core.serving.metrics import SLOMonitor, SpillStats, federated_rollup
+from repro.core.serving.metrics import (
+    SLOMonitor, SpillStats, TraceBuffer, federated_rollup,
+)
 from repro.core.serving.pool import Request
 from repro.core.serving.rate_limiter import TierPolicy
 from repro.core.serving.replica import ReplicaSpec
@@ -269,10 +271,14 @@ class FederatedSystem:
         capacity: Optional[int] = None,
         slo_p99_s: float = 0.100,
         scale_tick_s: float = 1.0,
+        scheduler: str = "calendar",
+        strict_events: bool = False,
     ):
         if not cells:
             raise ValueError("a federation needs at least one cell")
-        self.loop = EventLoop()
+        # every cell shares this one loop, so the scheduler choice and
+        # strict-mode policy are fleet-wide
+        self.loop = EventLoop(scheduler=scheduler, strict=strict_events)
         self.policy = make_cell_policy(policy) if isinstance(policy, str) else policy
         self.rtt_s = rtt_s
         self.rtt = RttMatrix(rtt_s, rtt)  # per-(src, dst) with scalar fallback
@@ -300,9 +306,9 @@ class FederatedSystem:
         self._horizon = float("inf")
         self._completed_in_horizon = 0
         self._ran = False
-        self.trace: Dict[str, List[float]] = {
-            "t": [], "p99": [], "qps": [], "spilled": [], "in_transit": []
-        }
+        self.trace = TraceBuffer([
+            "t", "p99", "qps", ("spilled", np.int64), ("in_transit", np.int64)
+        ])
         self.loop.on("arrive", self._handle_arrive)
         self.loop.on("route", self._handle_route)
         self.loop.on("spill", self._handle_spill)
@@ -439,12 +445,11 @@ class FederatedSystem:
         if now > self._horizon:
             return
         stats = self.monitor.percentiles(now)
-        self.trace["t"].append(now)
-        self.trace["p99"].append(stats["p99"])
-        self.trace["qps"].append(stats["qps"])
-        self.trace["spilled"].append(
-            sum(c.spill.spilled_out for c in self.cells.values()))
-        self.trace["in_transit"].append(self.in_transit)
+        self.trace.append(
+            now, stats["p99"], stats["qps"],
+            sum(c.spill.spilled_out for c in self.cells.values()),
+            self.in_transit,
+        )
         if now + self.scale_tick_s <= self._horizon:
             self.loop.push(now + self.scale_tick_s, "scale")
 
@@ -456,8 +461,12 @@ class FederatedSystem:
                 "queues and replica state accumulate — build a fresh one"
             )
         self._ran = True
-        for r in arrivals:
-            self.loop.push(r.t_arrive, "arrive", r)
+        if arrivals:
+            # lazy stream instead of one heap tuple per arrival (see
+            # ServingSystem.run): the stable sort keeps the seed's
+            # (t, push-order) fire order bit-exact
+            ordered = sorted(arrivals, key=lambda r: r.t_arrive)
+            self.loop.add_stream("arrive", ((r.t_arrive, r) for r in ordered))
         self._horizon = until if until is not None else default_horizon(arrivals)
         for cell in self.cells.values():
             # start() marks each embedded system as started, so calling
@@ -495,7 +504,8 @@ class FederatedSystem:
                 if self._horizon > 0 else 0.0
             ),
             "final_replicas": rollup["final_replicas"],
-            "trace": self.trace,
+            "dropped_events": self.loop.dropped_events,
+            "trace": self.trace.as_dict(),
             "cells": cells,
         }
 

@@ -37,10 +37,60 @@ online model re-learning a drifted calibration.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
+
+
+class TraceBuffer:
+    """Columnar per-tick trace: one growing numpy buffer per column
+    (amortised-doubling appends) instead of one Python list append per
+    column per tick. Rows append positionally in the declared column
+    order; `as_dict()` converts back to plain Python lists, which is
+    what summaries expose (tests compare those by value, and int columns
+    round-trip as ints)."""
+
+    __slots__ = ("_names", "_bufs", "_n")
+
+    def __init__(self, columns: Sequence[Union[str, Tuple[str, type]]]):
+        self._names: List[str] = []
+        self._bufs: List[np.ndarray] = []
+        for col in columns:
+            name, dtype = col if isinstance(col, tuple) else (col, np.float64)
+            self._names.append(name)
+            self._bufs.append(np.empty(16, dtype=dtype))
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def append(self, *values) -> None:
+        """Append one row, positionally in declared column order."""
+        if len(values) != len(self._bufs):
+            raise ValueError(
+                f"expected {len(self._bufs)} values ({self._names}), "
+                f"got {len(values)}"
+            )
+        n = self._n
+        if n == len(self._bufs[0]):
+            for i, buf in enumerate(self._bufs):
+                grown = np.empty(2 * n, dtype=buf.dtype)
+                grown[:n] = buf
+                self._bufs[i] = grown
+        for buf, value in zip(self._bufs, values):
+            buf[n] = value
+        self._n = n + 1
+
+    def column(self, name: str) -> np.ndarray:
+        """Live view of one column (length == rows appended so far)."""
+        return self._bufs[self._names.index(name)][: self._n]
+
+    def as_dict(self) -> Dict[str, List]:
+        """Plain {column: list} — the summary()-facing representation."""
+        return {
+            name: buf[: self._n].tolist()
+            for name, buf in zip(self._names, self._bufs)
+        }
 
 
 @dataclasses.dataclass
@@ -129,33 +179,50 @@ def federated_rollup(cells: Dict[str, Dict]) -> Dict[str, int]:
 
 
 class SLOMonitor:
+    """Latency accounting on growing numpy buffers. Finish times arrive
+    in event order (the loop clock never goes backwards), so the
+    sliding window is just a [lo:n) slice of the full-run buffers:
+    `record` is an O(1) array write, the window trim is a searchsorted
+    on the monotone finish-time column instead of a per-event deque
+    popleft, and percentile inputs are ready-made float64 slices."""
+
     def __init__(self, window_s: float = 10.0, slo_s: Optional[float] = None):
         self.window_s = window_s
         self.slo_s = slo_s
-        self.lat: Deque[Tuple[float, float]] = deque()  # (finish_time, latency)
-        self.history: List[float] = []  # full-run latencies
+        self._fin = np.empty(1024)  # finish times, monotone non-decreasing
+        self._lat = np.empty(1024)  # latencies, same order
+        self._n = 0
+        self._lo = 0  # sliding-window start: window is lat[_lo:_n]
         self.arrived = 0
         self.rejected = 0
         self.completed = 0
         self.slo_hits = 0
 
     def record(self, finish: float, latency: float):
+        n = self._n
+        if n == len(self._lat):
+            for name in ("_fin", "_lat"):
+                buf = getattr(self, name)
+                grown = np.empty(2 * n)
+                grown[:n] = buf
+                setattr(self, name, grown)
+        self._fin[n] = finish
+        self._lat[n] = latency
+        self._n = n + 1
         self.completed += 1
-        self.lat.append((finish, latency))
-        self.history.append(latency)
         if self.slo_s is not None and latency <= self.slo_s:
             self.slo_hits += 1
 
-    def _trim(self, now: float):
-        while self.lat and self.lat[0][0] < now - self.window_s:
-            self.lat.popleft()
-
     def percentiles(self, now: float) -> Dict[str, float]:
         """Sliding-window stats — the signal the control loops react to."""
-        self._trim(now)
-        if not self.lat:
+        cut = now - self.window_s
+        lo, n = self._lo, self._n
+        if lo < n and self._fin[lo] < cut:
+            lo = int(np.searchsorted(self._fin[:n], cut, side="left"))
+            self._lo = lo
+        if lo >= n:
             return {"p50": 0.0, "p99": 0.0, "qps": 0.0}
-        arr = np.array([l for _, l in self.lat])
+        arr = self._lat[lo:n]
         # before the first window has elapsed the divisor is the time that
         # actually passed — dividing by the full window understates qps and
         # feeds the shed/scale loops a wrong early signal
@@ -163,7 +230,7 @@ class SLOMonitor:
         return {
             "p50": float(np.percentile(arr, 50)),
             "p99": float(np.percentile(arr, 99)),
-            "qps": len(arr) / elapsed,
+            "qps": (n - lo) / elapsed,
         }
 
     def attainment(self) -> float:
@@ -174,10 +241,10 @@ class SLOMonitor:
 
     def totals(self) -> Dict[str, float]:
         """Full-run latency stats (not windowed)."""
-        if not self.history:
+        if not self._n:
             return {"p50": 0.0, "p99": 0.0, "mean": 0.0,
                     "completed": 0, "attainment": self.attainment()}
-        arr = np.asarray(self.history)
+        arr = self._lat[: self._n]
         return {
             "p50": float(np.percentile(arr, 50)),
             "p99": float(np.percentile(arr, 99)),

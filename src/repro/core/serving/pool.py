@@ -82,13 +82,15 @@ import dataclasses
 import itertools
 from typing import Callable, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.serving.autoscaler import AutoScaler, CapacityBudget, ScalerConfig
 from repro.core.serving.cache import CacheConfig, EmbeddingCache, ResultCache
 from repro.core.serving.control import (
     BatchSizeController, ControlConfig, Ewma, OnlineLatencyModel,
 )
 from repro.core.serving.events import EventLoop
-from repro.core.serving.metrics import SLOMonitor
+from repro.core.serving.metrics import SLOMonitor, TraceBuffer
 from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
 from repro.core.serving.replica import Replica, ReplicaSpec
 
@@ -202,10 +204,10 @@ class ReplicaPool:
         self.queue: List[Request] = []
         self.queued_cost = 0  # running sum of queue costs (O(1) router signal)
         self._batch_deadline: Optional[float] = None
-        self.trace: Dict[str, List[float]] = {
-            "t": [], "replicas": [], "queue": [], "p99": [], "hit_rate": [],
-            "max_batch_items": [], "latency_corr": []
-        }
+        self.trace = TraceBuffer([
+            "t", ("replicas", np.int64), ("queue", np.int64), "p99",
+            "hit_rate", "max_batch_items", "latency_corr"
+        ])
 
         loop.on(f"batch_timeout:{self.event_key}", self._handle_timeout)
         loop.on(f"batch_done:{self.event_key}", self._handle_done)
@@ -441,15 +443,13 @@ class ReplicaPool:
                     self.scaler.replenish()
                     if self.budget is not None:
                         self.budget.release(1)
-        self.trace["t"].append(now)
-        self.trace["replicas"].append(len(self.replicas))
-        self.trace["queue"].append(len(self.queue))
-        self.trace["p99"].append(stats["p99"])
-        self.trace["hit_rate"].append(self.hit_rate())
-        # control-plane visibility: 0.0 = no item cap in force
-        self.trace["max_batch_items"].append(float(self.item_cap() or 0))
-        self.trace["latency_corr"].append(
-            self.model.correction if self.model is not None else 1.0)
+        self.trace.append(
+            now, len(self.replicas), len(self.queue), stats["p99"],
+            self.hit_rate(),
+            # control-plane visibility: 0.0 = no item cap in force
+            float(self.item_cap() or 0),
+            self.model.correction if self.model is not None else 1.0,
+        )
 
     # ---- reporting ----
     def cache_summary(self) -> Dict:
@@ -490,9 +490,12 @@ class ReplicaPool:
             "mean": tot["mean"],
             "slo_attainment": tot["attainment"],
             "final_replicas": len(self.replicas),
-            "max_replicas": max(self.trace["replicas"], default=len(self.replicas)),
+            "max_replicas": (
+                int(self.trace.column("replicas").max())
+                if len(self.trace) else len(self.replicas)
+            ),
             "served_items": sum(r.served for r in self._registry.values()),
             "cache": self.cache_summary(),
             "control": self.control_summary(),
-            "trace": self.trace,
+            "trace": self.trace.as_dict(),
         }

@@ -1,0 +1,376 @@
+"""Event-kernel fast-path tests: calendar-queue vs binary-heap ordering
+(bit-exact, fuzzed), lazy arrival-stream merge semantics, collision-heavy
+replay determinism at scale, dropped-event accounting / strict mode,
+vectorized SLOMonitor equivalence, TraceBuffer round-trips, and the
+default_horizon unsorted-arrivals regression."""
+import heapq
+import random
+
+import pytest
+
+from repro.core.serving.engine import (
+    PoolSpec, ServingSystem, default_horizon, poisson_arrivals,
+)
+from repro.core.serving.events import (
+    CalendarScheduler, EventLoop, HeapScheduler, SCHEDULERS,
+)
+from repro.core.serving.metrics import SLOMonitor, TraceBuffer
+from repro.core.serving.pool import PoolConfig, Request
+from repro.core.serving.replica import LatencyModel, ReplicaSpec
+
+
+def _spec(name="m", base=0.02, per=0.001):
+    return ReplicaSpec(name, LatencyModel.analytic(base, per),
+                       cold_start_s=5.0, warm_start_s=0.2)
+
+
+# ---------------------------------------------------------------------------
+# schedulers: the calendar queue reproduces heap order exactly
+# ---------------------------------------------------------------------------
+
+
+def test_calendar_matches_heap_fuzzed():
+    """Interleaved pushes/pops with timestamp collisions, out-of-band and
+    past pushes, across widths spanning 6 orders of magnitude: the
+    calendar queue's pop sequence must equal the binary heap's exactly."""
+    rng = random.Random(0)
+    for trial in range(40):
+        width = rng.choice([1e-4, 1e-2, 0.05, 1.0, 100.0])
+        cal = CalendarScheduler(width=width)
+        ref = []
+        seq = 0
+        t_base = 0.0
+        popped = []
+        expect = []
+        for _ in range(600):
+            if ref and rng.random() < 0.4:
+                expect.append(heapq.heappop(ref))
+                popped.append(cal.pop())
+            else:
+                t_base += rng.choice([0.0, 0.0, 1e-4, 0.3, 7.0])
+                # sometimes schedule before already-buffered times
+                t = max(0.0, t_base - rng.choice([0.0, 0.0, 0.5, 5.0]))
+                entry = (t, seq, "k", seq)
+                seq += 1
+                heapq.heappush(ref, entry)
+                cal.push(entry)
+        while ref:
+            expect.append(heapq.heappop(ref))
+            popped.append(cal.pop())
+        assert popped == expect, f"trial {trial} (width {width})"
+        assert len(cal) == 0
+
+
+def test_calendar_width_shrink_keeps_order():
+    """> MAX_BUCKET events landing in one bucket trigger the
+    deterministic width shrink; order must survive the rebucketing."""
+    cal = CalendarScheduler(width=1000.0)
+    ref = []
+    for i in range(3 * CalendarScheduler.MAX_BUCKET):
+        t = 1000.0 + (i % 997) * 1e-3  # heavy collisions inside one bucket
+        entry = (t, i, "k", i)
+        cal.push(entry)
+        heapq.heappush(ref, entry)
+    out = [cal.pop() for _ in range(len(ref))]
+    assert out == [heapq.heappop(ref) for _ in range(len(ref))]
+
+
+def test_scheduler_registry_and_unknown_name():
+    assert set(SCHEDULERS) == {"heap", "calendar"}
+    assert isinstance(EventLoop(scheduler="heap")._sched, HeapScheduler)
+    assert isinstance(EventLoop()._sched, CalendarScheduler)
+    with pytest.raises(ValueError):
+        EventLoop(scheduler="wheel")
+
+
+# ---------------------------------------------------------------------------
+# arrival streams
+# ---------------------------------------------------------------------------
+
+
+def test_stream_beats_queue_at_equal_timestamps():
+    """Seed semantics: arrivals were pushed before periodic events, so at
+    equal timestamps they fired first. The stream must reproduce that."""
+    loop = EventLoop()
+    seen = []
+    loop.on("arr", lambda t, p: seen.append(("arr", t, p)))
+    loop.on("q", lambda t, p: seen.append(("q", t, p)))
+    loop.push(1.0, "q", "x")
+    loop.add_stream("arr", [(0.5, 0), (1.0, 1), (2.0, 2)])
+    loop.run()
+    assert seen == [("arr", 0.5, 0), ("arr", 1.0, 1), ("q", 1.0, "x"),
+                    ("arr", 2.0, 2)]
+    assert loop.processed == 4
+
+
+def test_multi_stream_merge_matches_seed_push_order():
+    """Several streams + handler-scheduled queue events, fuzzed: the
+    merged order must equal the seed kernel's (every stream pushed
+    upfront in add order, then the queue pushes)."""
+    rng = random.Random(7)
+    for trial in range(25):
+        streams = []
+        for _ in range(rng.randint(1, 3)):
+            ts, t = [], 0.0
+            for _ in range(rng.randint(0, 80)):
+                t += rng.choice([0.0, 0.01, 0.1])
+                ts.append(round(t, 3))
+            streams.append(ts)
+
+        def build(loop):
+            seen = []
+            for k in range(len(streams)):
+                loop.on(f"s{k}",
+                        lambda t, p, k=k: (
+                            seen.append((f"s{k}", t, p)),
+                            loop.push(t + 0.005, "echo", p) if p % 5 == 0
+                            else None))
+            loop.on("echo", lambda t, p: seen.append(("echo", t, p)))
+            return seen
+
+        ref_loop = EventLoop(scheduler="heap")
+        ref = build(ref_loop)
+        for k, ts in enumerate(streams):
+            for i, tt in enumerate(ts):
+                ref_loop.push(tt, f"s{k}", i)
+        ref_loop.run()
+
+        fast_loop = EventLoop()
+        fast = build(fast_loop)
+        for k, ts in enumerate(streams):
+            fast_loop.add_stream(f"s{k}", zip(ts, range(len(ts))))
+        fast_loop.run()
+        assert ref == fast, f"trial {trial}"
+
+
+def test_stream_rejects_backwards_time():
+    loop = EventLoop()
+    loop.on("a", lambda t, p: None)
+    loop.add_stream("a", [(1.0, 0), (0.5, 1)])
+    with pytest.raises(ValueError, match="not time-sorted"):
+        loop.run()
+
+
+def test_empty_stream_is_noop():
+    loop = EventLoop()
+    loop.on("a", lambda t, p: None)
+    loop.add_stream("a", [])
+    assert loop.run() == 0.0
+    assert loop.processed == 0
+
+
+# ---------------------------------------------------------------------------
+# collision-heavy replay determinism at scale (the tentpole's contract)
+# ---------------------------------------------------------------------------
+
+
+def test_10k_collision_replay_bit_identical():
+    """10k events over ~50 distinct timestamps (heavy collisions), with
+    handlers scheduling follow-ups AT the current time (worst case for
+    FIFO ties): the seed path (heap scheduler, arrivals pushed upfront)
+    and the fast path (calendar + stream) must produce bit-identical
+    event sequences — payload identity, times, and order."""
+    rng = random.Random(42)
+    times = sorted(rng.choice(range(50)) * 0.1 for _ in range(10_000))
+
+    def drive(loop, use_stream):
+        seen = []
+
+        def on_arrive(t, p):
+            seen.append(("arrive", t, p))
+            if p % 3 == 0:
+                loop.push(t, "follow", p)  # same-timestamp follow-up
+            if p % 17 == 0:
+                loop.push(t + 0.25, "late", p)
+
+        loop.on("arrive", on_arrive)
+        loop.on("follow", lambda t, p: seen.append(("follow", t, p)))
+        loop.on("late", lambda t, p: seen.append(("late", t, p)))
+        if use_stream:
+            loop.add_stream("arrive", zip(times, range(len(times))))
+        else:
+            for i, t in enumerate(times):
+                loop.push(t, "arrive", i)
+        loop.run()
+        return seen
+
+    seed_path = drive(EventLoop(scheduler="heap"), use_stream=False)
+    fast_path = drive(EventLoop(), use_stream=True)
+    assert len(seed_path) == len(fast_path) > 10_000
+    assert seed_path == fast_path
+
+
+def test_full_system_replay_heap_vs_calendar():
+    """A real ServingSystem run end to end on both schedulers, arrivals
+    via the seed's upfront pushes vs the shipped stream path: identical
+    summaries (percentiles, counts, traces) — the replay contract the
+    rest of the repo's determinism tests rely on."""
+    arrivals = poisson_arrivals(lambda t: 300.0, 8.0, seed=3)
+
+    def system():
+        return ServingSystem(
+            {"m": PoolSpec(_spec(), PoolConfig(n_replicas=2, max_batch=16))},
+            slo_p99_s=0.15,
+        )
+
+    fast = system().run(arrivals, until=8.0)
+
+    legacy = ServingSystem(
+        {"m": PoolSpec(_spec(), PoolConfig(n_replicas=2, max_batch=16))},
+        slo_p99_s=0.15, scheduler="heap",
+    )
+    for r in sorted(arrivals, key=lambda r: r.t_arrive):
+        legacy.loop.push(r.t_arrive, "arrive", r)
+    legacy.start(8.0)
+    legacy.loop.run()
+    res = legacy.summary()
+
+    assert res["p50"] == fast["p50"] and res["p99"] == fast["p99"]
+    assert res["completed"] == fast["completed"]
+    assert res["rejected"] == fast["rejected"]
+    assert res["trace"] == fast["trace"]
+    assert res["pools"]["m"]["trace"] == fast["pools"]["m"]["trace"]
+
+
+# ---------------------------------------------------------------------------
+# dropped events / strict mode
+# ---------------------------------------------------------------------------
+
+
+def test_dropped_events_counted_not_silent():
+    loop = EventLoop()
+    loop.on("known", lambda t, p: None)
+    loop.push(1.0, "known")
+    loop.push(2.0, "ghost")
+    loop.push(3.0, "ghost")
+    loop.push(4.0, "phantom")
+    loop.run()
+    assert loop.processed == 4
+    assert loop.dropped_events == 3
+    assert loop.dropped_kinds == {"ghost": 2, "phantom": 1}
+
+
+def test_strict_loop_raises_on_unhandled_kind():
+    loop = EventLoop(strict=True)
+    loop.on("known", lambda t, p: None)
+    loop.push(1.0, "ghost")
+    with pytest.raises(KeyError, match="ghost"):
+        loop.run()
+
+
+def test_dropped_events_in_system_summary():
+    sys_ = ServingSystem(
+        {"m": PoolSpec(_spec(), PoolConfig(n_replicas=1))}, slo_p99_s=0.15)
+    sys_.loop.push(0.5, "not_a_real_event")
+    res = sys_.run(poisson_arrivals(lambda t: 50.0, 2.0, seed=0), until=2.0)
+    assert res["dropped_events"] == 1
+    clean = ServingSystem(
+        {"m": PoolSpec(_spec(), PoolConfig(n_replicas=1))}, slo_p99_s=0.15)
+    assert clean.run(poisson_arrivals(lambda t: 50.0, 2.0, seed=0),
+                     until=2.0)["dropped_events"] == 0
+
+
+def test_strict_events_plumbed_through_system():
+    sys_ = ServingSystem(
+        {"m": PoolSpec(_spec(), PoolConfig(n_replicas=1))},
+        slo_p99_s=0.15, strict_events=True)
+    sys_.loop.push(0.5, "not_a_real_event")
+    with pytest.raises(KeyError, match="not_a_real_event"):
+        sys_.run(poisson_arrivals(lambda t: 50.0, 2.0, seed=0), until=2.0)
+
+
+# ---------------------------------------------------------------------------
+# default_horizon regression (satellite: unsorted arrivals)
+# ---------------------------------------------------------------------------
+
+
+def test_default_horizon_uses_true_max_not_last():
+    unsorted = [Request(0, 9.0, "tier0"), Request(1, 3.0, "tier0"),
+                Request(2, 6.0, "tier0")]
+    assert default_horizon(unsorted) == 9.0 + 5.0  # was 6.0 + 5.0 pre-fix
+    assert default_horizon([]) == 5.0
+
+
+def test_run_with_unsorted_arrivals_matches_sorted():
+    arrivals = poisson_arrivals(lambda t: 200.0, 6.0, seed=5)
+    shuffled = list(arrivals)
+    random.Random(1).shuffle(shuffled)
+
+    def system():
+        return ServingSystem(
+            {"m": PoolSpec(_spec(), PoolConfig(n_replicas=2))}, slo_p99_s=0.15)
+
+    a = system().run(arrivals, until=6.0)
+    b = system().run(shuffled, until=6.0)
+    assert (a["p50"], a["p99"], a["completed"]) == \
+        (b["p50"], b["p99"], b["completed"])
+
+
+# ---------------------------------------------------------------------------
+# vectorized SLOMonitor / TraceBuffer
+# ---------------------------------------------------------------------------
+
+
+def test_slomonitor_matches_deque_reference():
+    """The numpy SLOMonitor against a straightforward deque+list replay
+    of the seed implementation, under interleaved record/percentile
+    calls with a moving window."""
+    from collections import deque
+
+    import numpy as np
+
+    mon = SLOMonitor(window_s=2.0, slo_s=0.5)
+    ref_lat = deque()
+    ref_hist = []
+    rng = random.Random(9)
+    now = 0.0
+    for _ in range(2000):
+        now += rng.random() * 0.05
+        lat = rng.random()
+        mon.record(now, lat)
+        ref_lat.append((now, lat))
+        ref_hist.append(lat)
+        if rng.random() < 0.3:
+            while ref_lat and ref_lat[0][0] < now - 2.0:
+                ref_lat.popleft()
+            got = mon.percentiles(now)
+            if ref_lat:
+                arr = np.array([l for _, l in ref_lat])
+                elapsed = max(min(now, 2.0), 1e-9)
+                assert got["p50"] == float(np.percentile(arr, 50))
+                assert got["p99"] == float(np.percentile(arr, 99))
+                assert got["qps"] == len(arr) / elapsed
+            else:
+                assert got == {"p50": 0.0, "p99": 0.0, "qps": 0.0}
+    tot = mon.totals()
+    arr = np.asarray(ref_hist)
+    assert tot["p50"] == float(np.percentile(arr, 50))
+    assert tot["p99"] == float(np.percentile(arr, 99))
+    assert tot["mean"] == float(arr.mean())
+    assert tot["completed"] == len(ref_hist)
+    assert mon.attainment() == sum(1 for l in ref_hist if l <= 0.5) / len(ref_hist)
+
+
+def test_slomonitor_empty_window_after_idle_gap():
+    mon = SLOMonitor(window_s=1.0)
+    mon.record(0.5, 0.1)
+    assert mon.percentiles(0.6)["qps"] > 0
+    # a long idle gap empties the window but not the totals
+    assert mon.percentiles(100.0) == {"p50": 0.0, "p99": 0.0, "qps": 0.0}
+    assert mon.totals()["completed"] == 1
+
+
+def test_tracebuffer_roundtrip_types_and_growth():
+    import numpy as np
+
+    buf = TraceBuffer(["t", ("n", np.int64)])
+    for i in range(100):  # past the initial capacity: growth path
+        buf.append(i * 0.5, i)
+    out = buf.as_dict()
+    assert out["t"] == [i * 0.5 for i in range(100)]
+    assert out["n"] == list(range(100))
+    assert isinstance(out["n"][0], int) and isinstance(out["t"][0], float)
+    assert len(buf) == 100
+    assert buf.column("n").max() == 99
+    with pytest.raises(ValueError):
+        buf.append(1.0)  # arity is checked
