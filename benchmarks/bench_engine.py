@@ -185,9 +185,16 @@ def main(argv=None):
                     help="run under cProfile and print the top-25 "
                          "cumulative table (in-process, no subprocesses: "
                          "RSS numbers are fleet-wide, not per-cell)")
+    ap.add_argument("--profile-out", metavar="PATH", default=None,
+                    help="also write the FULL cProfile table to this path "
+                         "(implies --profile); CI uploads it next to "
+                         "BENCH_engine.json so hot-loop profiles diff "
+                         "across runs")
     ap.add_argument("--worker", metavar="JSON", default=None,
                     help=argparse.SUPPRESS)  # internal: one cell, then exit
     args = ap.parse_args(argv)
+    if args.profile_out:
+        args.profile = True
 
     if args.worker:
         print(json.dumps(worker(json.loads(args.worker))))
@@ -207,7 +214,8 @@ def main(argv=None):
             lambda: [worker(s) for s in (
                 {"workload": "kernel", "mode": "legacy", "n": 100_000},
                 {"workload": "kernel", "mode": "fast", "n": 100_000},
-            )]
+            )],
+            out=args.profile_out,
         )
         for row in rows:
             print(f"{row['workload']},{row['mode']},{row['n']},"

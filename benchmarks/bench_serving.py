@@ -44,6 +44,18 @@ executables of the five Table-I variants (or analytic stand-ins under
      request misses the remote cell's cache cold — the locality /
      spillover tradeoff, visible as a fleet hit-rate drop.
 
+  8. sharded embedding tier (serving/shard.py): (a) a 2-cell fleet whose
+     embedding table is sharded across BOTH cells (every cell's misses
+     are ~half remote), pool L1s only vs L1s plus the cell-shared L2 —
+     at equal offered load the L2 absorbs most of what falls through the
+     small L1s, cutting shard-fetch volume (remote fetches strictly
+     lower) and p99. (b) online table updates: a standalone system under
+     a Poisson stream of versioned row publishes at increasing rates,
+     invalidation on vs off — invalidation refetches updated rows (zero
+     stale serves, slightly cooler caches); without it staleness climbs
+     with the update rate. --smoke asserts (a) and the staleness
+     dichotomy of (b).
+
 `--smoke` skips calibration (analytic Table-I-shaped latency models) and
 shrinks every horizon so CI can run the whole file in seconds.
 """
@@ -52,6 +64,8 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+
+import numpy as np
 
 from repro.core.serving.cache import CacheConfig
 from repro.core.serving.control import ControlConfig
@@ -65,7 +79,8 @@ from repro.core.serving.pool import PoolConfig
 from repro.core.serving.rate_limiter import TierPolicy
 from repro.core.serving.replica import LatencyModel, ReplicaSpec, sustainable_rate
 from repro.core.serving.router import make_router
-from repro.data.synthetic import zipf_id_stream
+from repro.core.serving.shard import EmbeddingShardService
+from repro.data.synthetic import update_event_stream, zipf_id_stream
 
 def spike(horizon: float):
     """150 -> 1000 QPS spike -> 200, at the same relative times whatever the
@@ -551,6 +566,134 @@ def control_rows(specs, horizon=30.0, check=False) -> list:
     return rows
 
 
+SHARD_VOCAB, N_SHARDS, SHARD_RTT_S = 20_000, 16, 0.002
+
+
+def shard_rows(specs, horizon=25.0, check=False) -> list:
+    """Experiment 8: the sharded embedding tier. Part a: 2 cells, table
+    sharded across both, L1-only vs L1+shared-L2 at equal offered load.
+    Part b: update-rate sweep, invalidation on/off, staleness vs
+    hit-rate. Operating points are self-calibrating: the Zipf head mass
+    at each cache capacity feeds `sustainable_rate`, so the load sits
+    past the L1-only equilibrium but inside the warm-L2 one on any
+    host."""
+    spec = _cached_spec(specs["baseline"])
+    replicas, wait = 2, 0.02
+    pcfg = lambda: PoolConfig(n_replicas=replicas, autoscale=False,
+                              max_batch=32, max_wait_s=wait)
+    l1_rows, l2_rows = SHARD_VOCAB // 64, SHARD_VOCAB // 4
+    # ideal hit rate of a warm top-k cache under the Zipf stream = the
+    # head mass at its capacity (LRU tracks it closely at this skew)
+    p = np.arange(1, SHARD_VOCAB + 1, dtype=np.float64) ** -CACHE_ALPHA
+    p /= p.sum()
+    h_l1, h_l2 = float(p[:l1_rows].sum()), float(p[:l2_rows].sum())
+    r_l1 = sustainable_rate(spec, replicas, wait, CACHE_IDS, hit_rate=h_l1)
+    r_l2 = sustainable_rate(spec, replicas, wait, CACHE_IDS, hit_rate=h_l2)
+    rate = min(1.15 * r_l1, 0.9 * r_l2)  # per cell
+    warm_stream = zipf_id_stream(2 * SHARD_VOCAB, SHARD_VOCAB,
+                                 CACHE_ALPHA, seed=2)
+    rows, part_a = [], {}
+
+    # part a: both cells' misses are ~half remote (table sharded across
+    # the fleet); the only difference between the runs is the shared L2
+    for l2_on in (False, True):
+        shard = EmbeddingShardService(N_SHARDS, ("a", "b"))
+        cache = CacheConfig(l1_rows,
+                            l2=CacheConfig(l2_rows) if l2_on else None)
+        cells = {
+            name: CellSpec(
+                pools={"baseline": PoolSpec(spec, pcfg(), cache=cache)},
+                slo_p99_s=0.15, adaptive_shedding=False)
+            for name in ("a", "b")
+        }
+        fed = FederatedSystem(cells, policy="sticky", spillover=False,
+                              rtt_s=SHARD_RTT_S, slo_p99_s=0.15, shard=shard)
+        for name in ("a", "b"):
+            fed.cells[name].system.pools["baseline"].embed_cache.warm(warm_stream)
+            if l2_on:
+                fed.cells[name].system.l2_cache.warm(warm_stream)
+        arr = poisson_arrivals(lambda t: 2 * rate, horizon, seed=0,
+                               priority_frac=0.0)
+        assign_homes(arr, {"a": 0.5, "b": 0.5}, seed=1)
+        # one shared hot set (not per-cell disjoint ranges): the table is
+        # fleet-global, so both cells contend for the same sharded rows
+        attach_zipf_ids(arr, SHARD_VOCAB, CACHE_IDS, alpha=CACHE_ALPHA, seed=1)
+        res = fed.run(arr, until=horizon)
+        part_a[l2_on] = res
+        sh = res["shard"]
+        rows.append({
+            "experiment": "shard", "part": "l2",
+            "config": "l1+l2" if l2_on else "l1_only",
+            "p50_ms": res["p50"] * 1e3, "p99_ms": res["p99"] * 1e3,
+            "throughput": res["throughput"], "rejected": res["rejected"],
+            "local_fetches": sh["local_fetches"],
+            "remote_fetches": sh["remote_fetches"],
+            "transit_s": sh["transit_s"],
+            "l2_hit_rate": {n: c["cache"]["l2_hit_rate"]
+                            for n, c in res["cells"].items()},
+        })
+    if check:
+        assert part_a[True]["p99"] < part_a[False]["p99"], (
+            "the shared L2 must cut p99 at equal offered load: "
+            f"l1+l2 {part_a[True]['p99']:.3f}s vs "
+            f"l1_only {part_a[False]['p99']:.3f}s")
+        assert (part_a[True]["shard"]["remote_fetches"]
+                < part_a[False]["shard"]["remote_fetches"]), \
+            "the shared L2 must strictly cut remote shard-fetch volume"
+
+    # part b: online table updates at increasing rates — versioned rows
+    # publish through the shard and either invalidate down the hierarchy
+    # (refetch, staleness 0) or keep serving superseded copies (staleness
+    # climbs with the rate). Placement () keeps every fetch local: the
+    # sweep isolates the freshness/hit-rate tradeoff from transit.
+    sweep = {}
+    for invalidation in (True, False):
+        for upd_rate in (0.0, 20.0, 80.0):
+            shard = EmbeddingShardService(N_SHARDS, invalidation=invalidation)
+            sys_ = ServingSystem(
+                {"baseline": PoolSpec(
+                    spec, pcfg(),
+                    cache=CacheConfig(l1_rows, l2=CacheConfig(l2_rows)))},
+                slo_p99_s=0.15, adaptive_shedding=False, shard=shard)
+            sys_.pools["baseline"].embed_cache.warm(warm_stream)
+            sys_.l2_cache.warm(warm_stream)
+            if upd_rate:
+                sys_.loop.add_stream(
+                    "shard_update",
+                    update_event_stream(upd_rate, horizon, SHARD_VOCAB, 32,
+                                        alpha=CACHE_ALPHA, seed=7))
+            arr = poisson_arrivals(lambda t: rate, horizon, seed=3,
+                                   priority_frac=0.0)
+            attach_zipf_ids(arr, SHARD_VOCAB, CACHE_IDS, alpha=CACHE_ALPHA,
+                            seed=3)
+            res = sys_.run(arr, until=horizon)
+            cache = res["cache"]
+            sweep[(invalidation, upd_rate)] = cache
+            rows.append({
+                "experiment": "shard", "part": "updates",
+                "config": f"invalidation={invalidation}",
+                "update_rate": upd_rate,
+                "p50_ms": res["p50"] * 1e3, "p99_ms": res["p99"] * 1e3,
+                "throughput": res["throughput"], "rejected": res["rejected"],
+                "hit_rate": cache["hit_rate"],
+                "l2_hit_rate": cache["l2_hit_rate"],
+                "staleness": cache["staleness"],
+                "invalidated": cache["invalidated"],
+            })
+    if check:
+        for upd_rate in (20.0, 80.0):
+            assert sweep[(True, upd_rate)]["staleness"] == 0, \
+                "invalidation must leave zero stale serves"
+            assert sweep[(True, upd_rate)]["invalidated"] > 0
+            assert sweep[(False, upd_rate)]["staleness"] > 0, \
+                "without invalidation superseded rows keep being served"
+        assert (sweep[(False, 80.0)]["staleness"]
+                > sweep[(False, 20.0)]["staleness"]), \
+            "staleness must climb with the update rate"
+        assert sweep[(False, 0.0)]["staleness"] == 0
+    return rows
+
+
 def run(smoke: bool = False) -> list:
     if smoke:
         specs = analytic_specs()
@@ -560,12 +703,13 @@ def run(smoke: bool = False) -> list:
                 + mixed_batching_rows(specs, horizon=10.0)
                 + federation_rows(specs, horizon=12.0)
                 + caching_rows(specs, horizon=10.0)
-                + control_rows(specs, horizon=12.0, check=True))
+                + control_rows(specs, horizon=12.0, check=True)
+                + shard_rows(specs, horizon=10.0, check=True))
     specs = calibrated_specs()
     return (single_pool_rows(specs) + heterogeneous_rows(specs)
             + cascade_rows(specs) + mixed_batching_rows(specs)
             + federation_rows(specs) + caching_rows(specs)
-            + control_rows(specs))
+            + control_rows(specs) + shard_rows(specs))
 
 
 def main(argv=None):
@@ -726,6 +870,41 @@ def main(argv=None):
                   and ctl[("batch_sizing", "adaptive")]["throughput"]
                   >= 0.999 * ctl[("batch_sizing", "static")]["throughput"])
     print(f"adaptive_batch_sizing_beats_static={adapt_wins}")
+
+    print(f"\n# 8. sharded embedding tier: table hashed over {N_SHARDS}"
+          f" shards across 2 cells ({SHARD_RTT_S*1e3:.0f}ms remote-shard"
+          " RTT) — pool L1s alone vs the cell-shared L2")
+    print("config,p50_ms,p99_ms,throughput,rejected,local_fetches,"
+          "remote_fetches,transit_s")
+    l2cmp = {}
+    for r in rows:
+        if r["experiment"] != "shard" or r["part"] != "l2":
+            continue
+        l2cmp[r["config"]] = r
+        print(f"{r['config']},{r['p50_ms']:.1f},{r['p99_ms']:.1f},"
+              f"{r['throughput']:.0f},{r['rejected']},{r['local_fetches']},"
+              f"{r['remote_fetches']},{r['transit_s']:.2f}")
+    l2_wins = (l2cmp["l1+l2"]["p99_ms"] < l2cmp["l1_only"]["p99_ms"]
+               and l2cmp["l1+l2"]["remote_fetches"]
+               < l2cmp["l1_only"]["remote_fetches"])
+    print(f"shared_l2_cuts_remote_fetches_and_p99={l2_wins}")
+
+    print("\n# online table updates: Poisson row publishes, versioned"
+          " invalidation shard -> L2 -> L1 on vs off")
+    print("config,update_rate,p99_ms,hit_rate,l2_hit_rate,staleness,"
+          "invalidated")
+    stale_on, stale_off = 0, 0
+    for r in rows:
+        if r["experiment"] != "shard" or r["part"] != "updates":
+            continue
+        if r["config"] == "invalidation=True":
+            stale_on += r["staleness"]
+        else:
+            stale_off += r["staleness"]
+        print(f"{r['config']},{r['update_rate']:.0f},{r['p99_ms']:.1f},"
+              f"{r['hit_rate']:.3f},{r['l2_hit_rate']:.3f},{r['staleness']},"
+              f"{r['invalidated']}")
+    print(f"invalidation_serves_zero_stale_rows={stale_on == 0 and stale_off > 0}")
     return rows
 
 

@@ -8,18 +8,26 @@ from __future__ import annotations
 
 import cProfile
 import pstats
+from typing import Optional
 
 
-def profiled(fn, *args, top: int = 25, **kwargs):
+def profiled(fn, *args, top: int = 25, out: Optional[str] = None, **kwargs):
     """Run `fn(*args, **kwargs)` under cProfile, print the top-`top`
     functions by cumulative time, and return fn's result — so a bench
     behaves identically with and without `--profile`, just slower and
     chattier. Hot-loop regressions become diagnosable from the table
-    without editing code."""
+    without editing code. With `out`, the FULL (untruncated) table is
+    also written to that path — CI uploads it next to the perf JSONs so
+    a regression's profile can be diffed across runs."""
     prof = cProfile.Profile()
     try:
         result = prof.runcall(fn, *args, **kwargs)
     finally:
         print(f"\n# cProfile: top {top} by cumulative time")
         pstats.Stats(prof).sort_stats("cumulative").print_stats(top)
+        if out is not None:
+            with open(out, "w") as fh:
+                pstats.Stats(prof, stream=fh).sort_stats(
+                    "cumulative").print_stats()
+            print(f"# wrote full cProfile table to {out}")
     return result

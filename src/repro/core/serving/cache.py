@@ -26,13 +26,29 @@ The real-array counterpart (resident-table `embedding_bag` gather,
 validated against kernels/embedding_bag/ref.py) lives in
 repro/core/caching.py.
 
+The shard tier (serving/shard.py) adds a second cache level and row
+VERSIONS on top of the same policies: `CacheConfig.l2` describes one
+shared per-cell L2 EmbeddingCache probed between a pool's L1 miss and
+the shard fetch, and a cache constructed with (or later given) a
+`version_of` callable tracks which published row version each resident
+key was fetched at. `EmbeddingShardService.publish` bumps versions and
+— with invalidation on — calls `invalidate(ids)` down the hierarchy
+(shard -> L2 -> L1): an invalidated resident row is served as a MISS on
+its next access (refetched in place, version refreshed). With
+invalidation off the caches keep serving superseded rows; every such
+serve increments the `staleness` counter, the number the staleness-vs-
+hit-rate bench experiment sweeps.
+
 Invariants: every policy is deterministic — same access stream, same
 capacity => bit-identical hit/miss sequence, eviction order and final
 resident set (the tests replay streams and compare `resident_keys()`).
 No policy ever holds more than `capacity` keys. Stats counters
-(hits/misses/evictions) are cumulative over the run; `warm()` touches
-keys without counting, so a pre-warmed cache starts at hit_rate 0/0.
-Times are seconds on the event-loop clock; capacities are rows (ids).
+(hits/misses/evictions/staleness) are cumulative over the run;
+`warm()` touches keys without counting, so a pre-warmed cache starts
+at hit_rate 0/0. Invalidation never changes eviction order: the dirty
+mark lives beside the policy, not inside it, so the policy sees the
+exact same access stream either way. Times are seconds on the
+event-loop clock; capacities are rows (ids).
 """
 from __future__ import annotations
 
@@ -40,7 +56,7 @@ import dataclasses
 import heapq
 import itertools
 from collections import OrderedDict, deque
-from typing import Dict, Hashable, Iterable, Optional, Tuple
+from typing import Callable, Dict, Hashable, Iterable, List, Optional, Set, Tuple
 
 
 class CachePolicyBase:
@@ -61,6 +77,11 @@ class CachePolicyBase:
 
     def resident_keys(self) -> Tuple:
         """Resident set in a policy-defined deterministic order."""
+        raise NotImplementedError
+
+    def __contains__(self, key: Hashable) -> bool:
+        """Residency check with NO side effects (no recency/frequency
+        touch, no admission) — what invalidation probes."""
         raise NotImplementedError
 
     def __len__(self) -> int:
@@ -88,6 +109,9 @@ class LRUCache(CachePolicyBase):
 
     def resident_keys(self):
         return tuple(self._od)  # LRU -> MRU order
+
+    def __contains__(self, key):
+        return key in self._od
 
 
 class LFUCache(CachePolicyBase):
@@ -134,6 +158,9 @@ class LFUCache(CachePolicyBase):
     def resident_keys(self):
         # (freq asc, insertion seq asc): eviction order, coldest first
         return tuple(sorted(self._freq, key=self._freq.__getitem__))
+
+    def __contains__(self, key):
+        return key in self._freq
 
 
 class S3FifoCache(CachePolicyBase):
@@ -220,6 +247,9 @@ class S3FifoCache(CachePolicyBase):
     def resident_keys(self):
         return tuple(self._small) + tuple(self._main)  # FIFO order per tier
 
+    def __contains__(self, key):
+        return key in self._where
+
 
 CACHE_POLICIES: Dict[str, type] = {
     LRUCache.name: LRUCache,
@@ -241,43 +271,122 @@ def make_cache_policy(name: str, capacity: int) -> CachePolicyBase:
 class CacheConfig:
     """Per-pool cache knobs (PoolSpec.cache). `capacity_rows` bounds the
     embedding cache in resident ID rows; `result_capacity`/`result_ttl_s`
-    bring up the request-signature ResultCache (0 disables it)."""
+    bring up the request-signature ResultCache (0 disables it). `l2`
+    describes the CELL-level cache: one shared EmbeddingCache built by
+    the ServingSystem from this nested config and probed by every pool
+    in the cell between its own L1 miss and the shard fetch. All pools
+    that set `l2` within one cell must agree on (capacity_rows, policy)
+    — there is exactly one L2 per cell (engine.py enforces this)."""
 
     capacity_rows: int
     policy: str = "lru"
     result_capacity: int = 0
     result_ttl_s: float = 1.0
+    l2: Optional["CacheConfig"] = None
 
 
 class EmbeddingCache:
     """Hot-ID row cache: `lookup(ids)` runs one request's embedding ids
     through the policy and returns (hits, misses); missed rows are
     admitted (fetch-on-miss). Cumulative hit/miss counters feed the
-    pool's metrics and the routers' predicted miss cost."""
+    pool's metrics and the routers' predicted miss cost.
 
-    def __init__(self, capacity_rows: int, policy: str = "lru"):
+    Versioning (shard tier): with a `version_of` callable bound — the
+    shard service binds its own via `register_cache` — each fetch
+    (miss) records the row's published version. A later `invalidate`
+    marks resident copies dirty: the next access serves them as a MISS
+    (refetch in place; the policy still sees a hit, so eviction order
+    is untouched and bit-identical with invalidation on or off). A
+    clean hit whose recorded version is superseded bumps `staleness` —
+    the count of stale serves, i.e. what users see when invalidation
+    is off or hasn't reached this tier."""
+
+    def __init__(
+        self,
+        capacity_rows: int,
+        policy: str = "lru",
+        *,
+        version_of: Optional[Callable[[Hashable], int]] = None,
+    ):
         self.impl = make_cache_policy(policy, capacity_rows)
         self.policy = policy
         self.capacity_rows = capacity_rows
+        self.version_of = version_of
         self.hits = 0
         self.misses = 0
+        self.staleness = 0  # serves of a superseded row version
+        self.invalidated = 0  # resident rows marked dirty, cumulative
+        self._ver: Dict[Hashable, int] = {}  # key -> version at fetch
+        self._dirty: Set[Hashable] = set()  # resident but superseded
+
+    def access(self, key: Hashable) -> bool:
+        """One id through the policy + version layer; True = hit. An
+        invalidated resident row reports a miss (the refetch) even
+        though the policy keeps it resident; a clean hit on a
+        superseded version counts one stale serve."""
+        hit = self.impl.access(key)
+        if hit and key in self._dirty:
+            hit = False  # invalidated: refetch the row in place
+        if hit:
+            if self.version_of is not None and self._ver.get(key, 0) != self.version_of(key):
+                self.staleness += 1
+            self.hits += 1
+        else:
+            self._dirty.discard(key)
+            if self.version_of is not None:
+                self._ver[key] = self.version_of(key)
+                # _ver tracks fetch versions for resident keys only; prune
+                # it (deterministically, against the policy's resident set)
+                # before it outgrows a few multiples of capacity
+                if len(self._ver) > 8 * self.capacity_rows:
+                    resident = set(self.impl.resident_keys())
+                    self._ver = {k: v for k, v in self._ver.items() if k in resident}
+            self.misses += 1
+        return hit
 
     def lookup(self, ids: Iterable[Hashable]) -> Tuple[int, int]:
         hits = misses = 0
         for i in ids:
-            if self.impl.access(i):
+            if self.access(i):
                 hits += 1
             else:
                 misses += 1
-        self.hits += hits
-        self.misses += misses
         return hits, misses
+
+    def lookup_misses(self, ids: Iterable[Hashable]) -> Tuple[int, List[Hashable]]:
+        """Like `lookup` but returns the missed ids themselves, in
+        access order — the rows the next tier down (cell L2, then the
+        shard service) must serve."""
+        hits = 0
+        missed: List[Hashable] = []
+        for i in ids:
+            if self.access(i):
+                hits += 1
+            else:
+                missed.append(i)
+        return hits, missed
+
+    def invalidate(self, ids: Iterable[Hashable]) -> int:
+        """Mark resident copies of `ids` superseded (shard publish with
+        invalidation on): their next access refetches in place. Only
+        resident rows are marked — non-resident ids would miss anyway —
+        so the dirty set stays bounded by capacity. Idempotent; returns
+        the rows newly marked."""
+        marked = 0
+        for i in ids:
+            if i in self.impl and i not in self._dirty:
+                self._dirty.add(i)
+                marked += 1
+        self.invalidated += marked
+        return marked
 
     def warm(self, ids: Iterable[Hashable]) -> None:
         """Pre-load ids without touching the hit/miss counters — a warmed
-        cache starts the run resident but statistically clean."""
+        cache starts the run resident but statistically clean. Warmed
+        rows record the current published version."""
         for i in ids:
-            self.impl.access(i)
+            if not self.impl.access(i) and self.version_of is not None:
+                self._ver[i] = self.version_of(i)
 
     @property
     def hit_rate(self) -> float:
@@ -300,6 +409,8 @@ class EmbeddingCache:
             "hit_rate": self.hit_rate,
             "evictions": self.evictions,
             "resident_rows": len(self.impl),
+            "staleness": self.staleness,
+            "invalidated": self.invalidated,
         }
 
 

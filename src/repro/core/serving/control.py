@@ -16,12 +16,13 @@ layer for the simulator:
                          item average, which used to be a never-decaying
                          lifetime counter)
     OnlineLatencyModel   wraps the calibrated offline LatencyModel and
-                         EWMA-corrects it with a multiplicative factor
-                         learned from observed (batch items, miss rows,
-                         measured service seconds) samples at each
-                         batch_done — `ReplicaPool.dense_latency`,
-                         `predicted_latency` and `CostModelRouter.
-                         estimate` consult the corrected curve
+                         EWMA-corrects it with SEPARATE multiplicative
+                         dense and embedding-fetch corrections learned
+                         from observed (batch items, miss rows, measured
+                         service seconds) samples at each batch_done —
+                         `ReplicaPool.dense_latency`, `predicted_latency`
+                         and `CostModelRouter.estimate` consult the
+                         corrected curve and corrected per-row fetch
     BatchSizeController  per-pool effective `max_batch_items`, widened
                          under SLO headroom (throughput) and narrowed on
                          breach (latency), driven from `scale_tick`
@@ -30,7 +31,8 @@ layer for the simulator:
 Signal path (pool.py wires it):
 
     batch_done ──► OnlineLatencyModel.observe(items, miss_rows, measured)
-                        │  correction = EWMA(measured / predicted)
+                        │  fetch-free batch:  dense corr = EWMA(meas/dense)
+                        │  fetch-carrying:    fetch corr = EWMA(residual/fetch)
                         ▼
     predicted_latency / CostModelRouter.estimate  (corrected curve)
 
@@ -51,7 +53,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.core.serving.replica import LatencyModel
+from repro.core.serving.replica import LatencyModel, MissProfile
 
 
 class Ewma:
@@ -108,37 +110,74 @@ class ControlConfig:
 class OnlineLatencyModel:
     """The calibrated offline curve, EWMA-corrected from observation.
 
-    Each completed batch contributes one sample: the ratio of MEASURED
-    service seconds to the offline prediction at that batch's (items,
-    miss rows). The smoothed ratio multiplies every prediction, so a
-    spec whose offline calibration is 2x off converges onto the observed
-    curve after a handful of batches — and keeps tracking slow drift.
-    A single multiplicative factor (not per-size residuals) keeps the
-    estimator sample-efficient at every batch size at once: mis-
-    calibration and interference overwhelmingly scale the whole curve."""
+    Service time has two physically separate legs — dense compute and
+    per-missed-row embedding fetch — that drift INDEPENDENTLY (thermal
+    throttling hits the matmuls; a saturated memory bus or a degraded
+    shard link hits the fetches), so the model learns two multiplicative
+    corrections instead of one conflated ratio (which shard-fetch-
+    dominated batches used to drag onto the dense curve and vice versa):
+
+    - a batch with NO fetched rows is a pure dense sample — its
+      measured/offline ratio updates the DENSE correction;
+    - a batch that fetched rows updates the FETCH correction from the
+      residual after the (currently corrected) dense leg and the
+      batch's inter-cell transit are subtracted, per predicted fetch
+      second, clamped non-negative.
+
+    Each correction is a single multiplicative factor (not per-size
+    residuals): that keeps the estimator sample-efficient at every
+    batch size at once, because mis-calibration and interference
+    overwhelmingly scale a whole leg. `miss_rows` may be an int or a
+    replica.MissProfile — transit seconds are the RTT matrix's, known
+    exactly, so they are subtracted rather than corrected."""
 
     def __init__(self, offline: LatencyModel, embed_fetch_s: float = 0.0,
                  alpha: float = 0.25):
         self.offline = offline
         self.embed_fetch_s = embed_fetch_s
-        self._corr = Ewma(alpha)
+        self._dense_corr = Ewma(alpha)
+        self._fetch_corr = Ewma(alpha)
 
     @property
     def correction(self) -> float:
-        """Multiplicative observed/offline factor (1.0 until the first
-        sample — an unobserved pool trusts its calibration)."""
-        return 1.0 if self._corr.value is None else self._corr.value
+        """Multiplicative observed/offline factor on the DENSE leg (1.0
+        until the first fetch-free sample — an unobserved pool trusts
+        its calibration). Kept under the pre-split name: every existing
+        consumer (trace column, control summary, rollup) read the dense
+        curve's correction."""
+        return 1.0 if self._dense_corr.value is None else self._dense_corr.value
+
+    @property
+    def fetch_correction(self) -> float:
+        """Multiplicative observed/offline factor on the per-row
+        embedding-fetch leg (1.0 until the first fetch-carrying
+        sample)."""
+        return 1.0 if self._fetch_corr.value is None else self._fetch_corr.value
 
     @property
     def samples(self) -> int:
-        return self._corr.samples
+        return self._dense_corr.samples + self._fetch_corr.samples
 
-    def observe(self, items: int, miss_rows: int, measured_s: float) -> None:
+    def observe(self, items: int, miss_rows, measured_s: float) -> None:
         """One batch_done sample: measured service seconds for a batch
-        of `items` work items whose lookups missed `miss_rows` rows."""
-        predicted = self.offline(items) + miss_rows * self.embed_fetch_s
-        if predicted > 0.0 and measured_s >= 0.0:
-            self._corr.update(measured_s / predicted)
+        of `items` work items whose lookups missed `miss_rows` rows (int,
+        or a MissProfile carrying the shard tier's decomposition)."""
+        if measured_s < 0.0:
+            return
+        if isinstance(miss_rows, MissProfile):
+            fetch_rows, transit_s = miss_rows.fetch_rows, miss_rows.transit_s
+        else:
+            fetch_rows, transit_s = miss_rows, 0.0
+        dense_pred = self.offline(items)
+        fetch_pred = fetch_rows * self.embed_fetch_s
+        if fetch_pred <= 0.0:
+            # pure dense sample (transit without fetched rows cannot occur:
+            # transit is charged per remote shard actually fetched from)
+            if dense_pred > 0.0:
+                self._dense_corr.update(measured_s / dense_pred)
+        else:
+            residual = measured_s - self.correction * dense_pred - transit_s
+            self._fetch_corr.update(max(residual / fetch_pred, 0.0))
 
     def dense(self, items: int) -> float:
         """Corrected dense service time at `items` work items."""
@@ -147,7 +186,7 @@ class OnlineLatencyModel:
     @property
     def fetch_s(self) -> float:
         """Corrected per-missed-row embedding-fetch seconds."""
-        return self.correction * self.embed_fetch_s
+        return self.fetch_correction * self.embed_fetch_s
 
 
 class BatchSizeController:

@@ -11,6 +11,11 @@ Post-refactor layering — the engine is an orchestrator, not a monolith:
     cache.py     EmbeddingCache/ResultCache  per-pool hot-ID caching:
                                   misses pay embed_fetch_s, repeats can
                                   complete straight from the result cache
+    shard.py     EmbeddingShardService  the sharded table under the
+                                  caches: pool L1 misses probe a cell-
+                                  shared L2 (CacheConfig.l2, built here),
+                                  the rest fetch from home/remote shards;
+                                  versioned updates invalidate downward
     control.py   OnlineLatencyModel/BatchSizeController  adaptive control
                                   plane: EWMA-corrected latency curve +
                                   SLO-aware per-pool batch sizing
@@ -48,8 +53,9 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.serving.autoscaler import CapacityBudget, ScalerConfig
-from repro.core.serving.cache import CacheConfig
+from repro.core.serving.cache import CacheConfig, EmbeddingCache
 from repro.core.serving.cascade import CascadeConfig, CascadeDispatcher
+from repro.core.serving.shard import EmbeddingShardService
 from repro.core.serving.control import ControlConfig
 from repro.core.serving.events import EventLoop
 from repro.core.serving.metrics import (
@@ -111,6 +117,7 @@ class ServingSystem:
         event_ns: str = "",
         scheduler: str = "calendar",
         strict_events: bool = False,
+        shard: Optional[EmbeddingShardService] = None,
     ):
         # `loop`/`event_ns` let a federation embed several systems (cells)
         # on ONE shared clock: each system's events — and its pools' — are
@@ -136,10 +143,34 @@ class ServingSystem:
         else:
             self.budget = CapacityBudget(capacity) if capacity is not None else None
         self.monitor = SLOMonitor(slo_s=slo_p99_s)  # end-to-end latencies
+        self.shard = shard
+        specs = {
+            name: ps if isinstance(ps, PoolSpec) else PoolSpec(ps)
+            for name, ps in pools.items()
+        }
+        # cell-shared L2: ONE EmbeddingCache for the whole system (cell),
+        # described by the pools' CacheConfig.l2 — every pool that sets it
+        # must agree, because they are describing the same shared cache.
+        # Registered with the shard service BEFORE any pool L1 so
+        # invalidations propagate shard -> L2 -> L1.
+        l2_cfgs = {
+            (ps.cache.l2.capacity_rows, ps.cache.l2.policy)
+            for ps in specs.values()
+            if ps.cache is not None and ps.cache.l2 is not None
+        }
+        if len(l2_cfgs) > 1:
+            raise ValueError(
+                f"pools disagree on the shared L2 cache config: {sorted(l2_cfgs)}"
+            )
+        self.l2_cache: Optional[EmbeddingCache] = None
+        if l2_cfgs:
+            cap, policy = next(iter(l2_cfgs))
+            self.l2_cache = EmbeddingCache(cap, policy)
+            if shard is not None:
+                shard.register_cache(self.l2_cache)
         self.pools: Dict[str, ReplicaPool] = {}
-        for name, ps in pools.items():
-            if isinstance(ps, ReplicaSpec):
-                ps = PoolSpec(ps)
+        for name, ps in specs.items():
+            has_l2 = ps.cache is not None and ps.cache.l2 is not None
             self.pools[name] = ReplicaPool(
                 name, ps.spec, ps.cfg, self.loop,
                 scaler_cfg=ps.scaler, budget=self.budget,
@@ -147,6 +178,8 @@ class ServingSystem:
                 picker=self.router.select_replica, tiers=ps.tiers,
                 event_key=f"{event_ns}/{name}" if event_ns else name,
                 cache_cfg=ps.cache, control_cfg=ps.control,
+                l2_cache=self.l2_cache if has_l2 else None,
+                shard=shard, cell=event_ns,
             )
         self.cascade = CascadeDispatcher(cascade) if cascade is not None else None
         if self.cascade is not None:
@@ -166,9 +199,17 @@ class ServingSystem:
         ])
         self.loop.on(self._event("arrive"), self._handle_arrive)
         self.loop.on(self._event("scale"), self._handle_scale)
+        if shard is not None:
+            # online table updates for standalone systems: push/stream
+            # ("shard_update", ids) events (namespaced when embedded; a
+            # federation additionally handles the global "shard_update")
+            self.loop.on(self._event("shard_update"), self._handle_shard_update)
 
     def _event(self, kind: str) -> str:
         return f"{kind}:{self.event_ns}" if self.event_ns else kind
+
+    def _handle_shard_update(self, now: float, ids) -> None:
+        self.shard.publish(ids)
 
     # ---- admission path (reusable: the arrive handler and federation
     # cells both go through it) ----
@@ -271,6 +312,19 @@ class ServingSystem:
     def summary(self) -> Dict:
         totals = self.monitor.totals()
         in_queue = sum(len(p.queue) for p in self.pools.values())
+        cache = fleet_cache_rollup(p.cache_summary() for p in self.pools.values())
+        if self.l2_cache is not None:
+            # the shared L2 is cell-level state, not any one pool's: fold
+            # its counters into the cell cache block under their own keys
+            # (fleet_cache_rollup sums them upward through federated_rollup)
+            s = self.l2_cache.stats()
+            cache["l2_hits"] = s["hits"]
+            cache["l2_misses"] = s["misses"]
+            cache["l2_hit_rate"] = s["hit_rate"]
+            cache["staleness"] += s["staleness"]
+            cache["invalidated"] += s["invalidated"]
+        if self.shard is not None:
+            cache.update(self.shard.cell_stats(self.event_ns))
         return {
             "p50": totals["p50"],
             "p99": totals["p99"],
@@ -288,11 +342,15 @@ class ServingSystem:
                 self._completed_in_horizon / self._horizon if self._horizon > 0 else 0.0
             ),
             "final_replicas": sum(len(p.replicas) for p in self.pools.values()),
-            "cache": fleet_cache_rollup(
-                p.cache_summary() for p in self.pools.values()
-            ),
+            "cache": cache,
             "control": fleet_control_rollup(
                 p.control_summary() for p in self.pools.values()
+            ),
+            # this cell's OWN shard traffic (fleet-global shard state lives
+            # in FederatedSystem.summary()["shard"])
+            "shard": (
+                self.shard.cell_stats(self.event_ns)
+                if self.shard is not None else None
             ),
             # events that fired with no registered handler on this system's
             # loop (shared with every cell when federated); the seed kernel

@@ -25,13 +25,15 @@ Two pending-event stores implement one ordering contract:
                        baseline ("the pre-PR kernel").
     CalendarScheduler  calendar-queue / bucketed scheduler (the default):
                        events inside the CURRENT time window live in a
-                       small binary heap; later events append O(1) into
-                       per-window buckets keyed by integer window index
-                       (a lazy min-heap over occupied indices finds the
-                       next window). Near-O(1) push/pop for the mostly
-                       monotone streams pools generate, because the
-                       window heap holds only the events of one bucket
-                       width — not the whole simulation's backlog.
+                       columnar numpy argmin store (_ArgminWindow);
+                       later events append O(1) into per-window buckets
+                       keyed by integer window index (a lazy min-heap
+                       over occupied indices finds the next window).
+                       Near-O(1) push/pop for the mostly monotone
+                       streams pools generate, because the window holds
+                       only the events of one bucket width — not the
+                       whole simulation's backlog — and its minimum is
+                       one vectorized scan, not per-event tuple sifting.
 
 Ordering invariant (both schedulers, bit-exact): events fire in
 (time, push-order) — FIFO within equal timestamps, so replaying the same
@@ -59,6 +61,8 @@ from __future__ import annotations
 import heapq
 import itertools
 from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple
+
+import numpy as np
 
 # one pending event: (time, push-order, kind, payload)
 Entry = Tuple[float, int, str, object]
@@ -89,31 +93,126 @@ class HeapScheduler:
         return heapq.heappop(self._heap)
 
 
+class _ArgminWindow:
+    """CalendarScheduler's current-window store: columnar (t, seq) numpy
+    arrays aligned with an entry list, served by a vectorized argmin
+    instead of heap sifting. A window holds one bucket's worth of events
+    (~MAX_BUCKET/4 after a shrink), so the O(n) scan is one contiguous
+    float compare over a small array — cheaper in practice than the
+    pointer-chasing tuple comparisons heappush/heappop do per event.
+
+    Order contract (bit-exact vs the binary heap): the minimum is the
+    entry with the least (t, seq) — np.argmin finds the earliest time,
+    and ties on t resolve by the least sequence number (seq is unique,
+    so the pair is a total order; kind/payload never participate, same
+    as the heap where seq always breaks the tie first).
+
+    The argmin slot is cached: a push keeps the cache valid by comparing
+    the new entry against the cached minimum; a pop swap-deletes the
+    minimum with the last slot (clearing the popped reference) and
+    invalidates the cache, so a peek/pop pair costs one scan."""
+
+    __slots__ = ("_t", "_seq", "_entries", "_n", "_min")
+
+    def __init__(self, entries: Optional[List[Entry]] = None) -> None:
+        n = len(entries) if entries else 0
+        cap = max(16, n)
+        self._t = np.empty(cap, dtype=np.float64)
+        self._seq = np.empty(cap, dtype=np.int64)
+        self._entries: List[Optional[Entry]] = [None] * cap
+        if entries:
+            for i, e in enumerate(entries):
+                self._t[i] = e[0]
+                self._seq[i] = e[1]
+                self._entries[i] = e
+        self._n = n
+        self._min = -1  # cached argmin slot; -1 = unknown
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __iter__(self) -> Iterator[Entry]:
+        return iter(self._entries[: self._n])
+
+    def push(self, entry: Entry) -> None:
+        n = self._n
+        if n == len(self._entries):
+            grown_t = np.empty(2 * n, dtype=np.float64)
+            grown_t[:n] = self._t
+            self._t = grown_t
+            grown_seq = np.empty(2 * n, dtype=np.int64)
+            grown_seq[:n] = self._seq
+            self._seq = grown_seq
+            self._entries.extend([None] * n)
+        self._t[n] = entry[0]
+        self._seq[n] = entry[1]
+        self._entries[n] = entry
+        self._n = n + 1
+        m = self._min
+        if m >= 0:
+            tm = self._t[m]
+            if entry[0] < tm or (entry[0] == tm and entry[1] < self._seq[m]):
+                self._min = n
+        elif n == 0:
+            self._min = 0
+
+    def _argmin(self) -> int:
+        t = self._t[: self._n]
+        i = int(np.argmin(t))
+        ties = np.flatnonzero(t == t[i])
+        if len(ties) > 1:
+            i = int(ties[np.argmin(self._seq[ties])])
+        self._min = i
+        return i
+
+    def peek(self) -> Entry:
+        m = self._min
+        if m < 0:
+            m = self._argmin()
+        return self._entries[m]
+
+    def pop(self) -> Entry:
+        m = self._min
+        if m < 0:
+            m = self._argmin()
+        entry = self._entries[m]
+        last = self._n - 1
+        if m != last:
+            self._t[m] = self._t[last]
+            self._seq[m] = self._seq[last]
+            self._entries[m] = self._entries[last]
+        self._entries[last] = None  # drop the popped reference
+        self._n = last
+        self._min = -1
+        return entry
+
+
 class CalendarScheduler:
-    """Calendar-queue scheduler: a small current-window heap + unsorted
-    future buckets.
+    """Calendar-queue scheduler: a small current-window argmin store +
+    unsorted future buckets.
 
     Routing happens entirely in integer bucket-index space: an event's
     index is int(t / width), and the window covers every index up to
-    `_win_idx` inclusive. An event at or before the window index
-    heap-pushes into the window heap (exact order kept, including
-    out-of-band pushes at or before `now`); a later event APPENDS to its
-    index's bucket — O(1) — creating the bucket (and registering its
-    index in a min-heap) on first use. Comparing indices, not float
-    boundary times, matters: fp division can round t/width UP across a
-    bucket boundary, and an equal-time pair split across the boundary by
-    a float `t < win_end` test would fire out of push order. int(t/width)
-    is monotone in t, so index order is time order and equal times always
+    `_win_idx` inclusive. An event at or before the window index joins
+    the window's argmin store (exact order kept, including out-of-band
+    pushes at or before `now`); a later event APPENDS to its index's
+    bucket — O(1) — creating the bucket (and registering its index in a
+    min-heap) on first use. Comparing indices, not float boundary times,
+    matters: fp division can round t/width UP across a bucket boundary,
+    and an equal-time pair split across the boundary by a float
+    `t < win_end` test would fire out of push order. int(t/width) is
+    monotone in t, so index order is time order and equal times always
     share one container.
 
-    Pop/peek: serve the window heap; when it drains, promote the earliest
-    occupied bucket — pop its index, heapify its entries as the new
-    window heap (O(bucket)), and advance `_win_idx` to it.
+    Pop/peek: serve the window's (t, seq) minimum via _ArgminWindow's
+    vectorized scan; when the window drains, promote the earliest
+    occupied bucket — pop its index, wrap its entries as the new window
+    (O(bucket)), and advance `_win_idx` to it.
 
     Total order is EXACTLY the binary heap's (time, push-order): every
     bucketed event's index exceeds `_win_idx` (so its time is >= every
-    window event's), buckets promote in index order, and the window heap
-    orders by (t, seq).
+    window event's), buckets promote in index order, and the window
+    serves by least (t, seq).
 
     Width adapts downward only, deterministically: when a promoted bucket
     exceeds MAX_BUCKET entries the width shrinks (targeting ~MAX_BUCKET/4
@@ -129,7 +228,7 @@ class CalendarScheduler:
 
     def __init__(self, width: float = 0.05) -> None:
         self._width = width
-        self._win: List[Entry] = []  # current-window heap (exact order)
+        self._win = _ArgminWindow()  # current window (exact order)
         self._win_idx = 0  # window covers every index <= this (past stays exact)
         self._buckets: Dict[int, List[Entry]] = {}
         self._indices: List[int] = []  # min-heap of occupied bucket indices
@@ -142,7 +241,7 @@ class CalendarScheduler:
         self._len += 1
         idx = int(entry[0] / self._width)
         if idx <= self._win_idx:
-            heapq.heappush(self._win, entry)
+            self._win.push(entry)
             return
         bucket = self._buckets.get(idx)
         if bucket is None:
@@ -152,11 +251,10 @@ class CalendarScheduler:
             bucket.append(entry)
 
     def _promote(self) -> None:
-        """Move the earliest occupied bucket into the (empty) window heap."""
+        """Move the earliest occupied bucket into the (empty) window."""
         idx = heapq.heappop(self._indices)
         bucket = self._buckets.pop(idx)
-        self._win = bucket
-        heapq.heapify(bucket)
+        self._win = _ArgminWindow(bucket)
         self._win_idx = idx
         if len(bucket) > self.MAX_BUCKET and self._width > self.MIN_WIDTH:
             self._shrink(len(bucket))
@@ -180,7 +278,7 @@ class CalendarScheduler:
         for entry in pending:
             idx = int(entry[0] / self._width)
             if idx <= self._win_idx:
-                heapq.heappush(self._win, entry)
+                self._win.push(entry)
             elif (bucket := self._buckets.get(idx)) is None:
                 self._buckets[idx] = [entry]
                 heapq.heappush(self._indices, idx)
@@ -192,13 +290,13 @@ class CalendarScheduler:
             if not self._indices:
                 return None
             self._promote()
-        return self._win[0]
+        return self._win.peek()
 
     def pop(self) -> Entry:
         if not self._win:
             self._promote()
         self._len -= 1
-        return heapq.heappop(self._win)
+        return self._win.pop()
 
 
 SCHEDULERS = {"heap": HeapScheduler, "calendar": CalendarScheduler}

@@ -66,6 +66,15 @@ a request spilled to a remote cell runs its ids through THAT cell's
 caches, so with per-cell hot sets a spill pays cold misses remotely —
 spillover trades queueing delay against cache locality, and the summary
 shows both sides (per-cell hit rates + fleet cache rollup).
+
+The embedding TABLE, by contrast, is fleet-global: pass
+`shard=EmbeddingShardService(...)` (serving/shard.py) and every cell's
+pools fetch their cache misses from the same sharded table — shards
+homed in the serving cell are local, remote shards pay this
+federation's per-pair RTT matrix (bound onto the shard service when it
+was built without one). Online table updates arrive as
+("shard_update", ids) events on the shared loop and propagate
+invalidations shard -> cell L2 -> pool L1.
 """
 from __future__ import annotations
 
@@ -85,27 +94,10 @@ from repro.core.serving.pool import Request
 from repro.core.serving.rate_limiter import TierPolicy
 from repro.core.serving.replica import ReplicaSpec
 from repro.core.serving.router import CostModelRouter, Router, make_router
-
-
-class RttMatrix:
-    """Per-cell-pair one-way transfer times. Looks up (src, dst), then the
-    symmetric (dst, src), then falls back to the scalar default — so a
-    federation built with only `rtt_s` behaves exactly as before, and a
-    partial matrix only needs the asymmetric / non-default pairs. Same-cell
-    and front-door (src == "") hops are free."""
-
-    def __init__(self, default_s: float,
-                 pairs: Optional[Dict[Tuple[str, str], float]] = None):
-        self.default_s = default_s
-        self.pairs = dict(pairs or {})
-
-    def __call__(self, src: str, dst: str) -> float:
-        if not src or src == dst:
-            return 0.0
-        hit = self.pairs.get((src, dst))
-        if hit is None:
-            hit = self.pairs.get((dst, src))
-        return self.default_s if hit is None else hit
+# RttMatrix moved down to shard.py (the shard tier charges hops from the
+# same matrix and sits below the federation); re-exported here so existing
+# `from ...federation import RttMatrix` imports keep working
+from repro.core.serving.shard import EmbeddingShardService, RttMatrix
 
 
 @dataclasses.dataclass
@@ -131,7 +123,8 @@ class Cell:
 
     def __init__(self, name: str, spec: CellSpec, loop: EventLoop,
                  budget: Optional[CapacityBudget], scale_tick_s: float,
-                 rtt: Optional[RttMatrix] = None):
+                 rtt: Optional[RttMatrix] = None,
+                 shard: Optional[EmbeddingShardService] = None):
         self.name = name
         # per-pair transfer time INTO this cell; policies charge it for
         # off-home candidates so the decision rule and the physical hop
@@ -142,7 +135,7 @@ class Cell:
             slo_p99_s=spec.slo_p99_s, scale_tick_s=scale_tick_s,
             capacity=budget, cascade=spec.cascade,
             adaptive_shedding=spec.adaptive_shedding,
-            loop=loop, event_ns=name,
+            loop=loop, event_ns=name, shard=shard,
         )
         self.spill = SpillStats()
 
@@ -273,6 +266,7 @@ class FederatedSystem:
         scale_tick_s: float = 1.0,
         scheduler: str = "calendar",
         strict_events: bool = False,
+        shard: Optional[EmbeddingShardService] = None,
     ):
         if not cells:
             raise ValueError("a federation needs at least one cell")
@@ -282,6 +276,10 @@ class FederatedSystem:
         self.policy = make_cell_policy(policy) if isinstance(policy, str) else policy
         self.rtt_s = rtt_s
         self.rtt = RttMatrix(rtt_s, rtt)  # per-(src, dst) with scalar fallback
+        self.shard = shard
+        if shard is not None and shard.rtt is None:
+            # shard fetches and spill hops charge the SAME per-pair matrix
+            shard.rtt = self.rtt
         self.spillover = spillover
         self.spill_headroom = spill_headroom
         self.slo_p99_s = slo_p99_s
@@ -294,7 +292,7 @@ class FederatedSystem:
             else:
                 budget = self.global_budget  # share the global cap directly
             cell = Cell(name, spec, self.loop, budget, scale_tick_s,
-                        rtt=self.rtt)
+                        rtt=self.rtt, shard=shard)
             cell.system.on_complete = self._request_done
             cell.system.spill_stage = (
                 lambda now, req, pool_name, _cell=cell:
@@ -314,6 +312,13 @@ class FederatedSystem:
         self.loop.on("spill", self._handle_spill)
         self.loop.on("spill_stage", self._handle_spill_stage)
         self.loop.on("scale", self._handle_scale)
+        if shard is not None:
+            # online table updates: push/stream ("shard_update", ids) onto
+            # the shared loop; the publish propagates shard -> L2 -> L1
+            self.loop.on("shard_update", self._handle_shard_update)
+
+    def _handle_shard_update(self, now: float, ids) -> None:
+        self.shard.publish(ids)
 
     # ---- spill decisions ----
     def _headroom_s(self, cell: Cell) -> float:
@@ -506,6 +511,9 @@ class FederatedSystem:
             "final_replicas": rollup["final_replicas"],
             "dropped_events": self.loop.dropped_events,
             "trace": self.trace.as_dict(),
+            # fleet-global shard view (per-cell fetch splits live in each
+            # cell's own summary["shard"] and in summary["cache"] rollups)
+            "shard": self.shard.summary() if self.shard is not None else None,
             "cells": cells,
         }
 

@@ -24,7 +24,11 @@ The caching layer (serving/cache.py) reports through here too: each
 pool's hit/miss/eviction/result-hit counters roll up per system and per
 federation via `fleet_cache_rollup`, and every pool traces its live
 hit-rate at each scale tick — so a latency regression is attributable to
-a cooling cache, not just observed at the front door.
+a cooling cache, not just observed at the front door. The shard tier
+(serving/shard.py) extends the same rollup with staleness (serves of a
+superseded row version), the cell-shared L2's hits/misses and the
+local/remote shard-fetch split — summed pool -> cell -> fleet without
+double counting, because L2 and shard counters enter once per cell.
 
 So does the adaptive control plane (serving/control.py):
 `fleet_control_rollup` sums per-pool control summaries (learned latency
@@ -109,16 +113,26 @@ class SpillStats:
 
 def fleet_cache_rollup(cache_summaries) -> Dict:
     """Sum per-pool cache summaries (ReplicaPool.cache_summary() dicts)
-    into one hit/miss/eviction tally with the aggregate hit-rate — the
-    caching layer's contribution to an engine or federation summary.
-    Pools without a cache contribute zeros, so the rollup is meaningful
-    whether zero, some, or all pools cache."""
-    out = {"hits": 0, "misses": 0, "evictions": 0, "result_hits": 0}
+    into one tally with the aggregate hit-rates — the caching layer's
+    contribution to an engine or federation summary. Pools without a
+    cache contribute zeros, so the rollup is meaningful whether zero,
+    some, or all pools cache. The shard-tier keys (staleness, l2_*,
+    local/remote fetches) are zero below the cell level — per-pool
+    summaries don't carry them — and sum when cell cache blocks (which
+    the engine extends with L2 + shard-fetch counters) roll up through
+    `federated_rollup`. Output keys round-trip as input: feeding rollups
+    back through re-sums every counter and recomputes the rates (a
+    property the tests pin down)."""
+    out = {"hits": 0, "misses": 0, "evictions": 0, "result_hits": 0,
+           "staleness": 0, "invalidated": 0, "l2_hits": 0, "l2_misses": 0,
+           "local_fetches": 0, "remote_fetches": 0, "transit_s": 0.0}
     for s in cache_summaries:
         for key in out:
             out[key] += s.get(key, 0)
     seen = out["hits"] + out["misses"]
     out["hit_rate"] = out["hits"] / seen if seen else 0.0
+    l2_seen = out["l2_hits"] + out["l2_misses"]
+    out["l2_hit_rate"] = out["l2_hits"] / l2_seen if l2_seen else 0.0
     return out
 
 
@@ -132,9 +146,12 @@ def fleet_control_rollup(control_summaries) -> Dict:
     because the output keys are themselves accepted as input, per-cell
     rollups — `federated_rollup` feeds cells' "control" blocks straight
     back through, and the sample weighting keeps a one-sample cell from
-    diluting a heavily observed drifted one."""
+    diluting a heavily observed drifted one. The dense and fetch
+    corrections (control.py learns them separately) are both weighted
+    by the pool's total sample count."""
     out = {"online_pools": 0, "adaptive_batch_pools": 0, "samples": 0}
     corr_sum = 0.0
+    fetch_corr_sum = 0.0
     for s in control_summaries:
         out["online_pools"] += s.get(
             "online_pools", int(bool(s.get("online_latency"))))
@@ -144,8 +161,12 @@ def fleet_control_rollup(control_summaries) -> Dict:
         out["samples"] += n
         corr_sum += n * s.get("latency_correction",
                               s.get("mean_latency_correction", 1.0))
+        fetch_corr_sum += n * s.get("fetch_correction",
+                                    s.get("mean_fetch_correction", 1.0))
     out["mean_latency_correction"] = (
         corr_sum / out["samples"] if out["samples"] else 1.0)
+    out["mean_fetch_correction"] = (
+        fetch_corr_sum / out["samples"] if out["samples"] else 1.0)
     return out
 
 

@@ -53,6 +53,16 @@ A pool with NO cache fetches every id row its traffic carries: the
 memory-bound baseline the cache exists to beat. Hit-rate feeds the trace,
 the summary and the routers' predicted miss cost.
 
+With the shard tier (serving/shard.py) the pool cache becomes the L1 of
+a real hierarchy: L1 misses probe the cell-shared L2 cache
+(`l2_cache`, built by the engine from CacheConfig.l2), and what BOTH
+miss is fetched from the sharded table in one batched `shard.fetch`
+call — local-shard rows pay `embed_fetch_s`, remote-shard rows
+additionally pay one inter-cell RTT per (batch, remote shard). The
+decomposition travels as a `replica.MissProfile` through service time,
+the batch-done observation and `predicted_miss_cost`, so the
+cost-model router sees the same three-way split the clock charges.
+
 The control plane is per-pool too (serving/control.py, opt-in via a
 ControlConfig): an OnlineLatencyModel EWMA-corrects the offline-
 calibrated curve from each completed batch's (items, miss rows,
@@ -92,7 +102,8 @@ from repro.core.serving.control import (
 from repro.core.serving.events import EventLoop
 from repro.core.serving.metrics import SLOMonitor, TraceBuffer
 from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
-from repro.core.serving.replica import Replica, ReplicaSpec
+from repro.core.serving.replica import MissProfile, Replica, ReplicaSpec
+from repro.core.serving.shard import EmbeddingShardService
 
 
 @dataclasses.dataclass
@@ -144,6 +155,9 @@ class ReplicaPool:
         event_key: Optional[str] = None,
         cache_cfg: Optional[CacheConfig] = None,
         control_cfg: Optional[ControlConfig] = None,
+        l2_cache: Optional[EmbeddingCache] = None,
+        shard: Optional[EmbeddingShardService] = None,
+        cell: str = "",
     ):
         self.name = name
         # events are keyed by event_key, not name: a federation runs several
@@ -173,6 +187,16 @@ class ReplicaPool:
                 self.result_cache = ResultCache(
                     cache_cfg.result_capacity, cache_cfg.result_ttl_s
                 )
+        # shard tier: the cell-shared L2 (one EmbeddingCache for all pools
+        # in this cell, engine-built) and the fleet's shard service; the
+        # pool's own cache becomes the hierarchy's L1 and joins the shard's
+        # invalidation fan-out (AFTER the L2 — the engine registers that
+        # first, so updates propagate shard -> L2 -> L1)
+        self.l2_cache = l2_cache
+        self.shard = shard
+        self.cell = cell
+        if shard is not None and self.embed_cache is not None:
+            shard.register_cache(self.embed_cache)
         # control plane (serving/control.py): online-corrected latency
         # curve + SLO-aware effective item cap, both opt-in
         self.control_cfg = control_cfg
@@ -234,20 +258,30 @@ class ReplicaPool:
 
     def predicted_miss_cost(self, items: int) -> float:
         """Expected embedding-fetch seconds for a batch of `items` work
-        items: the pool's learned id-rows-per-item average (windowed
-        EWMA of per-batch ratios), discounted by the live cache hit-rate
-        (no cache = every row fetches). Zero until the pool has
-        dispatched id-carrying traffic — cold pools compete on dense
-        cost alone. The per-row fetch consults the online-corrected
-        model when one is learning."""
+        items, decomposed the same three ways the service clock charges
+        (L1 miss -> L2 hit -> shard local/remote): the pool's learned
+        id-rows-per-item average (windowed EWMA of per-batch ratios)
+        discounted by the live L1 hit-rate gives the rows reaching the
+        L2; discounting by the live L2 hit-rate gives the rows reaching
+        the shard tier, each paying the per-row fetch PLUS this cell's
+        learned per-row inter-cell transit — so the cost-model router
+        prefers cells whose L2 and local shards are warm. No cache =
+        every row fetches; no shard = no transit leg. Zero until the
+        pool has dispatched id-carrying traffic — cold pools compete on
+        dense cost alone. The per-row fetch consults the online-
+        corrected model when one is learning."""
         fetch = self.model.fetch_s if self.model is not None else self.spec.embed_fetch_s
-        if fetch <= 0.0 or self._rows_per_item.value is None:
+        if self._rows_per_item.value is None:
             return 0.0
         rows = self._rows_per_item.value * items
-        miss_frac = (
-            1.0 if self.embed_cache is None else 1.0 - self.embed_cache.hit_rate
-        )
-        return rows * miss_frac * fetch
+        if self.embed_cache is not None:
+            rows *= 1.0 - self.embed_cache.hit_rate
+        if self.l2_cache is not None:
+            rows *= 1.0 - self.l2_cache.hit_rate
+        per_row = max(fetch, 0.0)
+        if self.shard is not None:
+            per_row += self.shard.predicted_transit_per_row(self.cell)
+        return rows * per_row
 
     def hit_rate(self) -> float:
         return self.embed_cache.hit_rate if self.embed_cache is not None else 0.0
@@ -342,19 +376,33 @@ class ReplicaPool:
     def _dispatch(self, now: float, take: List[Request]) -> None:
         rep = self.picker(self, now)
         items = sum(r.cost for r in take)
-        # caching layer: run each request's embedding ids through the
-        # pool's hot-ID cache in queue order (deterministic); every MISSED
-        # row extends the batch's service time by spec.embed_fetch_s. A
-        # pool with no cache fetches every row — the memory-bound baseline.
-        miss_rows = 0
+        # miss hierarchy: each request's embedding ids run through the
+        # pool's L1 in queue order (deterministic); L1 misses probe the
+        # cell-shared L2; what both miss is fetched from the shard tier in
+        # ONE batched call (one RTT per remote shard touched). A pool with
+        # no cache sends every row down — the memory-bound baseline. With
+        # no L2 and no shard, miss_rows stays the plain int of the
+        # single-tier model, bit-identical to pre-shard behaviour.
         id_rows = 0
+        below_l1: List = []  # rows the L1 missed, in access order
         for r in take:
             if r.ids:
                 id_rows += len(r.ids)
                 if self.embed_cache is not None:
-                    miss_rows += self.embed_cache.lookup(r.ids)[1]
+                    below_l1.extend(self.embed_cache.lookup_misses(r.ids)[1])
                 else:
-                    miss_rows += len(r.ids)
+                    below_l1.extend(r.ids)
+        l2_hits = 0
+        if self.l2_cache is not None and below_l1:
+            l2_hits, below_l1 = self.l2_cache.lookup_misses(below_l1)
+        if self.shard is not None:
+            prof = self.shard.fetch(self.cell, below_l1)
+            miss_rows: "int | MissProfile" = dataclasses.replace(
+                prof, l2_hits=l2_hits)
+        elif self.l2_cache is not None:
+            miss_rows = MissProfile(l2_hits=l2_hits, local_rows=len(below_l1))
+        else:
+            miss_rows = len(below_l1)
         if items > 0:
             self._rows_per_item.update(id_rows / items)
         start, done = rep.start_batch(now, items, miss_rows)
@@ -456,11 +504,13 @@ class ReplicaPool:
         """Cache counters in one flat dict (zeros when no cache is
         configured, so fleet rollups can sum unconditionally)."""
         out = {"policy": None, "hits": 0, "misses": 0, "hit_rate": 0.0,
-               "evictions": 0, "result_hits": 0}
+               "evictions": 0, "result_hits": 0, "staleness": 0,
+               "invalidated": 0}
         if self.embed_cache is not None:
             s = self.embed_cache.stats()
             out.update({k: s[k] for k in ("policy", "hits", "misses",
-                                          "hit_rate", "evictions")})
+                                          "hit_rate", "evictions",
+                                          "staleness", "invalidated")})
         if self.result_cache is not None:
             out["result_hits"] = self.result_cache.hits
         return out
@@ -474,6 +524,8 @@ class ReplicaPool:
             "online_latency": self.model is not None,
             "latency_correction": (
                 self.model.correction if self.model is not None else 1.0),
+            "fetch_correction": (
+                self.model.fetch_correction if self.model is not None else 1.0),
             "samples": self.model.samples if self.model is not None else 0,
             "adaptive_batch": self.controller is not None,
             "max_batch_items": int(self.item_cap() or 0),

@@ -15,14 +15,51 @@ latency depends on the live hit-rate, not just batch size. Pools with
 no cache pay the fetch for every id row their requests carry (the
 memory-bound baseline); `embed_fetch_s=0` (the default) reduces to the
 pure dense model for traffic that carries no ids.
+
+With the shard tier (serving/shard.py) the miss side splits further:
+`miss_rows` may be a `MissProfile` decomposing one batch's L1-missed
+rows into shared-L2 hits (free), local-shard fetches (pay
+`embed_fetch_s` each) and remote-shard fetches (pay `embed_fetch_s`
+each PLUS the batched inter-cell transit in `transit_s`). A plain int
+still works everywhere and means "all rows fetched locally" — the
+pre-shard behaviour, bit-identical.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MissProfile:
+    """Where one batch's L1-missed embedding rows were served from:
+    `l2_hits` absorbed by the shared per-cell L2 cache (no fetch cost),
+    `local_rows` fetched from shards homed in the serving cell,
+    `remote_rows` fetched from remote-cell shards, and `transit_s` the
+    inter-cell RTT those remote fetches paid (one RTT per (batch,
+    remote shard) pair — the shard service batches fetches per shard,
+    see EmbeddingShardService.fetch)."""
+
+    l2_hits: int = 0
+    local_rows: int = 0
+    remote_rows: int = 0
+    transit_s: float = 0.0
+
+    @property
+    def fetch_rows(self) -> int:
+        """Rows that reached the shard tier and pay `embed_fetch_s`."""
+        return self.local_rows + self.remote_rows
+
+    @property
+    def total_rows(self) -> int:
+        """All rows the pool's L1 missed (L2 hits + shard fetches)."""
+        return self.l2_hits + self.local_rows + self.remote_rows
+
+
+MissRows = Union[int, MissProfile]
 
 
 @dataclasses.dataclass
@@ -82,14 +119,25 @@ class ReplicaSpec:
     warm_start_s: float = 0.25  # pre-initialized pool activation
     embed_fetch_s: float = 0.0  # per MISSED embedding row (caching layer)
     true_latency: Optional[LatencyModel] = None  # observed curve if drifted
+    true_embed_fetch_s: Optional[float] = None  # observed fetch if drifted
 
-    def service_time(self, items: int, miss_rows: int = 0) -> float:
+    def service_time(self, items: int, miss_rows: MissRows = 0) -> float:
         """Cache-aware decomposition: ACTUAL dense compute at `items`
         work items (the drifted curve when calibration is off) + the
         embedding-fetch cost of the rows the pool's hot-ID cache missed
-        for this batch."""
+        for this batch. A `MissProfile` charges the fetch only for rows
+        that reached the shard tier (L2 hits are free) plus the batch's
+        inter-cell transit; an int charges every row, with no transit —
+        the pre-shard local-table model."""
         dense = self.true_latency if self.true_latency is not None else self.latency
-        return dense(items) + miss_rows * self.embed_fetch_s
+        fetch = (
+            self.true_embed_fetch_s
+            if self.true_embed_fetch_s is not None
+            else self.embed_fetch_s
+        )
+        if isinstance(miss_rows, MissProfile):
+            return dense(items) + miss_rows.fetch_rows * fetch + miss_rows.transit_s
+        return dense(items) + miss_rows * fetch
 
 
 def sustainable_rate(
@@ -144,9 +192,10 @@ class Replica:
         """Router signal: time until free (+ small in-flight tie-break)."""
         return self.residual(now) + 0.001 * self.in_flight
 
-    def start_batch(self, now: float, items: int, miss_rows: int = 0) -> Tuple[float, float]:
+    def start_batch(self, now: float, items: int, miss_rows: MissRows = 0) -> Tuple[float, float]:
         """Queue one batch of `items` work units whose embedding lookups
-        missed `miss_rows` cache rows; returns (start, done)."""
+        missed `miss_rows` cache rows (an int, or a MissProfile when the
+        shard tier decomposed the misses); returns (start, done)."""
         start = max(now, self.busy_until, self.ready_at)
         dur = self.spec.service_time(items, miss_rows)
         self.busy_until = start + dur

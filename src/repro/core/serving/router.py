@@ -114,13 +114,19 @@ class CostModelRouter(Router):
     @staticmethod
     def estimate(pool: ReplicaPool, cost: int, now: float) -> float:
         """slot wait + dense service of the joined batch + predicted
-        embedding-miss cost at the pool's LIVE hit-rate — a warm cache
+        embedding-miss cost at the pool's LIVE hit-rates — a warm cache
         makes a pool genuinely cheaper than an identical cold one, and
-        the router sees it (caching layer, serving/cache.py). The dense
-        term goes through `pool.dense_latency`: with a control plane
-        (serving/control.py) that is the ONLINE-corrected curve, so a
-        mis-calibrated or drifted spec stops misrouting as soon as
-        observed service times disagree with it."""
+        the router sees it (caching layer, serving/cache.py). With the
+        shard tier the miss term carries the same three-way split the
+        service clock charges (L1 miss -> shared-L2 hit -> local/remote
+        shard fetch with learned per-row transit; see
+        `ReplicaPool.predicted_miss_cost`), so routing prefers cells
+        whose L2 and local shards are warm. The dense term goes through
+        `pool.dense_latency`: with a control plane (serving/control.py)
+        that is the ONLINE-corrected curve, so a mis-calibrated or
+        drifted spec stops misrouting as soon as observed service times
+        disagree with it — and the per-row fetch consults the fetch
+        correction the same way."""
         ready = [r for r in pool.replicas if r.ready_at <= now] or pool.replicas
         slot_wait = sum(r.residual(now) for r in ready) / len(ready)
         items = pool.queued_cost + cost

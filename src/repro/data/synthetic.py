@@ -7,8 +7,11 @@ user-item affinity + recency-weighted history match. A model that learns
 gets HR@K well above the 1/50 floor — so the Fig-6 accuracy-retention
 experiment is meaningful, not noise.
 
-Also: Criteo-like click logs (39 fields, Zipf ids, hidden crossing weights)
-and random geometric graphs / molecule batches for the GNN smoke tests.
+Also: Criteo-like click logs (39 fields, Zipf ids, hidden crossing weights),
+random geometric graphs / molecule batches for the GNN smoke tests, and the
+serving stack's lookup workloads — Zipf id streams for the caches plus
+Poisson `update_event_stream`s of Zipf-hot row publishes that exercise the
+shard tier's versioned invalidation.
 """
 from __future__ import annotations
 
@@ -150,6 +153,34 @@ def zipf_id_stream(
     p = np.arange(1, vocab + 1, dtype=np.float64) ** -float(alpha)
     p /= p.sum()
     return rng.choice(vocab, size=int(n), p=p).astype(np.int64)
+
+
+def update_event_stream(
+    rate_per_s: float, horizon_s: float, vocab: int,
+    rows_per_event: int = 32, *, alpha: float = 1.1, seed: int = 0,
+) -> Iterator[Tuple[float, Tuple[int, ...]]]:
+    """Lazy, time-sorted (t, ids) stream of embedding-table updates for
+    `EventLoop.add_stream("shard_update", ...)`: Poisson event times
+    (exponential gaps at `rate_per_s`) up to `horizon_s`, each event
+    publishing `rows_per_event` Zipf(alpha)-hot row ids over [0, vocab).
+    Hot rows update most often — exactly the rows the caches hold — so
+    this is the adversarial workload for the shard tier's versioned
+    invalidation (serving/shard.py): without it, staleness climbs with
+    the update rate. Deterministic under the argument tuple, and lazy
+    like the arrival streams: one pending event, not a materialised
+    list."""
+    if rate_per_s <= 0.0:
+        return
+    rng = np.random.default_rng(seed)
+    p = np.arange(1, vocab + 1, dtype=np.float64) ** -float(alpha)
+    p /= p.sum()
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / rate_per_s)
+        if t >= horizon_s:
+            return
+        ids = rng.choice(vocab, size=int(rows_per_event), p=p)
+        yield t, tuple(int(i) for i in ids)
 
 
 def criteo_batches(

@@ -29,12 +29,12 @@ from repro.core.serving.federation import (
     make_cell_policy,
 )
 from repro.core.serving.metrics import (
-    SLOMonitor, federated_rollup, fleet_control_rollup,
+    SLOMonitor, federated_rollup, fleet_cache_rollup, fleet_control_rollup,
 )
 from repro.core.serving.pool import PoolConfig, ReplicaPool
 from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
 from repro.core.serving.replica import (
-    LatencyModel, Replica, ReplicaSpec, sustainable_rate,
+    LatencyModel, MissProfile, Replica, ReplicaSpec, sustainable_rate,
 )
 from repro.core.serving.router import CostModelRouter, ROUTERS, Router, make_router
 from repro.data.synthetic import zipf_id_stream
@@ -1188,9 +1188,11 @@ def test_ewma_first_sample_exact_then_decays():
 
 
 def test_online_latency_model_converges_on_miscalibration():
-    """A spec whose offline calibration is 2x off: the correction locks
-    onto the observed/offline ratio and the corrected curve matches the
-    true one at every batch size."""
+    """A spec whose offline calibration is 2x off: the DENSE correction
+    locks onto the observed/offline ratio and the corrected curve
+    matches the true one at every batch size — while the FETCH
+    correction (learned separately since the dense/fetch split) stays
+    untouched by pure dense drift."""
     offline = LatencyModel.analytic(0.01, 1e-4)
     truth = LatencyModel.analytic(0.02, 2e-4)
     model = OnlineLatencyModel(offline, embed_fetch_s=1e-3, alpha=0.25)
@@ -1201,12 +1203,44 @@ def test_online_latency_model_converges_on_miscalibration():
     assert model.correction == pytest.approx(2.0, abs=1e-9)
     for items in (1, 16, 100, 1000):
         assert model.dense(items) == pytest.approx(truth(items), rel=1e-9)
-    assert model.fetch_s == pytest.approx(2e-3)  # fetch corrected too
+    # dense drift no longer contaminates the fetch estimate: these
+    # samples carried no fetched rows, so the fetch leg trusts its
+    # calibration until a fetch-carrying batch disagrees with it
+    assert model.fetch_correction == 1.0
+    assert model.fetch_s == pytest.approx(1e-3)
     # noisy ratios converge to the mean ratio, and keep tracking drift
     noisy = OnlineLatencyModel(offline, alpha=0.25)
     for i in range(60):
         noisy.observe(32, 0, (1.5 if i % 2 else 2.5) * offline(32))
     assert noisy.correction == pytest.approx(2.0, abs=0.3)
+
+
+def test_online_latency_model_fetch_only_drift():
+    """Satellite: only `embed_fetch_s` drifts (a degraded memory bus /
+    shard link — the dense curve is still accurate). The fetch
+    correction converges onto the true per-row cost and the dense
+    correction stays at 1.0; predictions for fetch-heavy batches come
+    back to truth while pure dense predictions never move."""
+    offline = LatencyModel.analytic(0.01, 1e-4)
+    fetch_cal, fetch_true = 1e-4, 3e-4  # 3x drift on the fetch leg only
+    model = OnlineLatencyModel(offline, embed_fetch_s=fetch_cal, alpha=0.25)
+    spec = ReplicaSpec("m", offline, embed_fetch_s=fetch_cal,
+                       true_embed_fetch_s=fetch_true)
+    for items, rows in ((32, 64), (128, 256), (64, 512)) * 6:
+        model.observe(items, rows, spec.service_time(items, rows))
+    assert model.correction == 1.0  # every sample carried fetched rows
+    assert model.fetch_correction == pytest.approx(3.0, rel=1e-6)
+    assert model.fetch_s == pytest.approx(fetch_true, rel=1e-6)
+    assert model.dense(100) == pytest.approx(offline(100))
+    # the decomposed MissProfile path attributes the same way: transit
+    # seconds are known exactly and subtracted before the residual
+    prof_model = OnlineLatencyModel(offline, embed_fetch_s=fetch_cal, alpha=0.25)
+    prof = MissProfile(l2_hits=5, local_rows=100, remote_rows=60,
+                       transit_s=0.004)
+    for _ in range(12):
+        prof_model.observe(32, prof, spec.service_time(32, prof))
+    assert prof_model.correction == 1.0
+    assert prof_model.fetch_correction == pytest.approx(3.0, rel=1e-6)
 
 
 def test_batch_size_controller_narrow_widen_clamp():
@@ -1350,24 +1384,56 @@ def test_online_model_recovers_miscalibrated_system():
 def test_fleet_control_rollup_identity_when_uncontrolled():
     assert fleet_control_rollup([]) == {
         "online_pools": 0, "adaptive_batch_pools": 0, "samples": 0,
-        "mean_latency_correction": 1.0}
+        "mean_latency_correction": 1.0, "mean_fetch_correction": 1.0}
     # the mean is sample-weighted (a one-sample pool cannot dilute a
     # heavily observed drifted one) and the output keys round-trip as
     # input, which is how federated_rollup reuses the helper per cell
     roll = fleet_control_rollup([
         {"online_latency": True, "adaptive_batch": False,
-         "latency_correction": 2.0, "samples": 99},
+         "latency_correction": 2.0, "fetch_correction": 3.0, "samples": 99},
         {"online_latency": True, "adaptive_batch": True,
          "latency_correction": 1.0, "samples": 1},
     ])
     assert roll["online_pools"] == 2 and roll["adaptive_batch_pools"] == 1
     assert roll["mean_latency_correction"] == pytest.approx(1.99)
+    assert roll["mean_fetch_correction"] == pytest.approx(2.98)
     assert fleet_control_rollup([roll]) == roll
     sys_ = _hetero_system(make_router("least_loaded"))
     arr = poisson_arrivals(lambda t: 100.0, 4.0, seed=55)
     res = sys_.run(arr, until=6.0)
     assert res["control"]["online_pools"] == 0
     assert res["control"]["mean_latency_correction"] == 1.0
+
+
+def test_fleet_cache_rollup_edge_cases():
+    """Empty input, all-zero pools, and the round-trip property the
+    docstring promises: output keys are themselves accepted as input,
+    which is how federated_rollup feeds cell cache blocks back through."""
+    empty = fleet_cache_rollup([])
+    assert empty["hits"] == empty["misses"] == empty["staleness"] == 0
+    assert empty["hit_rate"] == 0.0 and empty["l2_hit_rate"] == 0.0
+    # uncached pools contribute all-zero summaries without skewing rates
+    zero = {"hits": 0, "misses": 0, "evictions": 0, "result_hits": 0}
+    assert fleet_cache_rollup([zero, zero, zero]) == empty
+    mixed = fleet_cache_rollup([
+        {"hits": 30, "misses": 10, "evictions": 2, "result_hits": 5,
+         "staleness": 4, "invalidated": 7},
+        zero,
+        {"hits": 10, "misses": 30, "evictions": 1, "result_hits": 0,
+         "l2_hits": 9, "l2_misses": 3, "local_fetches": 2,
+         "remote_fetches": 1, "transit_s": 0.25},
+    ])
+    assert mixed["hits"] == 40 and mixed["misses"] == 40
+    assert mixed["hit_rate"] == pytest.approx(0.5)
+    assert mixed["l2_hit_rate"] == pytest.approx(0.75)
+    assert mixed["staleness"] == 4 and mixed["invalidated"] == 7
+    assert mixed["remote_fetches"] == 1 and mixed["transit_s"] == 0.25
+    # round-trip: rollup-of-rollups re-sums counters, recomputes rates
+    assert fleet_cache_rollup([mixed]) == mixed
+    both = fleet_cache_rollup([mixed, mixed])
+    assert both["hits"] == 80 and both["hit_rate"] == pytest.approx(0.5)
+    assert both["transit_s"] == pytest.approx(0.5)
+    assert fleet_cache_rollup([both]) == both
 
 
 def test_windowed_rows_per_item_forgets_old_mix():

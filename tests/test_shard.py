@@ -1,0 +1,271 @@
+"""Sharded embedding tier tests (serving/shard.py and its wiring):
+deterministic hashing/placement, hand-checked local/remote/transit fetch
+accounting against the RTT matrix, versioned invalidation semantics
+(refetch-in-place, staleness with invalidation off), the cell-shared L2
+between pools, conservation under every router with the full hierarchy
+live, federation-wide accounting, and bit-identical replay of adaptive
+sharded runs."""
+import pytest
+
+from repro.core.serving.cache import CacheConfig, EmbeddingCache
+from repro.core.serving.control import ControlConfig
+from repro.core.serving.engine import (
+    PoolSpec, Request, ServingSystem, attach_zipf_ids, poisson_arrivals,
+)
+from repro.core.serving.federation import (
+    CellSpec, FederatedSystem, assign_homes,
+)
+from repro.core.serving.pool import PoolConfig
+from repro.core.serving.replica import LatencyModel, MissProfile, ReplicaSpec
+from repro.core.serving.router import ROUTERS, make_router
+from repro.core.serving.shard import EmbeddingShardService, RttMatrix
+from repro.data.synthetic import update_event_stream
+
+
+def _spec(name="m", base=0.005, per=1e-4, fetch=1e-4):
+    return ReplicaSpec(name, LatencyModel.analytic(base, per),
+                       cold_start_s=5.0, warm_start_s=0.2,
+                       embed_fetch_s=fetch)
+
+
+# ---------------------------------------------------------------------------
+# placement + hashing
+# ---------------------------------------------------------------------------
+
+
+def test_shard_hashing_and_placement_deterministic():
+    svc = EmbeddingShardService(8, ("a", "b", "c"))
+    again = EmbeddingShardService(8, ("a", "b", "c"))
+    for key in range(1000):
+        s = svc.shard_of(key)
+        assert 0 <= s < 8
+        assert s == again.shard_of(key)  # pure function of (key, n_shards)
+        assert svc.home(s) == ("a", "b", "c")[s % 3]
+    # the Fibonacci hash spreads CONSECUTIVE (hot Zipf) ids: the 16
+    # hottest ids must not pile onto one shard
+    hot = {svc.shard_of(k) for k in range(16)}
+    assert len(hot) >= 4
+    # no placement: every shard is homeless -> local everywhere
+    flat = EmbeddingShardService(4)
+    assert all(flat.home(s) == "" for s in range(4))
+    with pytest.raises(ValueError):
+        EmbeddingShardService(0)
+
+
+def test_fetch_accounting_matches_rtt_matrix():
+    rtt = RttMatrix(0.010, {("a", "b"): 0.002})
+    svc = EmbeddingShardService(4, ("a", "b"), rtt=rtt)
+    ids = list(range(64))
+    by_shard = {}
+    for i in ids:
+        by_shard.setdefault(svc.shard_of(i), []).append(i)
+    local_expect = sum(
+        len(v) for s, v in by_shard.items() if svc.home(s) == "a")
+    remote_shards = {s for s in by_shard if svc.home(s) == "b"}
+    prof = svc.fetch("a", ids)
+    assert prof.local_rows == local_expect
+    assert prof.remote_rows == len(ids) - local_expect
+    # per-shard fetch batching: ONE rtt per distinct remote shard, not
+    # one per row — and the (a, b) pair's own value, not the default
+    assert prof.transit_s == pytest.approx(0.002 * len(remote_shards))
+    assert prof.fetch_rows == len(ids)
+    stats = svc.cell_stats("a")
+    assert stats["local_fetches"] == local_expect
+    assert stats["remote_fetches"] == prof.remote_rows
+    assert stats["transit_s"] == pytest.approx(prof.transit_s)
+    assert svc.cell_stats("b") == {
+        "local_fetches": 0, "remote_fetches": 0, "transit_s": 0.0}
+    assert svc.predicted_transit_per_row("a") == pytest.approx(
+        prof.transit_s / len(ids))
+    assert svc.predicted_transit_per_row("b") == 0.0
+    # front-door / unplaced fetches are local regardless of placement
+    flat = EmbeddingShardService(4, ("a", "b"), rtt=rtt)
+    assert flat.fetch("", ids).remote_rows == 0
+
+
+def test_service_time_prices_miss_profile():
+    spec = _spec(fetch=2e-4)
+    prof = MissProfile(l2_hits=10, local_rows=30, remote_rows=20,
+                      transit_s=0.004)
+    dense = spec.service_time(8, 0)
+    assert spec.service_time(8, prof) == pytest.approx(
+        dense + 50 * 2e-4 + 0.004)
+    # L2 hits cost nothing at the replica (the L2 probe is the pool's)
+    assert spec.service_time(8, MissProfile(l2_hits=99)) == pytest.approx(dense)
+    # int miss_rows (pre-shard path) is priced identically to a
+    # transit-free all-local profile
+    assert spec.service_time(8, 50) == pytest.approx(
+        spec.service_time(8, MissProfile(local_rows=50)))
+
+
+# ---------------------------------------------------------------------------
+# versioned invalidation
+# ---------------------------------------------------------------------------
+
+
+def test_publish_invalidates_resident_rows_down_the_hierarchy():
+    svc = EmbeddingShardService(4)
+    l2 = EmbeddingCache(64)
+    l1 = EmbeddingCache(16)
+    svc.register_cache(l2)
+    svc.register_cache(l1)
+    for cache in (l1, l2):
+        cache.warm(range(8))
+    assert l1.access(3) and l2.access(3)
+    svc.publish([3, 4, 99])  # 99 not resident anywhere
+    assert svc.version_of(3) == 1 and svc.version_of(99) == 1
+    assert svc.invalidated_rows == 4  # ids 3+4 in each of the two caches
+    # a dirty hit is re-reported as a miss: the row refetches in place
+    h0, m0 = l1.hits, l1.misses
+    assert l1.access(3) is False
+    assert (l1.hits, l1.misses) == (h0, m0 + 1)
+    assert l1.access(3) is True  # refetched at the new version: clean hit
+    assert l1.staleness == 0
+    # double publish of a non-resident id never double-counts
+    svc.publish([99])
+    assert svc.version_of(99) == 2
+    assert svc.invalidated_rows == 4
+
+
+def test_staleness_counts_superseded_serves_when_invalidation_off():
+    svc = EmbeddingShardService(4, invalidation=False)
+    cache = EmbeddingCache(16)
+    svc.register_cache(cache)
+    cache.warm(range(4))
+    svc.publish([0, 1])
+    assert svc.invalidated_rows == 0
+    for _ in range(3):
+        assert cache.access(0) is True  # keeps serving the stale copy
+    assert cache.access(2) is True  # never republished: clean
+    assert cache.stats()["staleness"] == 3
+    assert cache.stats()["invalidated"] == 0
+
+
+# ---------------------------------------------------------------------------
+# the shared L2 between pools
+# ---------------------------------------------------------------------------
+
+
+def _l2_system(shard=None, l2_rows=4096, **kw):
+    cache = CacheConfig(64, l2=CacheConfig(l2_rows))
+    pools = {
+        "pa": PoolSpec(_spec("pa"), PoolConfig(n_replicas=1, autoscale=False,
+                                               priority_bypass=False),
+                       cache=cache),
+        "pb": PoolSpec(_spec("pb"), PoolConfig(n_replicas=1, autoscale=False,
+                                               priority_bypass=False),
+                       cache=cache),
+    }
+    return ServingSystem(pools, shard=shard, **kw)
+
+
+def test_l2_shared_across_pools():
+    sys_ = _l2_system(shard=EmbeddingShardService(8))
+    pa, pb = sys_.pools["pa"], sys_.pools["pb"]
+    ids = tuple(range(32))
+    pa.submit(0.0, Request(0, 0.0, "tier0", cost=1, ids=ids))
+    sys_.loop.run()
+    assert sys_.l2_cache.misses == 32  # pool A's L1 misses warmed the L2
+    pb.submit(1.0, Request(1, 1.0, "tier0", cost=1, ids=ids))
+    sys_.loop.run()
+    # pool B's own L1 is cold, but the CELL-shared L2 already holds every
+    # row pool A fetched — no second shard fetch for the same ids
+    assert sys_.l2_cache.hits == 32
+    assert sys_.shard.cell_stats("")["local_fetches"] == 32
+    summary = sys_.summary()
+    assert summary["cache"]["l2_hits"] == 32
+    assert summary["cache"]["l2_misses"] == 32
+
+
+def test_pools_must_agree_on_l2_config():
+    pools = {
+        "pa": PoolSpec(_spec("pa"), cache=CacheConfig(64, l2=CacheConfig(512))),
+        "pb": PoolSpec(_spec("pb"), cache=CacheConfig(64, l2=CacheConfig(1024))),
+    }
+    with pytest.raises(ValueError, match="disagree"):
+        ServingSystem(pools)
+
+
+# ---------------------------------------------------------------------------
+# conservation with the full hierarchy live
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("router_name", sorted(ROUTERS))
+def test_conservation_all_routers_with_shard_l2_invalidation(router_name):
+    shard = EmbeddingShardService(8)
+    sys_ = _l2_system(shard=shard, router=make_router(router_name))
+    arr = attach_zipf_ids(
+        poisson_arrivals(lambda t: 250.0, 6.0, seed=3), 4096, 16, seed=3)
+    sys_.loop.add_stream(
+        "shard_update", update_event_stream(5.0, 6.0, 4096, 16, seed=4))
+    res = sys_.run(arr, until=10.0)
+    assert res["completed"] > 0
+    assert res["arrived"] == res["completed"] + res["rejected"] + res["in_queue"]
+    assert res["dropped_events"] == 0
+    cache = res["cache"]
+    assert cache["hits"] + cache["misses"] > 0
+    # every row that fell through both cache levels was fetched exactly
+    # once: L2 misses == shard fetches (all local: no placement)
+    assert cache["l2_misses"] == cache["local_fetches"]
+    assert cache["remote_fetches"] == 0
+    assert shard.publishes > 0 and shard.invalidated_rows > 0
+
+
+def _shard_fed(invalidation=True, control=None, seed=11):
+    rtt = {("a", "b"): 0.004}
+    shard = EmbeddingShardService(16, ("a", "b"), invalidation=invalidation)
+    cache = CacheConfig(128, l2=CacheConfig(1024))
+    cfg = PoolConfig(n_replicas=2, autoscale=False, priority_bypass=False)
+    cells = {
+        name: CellSpec({"p": PoolSpec(_spec(f"p{name}"), cfg, cache=cache,
+                                      control=control)})
+        for name in ("a", "b")
+    }
+    fed = FederatedSystem(cells, "sticky", rtt_s=0.004, rtt=rtt, shard=shard)
+    arr = attach_zipf_ids(
+        poisson_arrivals(lambda t: 300.0, 8.0, seed=seed), 8192, 16, seed=seed)
+    assign_homes(arr, {"a": 0.5, "b": 0.5}, seed=seed)
+    fed.loop.add_stream(
+        "shard_update", update_event_stream(8.0, 8.0, 8192, 32, seed=seed + 1))
+    return fed, arr
+
+
+@pytest.mark.parametrize("invalidation", [True, False])
+def test_federation_conservation_with_sharding(invalidation):
+    fed, arr = _shard_fed(invalidation=invalidation)
+    res = fed.run(arr, until=12.0)
+    assert res["completed"] > 0
+    assert res["injected"] == res["completed"] + res["rejected"] + res["in_flight"]
+    assert res["in_flight"] == 0 and res["dropped_events"] == 0
+    shard = res["shard"]
+    # tables sharded across both cells: each cell fetches both locally
+    # and remotely, and remote fetches paid transit
+    assert shard["local_fetches"] > 0 and shard["remote_fetches"] > 0
+    assert shard["transit_s"] > 0.0
+    assert shard["publishes"] > 0 and shard["updated_rows"] > 0
+    # the fleet rollup's fetch split equals the shard service's own
+    # (per-cell tallies enter once per cell — no double counting)
+    roll = sum(res["cells"][c]["cache"]["remote_fetches"] for c in ("a", "b"))
+    assert roll == shard["remote_fetches"]
+    staleness = sum(res["cells"][c]["cache"]["staleness"] for c in ("a", "b"))
+    if invalidation:
+        # versions propagate shard -> L2 -> L1: nothing stale is served
+        assert staleness == 0 and shard["invalidated_rows"] > 0
+    else:
+        assert staleness > 0 and shard["invalidated_rows"] == 0
+
+
+def test_adaptive_sharded_runs_replay_bit_identically():
+    results = []
+    for _ in range(2):
+        fed, arr = _shard_fed(control=ControlConfig())
+        results.append(fed.run(arr, until=12.0))
+    a, b = results
+    assert a["p99"] == b["p99"] and a["completed"] == b["completed"]
+    assert a["trace"] == b["trace"]
+    assert a["shard"] == b["shard"]  # version_sum is the replay fingerprint
+    for c in ("a", "b"):
+        assert a["cells"][c]["cache"] == b["cells"][c]["cache"]
+        assert a["cells"][c]["trace"] == b["cells"][c]["trace"]
+        assert a["cells"][c]["control"] == b["cells"][c]["control"]
