@@ -229,11 +229,20 @@ def main(argv=None):
         print(f"speedup_{key}={ratio:.2f}x")
 
     if args.json:
+        # lazy, and jax-free since common.py defers its model imports:
+        # the measurement path above must stay import-light either way
+        try:
+            from benchmarks.common import bench_payload
+        except ImportError:
+            from common import bench_payload
+        payload = bench_payload(
+            "engine", rows, smoke=args.smoke,
+            row_keys=("workload", "mode", "n", "events_per_s", "peak_rss_mb"),
+            speedups=ratios)
         with open(args.json, "w") as fh:
-            json.dump({"bench": "engine", "smoke": args.smoke,
-                       "rows": rows, "speedups": ratios}, fh, indent=1,
-                      default=float)
-        print(f"# wrote {len(rows)} cells to {args.json}")
+            json.dump(payload, fh, indent=1, default=float)
+        print(f"# wrote {len(rows)} cells to {args.json}"
+              f" (schema v{payload['schema_version']})")
 
     if args.smoke and not args.profile:
         fast_1m = next(r for r in rows

@@ -1,26 +1,46 @@
 """Shared benchmark substrate: one trained teacher + compression ladder,
-reused by every paper-table benchmark (built lazily, cached in-process)."""
+reused by every paper-table benchmark (built lazily, cached in-process),
+plus the --json artifact schema every bench main writes through.
+
+jax and the model stack import INSIDE the functions that need them, so
+`from benchmarks.common import bench_payload` stays cheap — the event-
+kernel bench (bench_engine.py) must keep its worker subprocesses and its
+aggregation path free of jax for attributable RSS numbers."""
 from __future__ import annotations
 
 import dataclasses
 import time
 from functools import lru_cache
-from typing import Dict
+from typing import Dict, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import get_config
-from repro.core.compression_loop import LadderConfig, run_ladder, variant_stats
-from repro.data.synthetic import TaobaoWorld, taobao_batches, taobao_eval_candidates
-from repro.distributed.sharding import RECSYS_RULES, adapt_rules
-from repro.models.common import init_params
-from repro.models.recsys import api
-from repro.training.optimizer import get_optimizer
-from repro.training.train_loop import make_train_step
-
 VARIANTS = ("baseline", "quantized", "pruned", "pruned_quantized", "distilled")
+
+# --json artifact schema, shared by every bench main. Bump when the
+# top-level payload shape changes so downstream diff tooling can refuse
+# mixed-version comparisons instead of silently misreading fields.
+BENCH_SCHEMA_VERSION = 1
+
+
+def bench_payload(bench: str, rows: Sequence[dict], *, smoke: bool,
+                  row_keys: Sequence[str] = (), **extra) -> dict:
+    """The validated payload a bench --json run writes: a stable
+    top-level shape {bench, schema_version, smoke, rows, ...} so
+    BENCH_*.json artifacts diff across PRs without per-bench parsers.
+    `row_keys` are the keys this bench promises on EVERY row; a missing
+    one raises here, before a malformed artifact hits disk."""
+    rows = list(rows)
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            raise TypeError(f"{bench} row {i} is not a dict: {row!r}")
+        missing = [k for k in row_keys if k not in row]
+        if missing:
+            raise ValueError(
+                f"{bench} row {i} is missing required keys {missing}"
+                f" (has {sorted(row)})")
+    return {"bench": bench, "schema_version": BENCH_SCHEMA_VERSION,
+            "smoke": bool(smoke), "rows": rows, **extra}
 
 # Paper Table I reference numbers (V100 ms / req/s) for side-by-side ratios.
 PAPER_TABLE1 = {
@@ -34,7 +54,18 @@ PAPER_TABLE1 = {
 
 @lru_cache(maxsize=1)
 def bench_world():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_config
+    from repro.core.compression_loop import LadderConfig, run_ladder
+    from repro.data.synthetic import TaobaoWorld, taobao_batches
+    from repro.distributed.sharding import RECSYS_RULES, adapt_rules
     from repro.launch.mesh import make_test_mesh
+    from repro.models.common import init_params
+    from repro.models.recsys import api
+    from repro.training.optimizer import get_optimizer
+    from repro.training.train_loop import make_train_step
 
     mesh = make_test_mesh()
     rules = adapt_rules(RECSYS_RULES, mesh)
@@ -69,6 +100,8 @@ def bench_world():
 
 def time_call(fn, *args, reps: int = 5, warmup: int = 2) -> float:
     """Median wall seconds of a blocking call."""
+    import jax
+
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -80,6 +113,10 @@ def time_call(fn, *args, reps: int = 5, warmup: int = 2) -> float:
 
 
 def serve_batch(cfg, world, batch: int, seed: int = 11) -> Dict:
+    import jax.numpy as jnp
+
+    from repro.data.synthetic import taobao_batches
+
     gen = taobao_batches(cfg, batch, 1, world=world, seed=seed)
     b = next(iter(gen))
     return {k: jnp.asarray(v) for k, v in b.items() if k != "label"}

@@ -1,8 +1,8 @@
 """cProfile helper shared by the benchmark CLIs (`--profile`).
 
-Kept separate from benchmarks/common.py on purpose: common.py imports
-jax at module level, and the profiler is wanted by kernel-free benches
-(bench_engine) too. No repro imports either — this wraps any callable.
+Kept separate from benchmarks/common.py on purpose: common.py carries
+the model-benchmark substrate, and the profiler is wanted by kernel-free
+benches (bench_engine) too. No repro imports — this wraps any callable.
 """
 from __future__ import annotations
 

@@ -41,6 +41,17 @@ Signal path (pool.py wires it):
                         ▼
     ReplicaPool item cap (batch close + next-batch split), traced per tick
 
+Corrections are learned PER PLATFORM CLASS, never blended: each
+OnlineLatencyModel belongs to one pool, a pool serves one
+`ReplicaSpec.platform` (CPU-class and accelerator-class capacity live
+in sibling pools, see replica.py), and no estimator is shared across
+pools — so CPU-fleet thermal drift can never contaminate the
+accelerator curve the size-aware router splits on. The reporting side
+keeps the separation too: pool control summaries carry the platform
+tag and `metrics.fleet_control_rollup` maintains per-class
+sample-weighted means (`by_platform`) all the way up the
+pool -> cell -> fleet chain.
+
 Invariants: everything here is deterministic — corrections depend only on
 the observation sequence, the controller only on the (p99, slo) tick
 sequence; two identical runs adapt bit-identically (tests replay them).

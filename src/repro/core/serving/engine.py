@@ -6,7 +6,10 @@ Post-refactor layering — the engine is an orchestrator, not a monolith:
     replica.py   Replica/Spec     calibrated service times, start costs
     pool.py      ReplicaPool      per-variant batcher + AutoScaler + SLOMonitor
     router.py    Router policies  least-loaded / power-of-two / SLO-aware /
-                                  cost-model (recommended)
+                                  cost-model (recommended) / size-aware
+                                  (recommended on fleets mixing platform
+                                  classes: pointwise -> CPU-class pools,
+                                  ranking -> accelerator-class pools)
     cascade.py   CascadeDispatcher  light-filter -> heavy-rerank chaining
     cache.py     EmbeddingCache/ResultCache  per-pool hot-ID caching:
                                   misses pay embed_fetch_s, repeats can

@@ -54,6 +54,19 @@ keyed by (src, dst) cell-name pairs (RttMatrix: symmetric fallback, then
 the scalar), and every hop — policy charge, spill transit, cascade-stage
 spill — consults the pair's own value.
 
+Cells may own DIFFERENT platform-class mixes (replica.py family
+constructors): a CPU-only edge cell next to an accelerator-heavy core
+cell is a normal topology, and the cell policies see that heterogeneous
+capacity without any special casing — `Cell.predicted_latency` is the
+cost-model estimate AT THE REQUEST'S COST, so an accelerator-only cell
+quotes its high fixed cost to a pointwise probe and its flat curve to a
+512-candidate ranking query, and spillover targets rank the same way.
+A ranking query homed on a CPU-only cell therefore spills to
+accelerator capacity as soon as its home quote exceeds the remote
+quote plus the RTT. `Cell.platforms` (and the "platforms" summary key)
+reports each cell's mix; per-class control corrections roll up
+un-blended through `metrics.fleet_control_rollup`.
+
 Control is cell-local too (serving/control.py via each pool's
 PoolSpec.control): every cell's pools learn their own latency
 corrections and adapt their own batch caps from their own SLO signals —
@@ -144,6 +157,14 @@ class Cell:
         itself and for homeless front-door arrivals)."""
         return self._rtt(src, self.name)
 
+    @property
+    def platforms(self) -> Tuple[str, ...]:
+        """The platform classes this cell's pools draw from, sorted —
+        cells may own different mixes (a CPU-only edge cell, an
+        accelerator core cell), and policies price that heterogeneity
+        through `predicted_latency` at the request's cost."""
+        return tuple(sorted({p.spec.platform for p in self.system.pools.values()}))
+
     # ---- read-only signals for cell policies / spillover ----
     def predicted_latency(self, now: float, cost: int = 1) -> float:
         """Completion-time estimate for an arrival entering this cell
@@ -166,7 +187,8 @@ class Cell:
         return self.predicted_latency(now, cost) <= headroom_s
 
     def summary(self) -> Dict:
-        return {**self.system.summary(), "spill": self.spill.as_dict()}
+        return {**self.system.summary(), "spill": self.spill.as_dict(),
+                "platforms": list(self.platforms)}
 
 
 # ---------------------------------------------------------------------------

@@ -148,10 +148,26 @@ def fleet_control_rollup(control_summaries) -> Dict:
     back through, and the sample weighting keeps a one-sample cell from
     diluting a heavily observed drifted one. The dense and fetch
     corrections (control.py learns them separately) are both weighted
-    by the pool's total sample count."""
+    by the pool's total sample count.
+
+    Corrections are learned PER PLATFORM CLASS, never blended across
+    classes: `by_platform` keeps a sample-weighted mean per class tag
+    (pool summaries carry `platform`; cell rollups carry their own
+    `by_platform`, which merges class-wise on the way up) — thermal
+    drift on the CPU fleet must not look like a mis-calibrated
+    accelerator curve in the fleet view. The TOP-LEVEL means remain the
+    all-class blend for backward compatibility."""
     out = {"online_pools": 0, "adaptive_batch_pools": 0, "samples": 0}
     corr_sum = 0.0
     fetch_corr_sum = 0.0
+    plat: Dict[str, Dict[str, float]] = {}
+
+    def _per_class(platform, n, corr, fetch):
+        d = plat.setdefault(platform, {"samples": 0, "corr": 0.0, "fetch": 0.0})
+        d["samples"] += n
+        d["corr"] += n * corr
+        d["fetch"] += n * fetch
+
     for s in control_summaries:
         out["online_pools"] += s.get(
             "online_pools", int(bool(s.get("online_latency"))))
@@ -159,14 +175,34 @@ def fleet_control_rollup(control_summaries) -> Dict:
             "adaptive_batch_pools", int(bool(s.get("adaptive_batch"))))
         n = s.get("samples", 0)
         out["samples"] += n
-        corr_sum += n * s.get("latency_correction",
-                              s.get("mean_latency_correction", 1.0))
-        fetch_corr_sum += n * s.get("fetch_correction",
-                                    s.get("mean_fetch_correction", 1.0))
+        corr = s.get("latency_correction",
+                     s.get("mean_latency_correction", 1.0))
+        fetch = s.get("fetch_correction",
+                      s.get("mean_fetch_correction", 1.0))
+        corr_sum += n * corr
+        fetch_corr_sum += n * fetch
+        nested = s.get("by_platform")
+        if nested:
+            for p, d in nested.items():
+                _per_class(p, d.get("samples", 0),
+                           d.get("mean_latency_correction", 1.0),
+                           d.get("mean_fetch_correction", 1.0))
+        else:
+            _per_class(s.get("platform", "generic"), n, corr, fetch)
     out["mean_latency_correction"] = (
         corr_sum / out["samples"] if out["samples"] else 1.0)
     out["mean_fetch_correction"] = (
         fetch_corr_sum / out["samples"] if out["samples"] else 1.0)
+    out["by_platform"] = {
+        p: {
+            "samples": int(d["samples"]),
+            "mean_latency_correction": (
+                d["corr"] / d["samples"] if d["samples"] else 1.0),
+            "mean_fetch_correction": (
+                d["fetch"] / d["samples"] if d["samples"] else 1.0),
+        }
+        for p, d in sorted(plat.items())
+    }
     return out
 
 

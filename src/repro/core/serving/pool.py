@@ -137,6 +137,25 @@ class PoolConfig:
     autoscale: bool = True
     priority_bypass: bool = True
 
+    @classmethod
+    def for_platform(cls, platform: str, **overrides) -> "PoolConfig":
+        """Batching defaults matched to a platform class's curve shape
+        (replica.py family constructors), so a heterogeneous fleet gets
+        per-class batching out of the box: CPU-class pools close small
+        batches fast (a steep per-item slope means wide batches only
+        add latency — and a 512-item ranking batch routed there by a
+        size-blind policy dispatches ALONE rather than holding
+        pointwise traffic hostage); accelerator-class pools batch wide
+        and wait longer to amortise their fixed cost. Unknown platforms
+        get the generic defaults. Any field can be overridden."""
+        defaults = {
+            "cpu": dict(max_batch=16, max_batch_items=64, max_wait_s=0.002),
+            "accelerator": dict(max_batch=64, max_batch_items=2048,
+                                max_wait_s=0.010),
+        }.get(platform, {})
+        defaults.update(overrides)
+        return cls(**defaults)
+
 
 class ReplicaPool:
     def __init__(
@@ -519,8 +538,13 @@ class ReplicaPool:
         """Control-plane counters in one flat dict (identity values when
         no control is configured, so fleet rollups work unconditionally):
         the learned latency correction + sample count and the effective
-        item cap (0 = uncapped)."""
+        item cap (0 = uncapped). Tagged with the pool's platform class:
+        corrections are learned PER POOL and a pool serves one platform,
+        so the fleet rollup (metrics.fleet_control_rollup) can keep
+        per-class means instead of blending a CPU fleet's drift into an
+        accelerator fleet's."""
         return {
+            "platform": self.spec.platform,
             "online_latency": self.model is not None,
             "latency_correction": (
                 self.model.correction if self.model is not None else 1.0),
@@ -535,6 +559,7 @@ class ReplicaPool:
         tot = self.monitor.totals()
         return {
             "variant": self.spec.variant,
+            "platform": self.spec.platform,
             "completed": self.monitor.completed,
             "shed": self.shed,
             "p50": tot["p50"],

@@ -23,6 +23,27 @@ rows into shared-L2 hits (free), local-shard fetches (pay
 each PLUS the batched inter-cell transit in `transit_s`). A plain int
 still works everywhere and means "all rows fetched locally" — the
 pre-shard behaviour, bit-identical.
+
+Platform classes (DeepRecSys, arXiv 2001.02772; the Facebook
+architectural-implications study motivates the curve shapes): a fleet
+is rarely one kind of hardware. `ReplicaSpec.platform` names the curve
+FAMILY a replica draws from, and the two family constructors capture
+the two shapes that matter for query-size-aware scheduling:
+
+    ReplicaSpec.cpu_like(...)          low fixed cost, poor batch
+                                       scaling (steep per-item slope) —
+                                       cheap for small pointwise
+                                       queries, terrible for ranking
+    ReplicaSpec.accelerator_like(...)  high fixed cost (kernel launch /
+                                       transfer), near-flat batch
+                                       scaling — wasteful on tiny
+                                       batches, unbeatable at hundreds
+                                       of candidates
+
+Plain `ReplicaSpec(...)` keeps `platform="generic"`: every pre-platform
+construction behaves exactly as before. The platform tag is what
+`router.SizeAwareRouter` keys on to send small queries to CPU-class
+capacity and large ranking batches to accelerator-class capacity.
 """
 from __future__ import annotations
 
@@ -111,7 +132,13 @@ class ReplicaSpec:
     and planning math predict from. `true_latency`, when set, is what
     batches actually take: the drift/interference/mis-calibration model
     the control plane (serving/control.py) exists to learn back. None
-    (the default) means the calibration is accurate."""
+    (the default) means the calibration is accurate.
+
+    `platform` tags the hardware class the curve was calibrated on —
+    "cpu" / "accelerator" via the family constructors below, "generic"
+    for everything else. Routers key on it (SizeAwareRouter); nothing
+    in the service-time math does, so a tag alone never changes a
+    clock."""
 
     variant: str  # which Table-I variant this pool serves
     latency: LatencyModel
@@ -120,6 +147,33 @@ class ReplicaSpec:
     embed_fetch_s: float = 0.0  # per MISSED embedding row (caching layer)
     true_latency: Optional[LatencyModel] = None  # observed curve if drifted
     true_embed_fetch_s: Optional[float] = None  # observed fetch if drifted
+    platform: str = "generic"  # hardware class ("cpu"/"accelerator"/"generic")
+
+    @classmethod
+    def cpu_like(cls, variant: str, *, base_s: float = 0.002,
+                 per_item_s: float = 8e-4, warm_start_s: float = 0.05,
+                 cold_start_s: float = 1.0, **kw) -> "ReplicaSpec":
+        """A CPU-class replica: LOW fixed cost, POOR batch scaling (the
+        per-item slope dominates past a few items). Defaults model a
+        general-purpose server core: ~2ms base, ~0.8ms per extra work
+        item, fast warm starts (no kernel compile). Override the curve
+        or pass `latency=` through **kw for a calibrated one."""
+        kw.setdefault("latency", LatencyModel.analytic(base_s, per_item_s))
+        return cls(variant, platform="cpu", warm_start_s=warm_start_s,
+                   cold_start_s=cold_start_s, **kw)
+
+    @classmethod
+    def accelerator_like(cls, variant: str, *, base_s: float = 0.025,
+                         per_item_s: float = 3e-5, warm_start_s: float = 0.25,
+                         cold_start_s: float = 8.0, **kw) -> "ReplicaSpec":
+        """An accelerator-class replica: HIGH fixed cost (launch +
+        transfer), NEAR-FLAT batch scaling — a 512-item ranking batch
+        costs barely more than a pointwise probe. Defaults: ~25ms base,
+        ~0.03ms per item (the curves cross CPU-class around ~30 items),
+        slow cold starts (XLA compile + weight load)."""
+        kw.setdefault("latency", LatencyModel.analytic(base_s, per_item_s))
+        return cls(variant, platform="accelerator", warm_start_s=warm_start_s,
+                   cold_start_s=cold_start_s, **kw)
 
     def service_time(self, items: int, miss_rows: MissRows = 0) -> float:
         """Cache-aware decomposition: ACTUAL dense compute at `items`

@@ -26,7 +26,14 @@ heterogeneous variants live at once, WHERE a query lands matters as much
 as how it is batched. CostModelRouter makes that decision from the
 calibrated LatencyModels plus live queue state and is the recommended
 policy; SLOAwareRouter's p99-threshold heuristic is kept for quality-
-tiered head/tail splits. To add a policy: subclass Router, implement
+tiered head/tail splits. On fleets mixing PLATFORM classes
+(`ReplicaSpec.cpu_like` / `.accelerator_like`), SizeAwareRouter is the
+recommended policy: it first picks the platform class by QUERY SIZE
+(small pointwise -> CPU-class, large ranking -> accelerator-class) and
+only then load-balances by the cost-model estimate WITHIN that class —
+transient backlog can no longer push a 512-candidate batch onto a
+steep CPU curve or flood an accelerator's fixed cost with pointwise
+probes. To add a policy: subclass Router, implement
 select_pool (and optionally select_replica), and register it in ROUTERS.
 The same Router/registry shape repeats one level up: federation.py's
 CellPolicy picks the CELL a request enters, through this module's
@@ -133,6 +140,70 @@ class CostModelRouter(Router):
         return slot_wait + pool.dense_latency(items) + pool.predicted_miss_cost(items)
 
 
+class SizeAwareRouter(CostModelRouter):
+    """Query-size-aware routing over heterogeneous platform classes
+    (DeepRecSys): decide WHICH class serves this query size, then
+    load-balance within the class by the cost-model estimate.
+
+    The plain cost-model estimate is size-sensitive but backlog-coupled:
+    under load, a momentarily shorter accelerator queue pulls pointwise
+    traffic onto the accelerator's high fixed cost, and an accelerator
+    backlog pushes ranking batches onto the steep CPU curve — one
+    512-item batch on a CPU-class pool then eats hundreds of
+    milliseconds of capacity, the CPU queue explodes, pointwise floods
+    the accelerators, and the specialisation collapses in both
+    directions. Enforcing class affinity first is DeepRecSys's fix, and
+    is what the asserted bench_serving experiment-9 win measures.
+
+    The class decision per query: with an explicit `size_threshold`,
+    cost >= threshold prefers accelerator-class pools. Without one (the
+    default), the query prefers whichever class serves a batch of ITS
+    size cheaper on an idle replica — `pool.dense_latency`, i.e. the
+    ONLINE-corrected curve when a control plane is learning one, so the
+    split point tracks drift. Pools of other platforms ("generic")
+    never join a preferred class; fleets missing either class fall back
+    to plain cost-model routing over all pools. Deterministic — no RNG,
+    and threshold-free by default."""
+
+    name = "size_aware"
+
+    def __init__(self, size_threshold: Optional[int] = None):
+        self.size_threshold = size_threshold
+
+    def select_pool(self, req, pools, now):
+        cpu = [p for p in pools if p.spec.platform == "cpu"]
+        acc = [p for p in pools if p.spec.platform == "accelerator"]
+        if not cpu or not acc:
+            return super().select_pool(req, pools, now)
+        if self.size_threshold is not None:
+            preferred = acc if req.cost >= self.size_threshold else cpu
+        else:
+            idle_cpu = min(p.dense_latency(req.cost) for p in cpu)
+            idle_acc = min(p.dense_latency(req.cost) for p in acc)
+            preferred = acc if idle_acc <= idle_cpu else cpu
+        return min(preferred, key=lambda p: self.estimate(p, req.cost, now))
+
+
+class SizeBlindCostModelRouter(CostModelRouter):
+    """The DeepRecSys ablation SizeAwareRouter is measured against:
+    identical cost-model machinery, but the router does NOT see
+    per-query size at admission — every arrival is priced at the
+    pointwise unit (cost 1), the way a front door that learns the
+    candidate count only after retrieval has to route. On a
+    heterogeneous fleet this sends ranking batches to whichever pool
+    quotes the cheapest POINTWISE estimate — usually the low-fixed-cost
+    CPU class, where one 512-item batch then burns hundreds of
+    milliseconds of steep-curve capacity — which is precisely the
+    failure query-size awareness exists to prevent (bench_serving
+    experiment 9 measures the gap). Dispatch-side batching still sees
+    true costs; only the ADMISSION decision is size-oblivious."""
+
+    name = "cost_model_blind"
+
+    def select_pool(self, req, pools, now):
+        return min(pools, key=lambda p: self.estimate(p, 1, now))
+
+
 class SLOAwareRouter(Router):
     """Latency-aware policy for heterogeneous pools: among pools predicted
     to meet the SLO (and not currently breaching it), send head traffic
@@ -167,6 +238,8 @@ ROUTERS: Dict[str, type] = {
     PowerOfTwoRouter.name: PowerOfTwoRouter,
     SLOAwareRouter.name: SLOAwareRouter,
     CostModelRouter.name: CostModelRouter,
+    SizeAwareRouter.name: SizeAwareRouter,
+    SizeBlindCostModelRouter.name: SizeBlindCostModelRouter,
 }
 
 

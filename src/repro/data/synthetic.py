@@ -16,6 +16,7 @@ shard tier's versioned invalidation.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np
@@ -181,6 +182,45 @@ def update_event_stream(
             return
         ids = rng.choice(vocab, size=int(rows_per_event), p=p)
         yield t, tuple(int(i) for i in ids)
+
+
+def bimodal_cost_mix(
+    rank_cost: int = 512, rank_frac: float = 0.1, *,
+    point_cost: int = 1, spread: float = 0.0, modes: int = 3,
+) -> Tuple[Tuple[int, float], ...]:
+    """Weighted (cost, weight) mix for `poisson_arrivals(cost_mix=...)`
+    modelling the DeepRecSys bimodal query-size distribution: a
+    POINTWISE mode (`point_cost` items — one user/item probe) carrying
+    `1 - rank_frac` of the traffic and a RANKING mode at `rank_cost`
+    candidates carrying the rest. `spread` > 0 widens the ranking mode
+    into `modes` sizes over [rank_cost*(1-spread), rank_cost*(1+spread)]
+    with binomial-shaped weights — real candidate sets are not all
+    exactly 512 — which exercises the size-aware router's class
+    decision at more than one point on the curve. Pure and
+    deterministic: same arguments, same tuple.
+
+        bimodal_cost_mix()                      -> ((1, 0.9), (512, 0.1))
+        bimodal_cost_mix(spread=0.25, modes=3)  -> pointwise + ranking
+                                                   at 384/512/640
+    """
+    if not 0.0 <= rank_frac <= 1.0:
+        raise ValueError(f"rank_frac must be in [0, 1], got {rank_frac}")
+    mix = []
+    if rank_frac < 1.0:
+        mix.append((int(point_cost), 1.0 - rank_frac))
+    if rank_frac > 0.0:
+        if spread <= 0.0 or modes <= 1:
+            mix.append((int(rank_cost), rank_frac))
+        else:
+            sizes = np.linspace(rank_cost * (1.0 - spread),
+                                rank_cost * (1.0 + spread), int(modes))
+            # binomial-shaped weights: the central size dominates
+            w = np.array([float(math.comb(modes - 1, k))
+                          for k in range(int(modes))])
+            w = w / w.sum() * rank_frac
+            mix.extend((max(int(round(s)), 1), float(wk))
+                       for s, wk in zip(sizes, w))
+    return tuple(mix)
 
 
 def criteo_batches(

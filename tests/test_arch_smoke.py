@@ -21,6 +21,7 @@ def _lm_batch(cfg, B=2, S=32):
     return {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_lm_smoke(arch, lm_rules):
     from repro.models import transformer as tf
@@ -48,6 +49,7 @@ def test_lm_smoke(arch, lm_rules):
     assert lg.shape == (2, cfg.vocab_size) and not jnp.isnan(lg).any()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_lm_train_step_decreases_loss(arch, lm_rules):
     from repro.models import transformer as tf

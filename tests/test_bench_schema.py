@@ -1,0 +1,54 @@
+"""Shared --json artifact schema (benchmarks/common.py): every bench's
+perf artifact goes through `bench_payload`, which stamps the schema
+version and refuses rows missing the keys downstream tooling reads.
+common.py keeps its model imports lazy so this (and bench_engine's RSS
+workers) can import it without pulling in jax."""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import BENCH_SCHEMA_VERSION, bench_payload  # noqa: E402
+
+
+def test_bench_payload_stamps_schema_and_passes_rows_through():
+    rows = [{"experiment": "a", "p99_ms": 1.0, "throughput": 2.0, "extra": 1}]
+    out = bench_payload("serving", rows, smoke=True,
+                        row_keys=("experiment", "p99_ms", "throughput"))
+    assert out["bench"] == "serving"
+    assert out["schema_version"] == BENCH_SCHEMA_VERSION
+    assert out["smoke"] is True
+    assert out["rows"] == rows  # extra per-row keys survive untouched
+    # top-level extras (bench_engine attaches its speedups dict) ride along
+    tagged = bench_payload("engine", [], smoke=False, speedups={"k": 2.0})
+    assert tagged["speedups"] == {"k": 2.0} and tagged["smoke"] is False
+
+
+def test_bench_payload_rejects_incomplete_rows():
+    good = {"experiment": "a", "p99_ms": 1.0}
+    with pytest.raises(ValueError, match=r"row 1 is missing.*throughput"):
+        bench_payload("serving", [dict(good, throughput=0.0), good],
+                      smoke=True, row_keys=("experiment", "p99_ms",
+                                            "throughput"))
+    with pytest.raises(TypeError, match="row 0 is not a dict"):
+        bench_payload("serving", [("tuple", "row")], smoke=True)
+    # no required keys declared -> any dict row is acceptable
+    assert bench_payload("x", [{}], smoke=False)["rows"] == [{}]
+
+
+def test_common_imports_without_jax():
+    """The schema helper must stay importable from jax-free processes
+    (bench_engine's per-cell RSS workers). Guard the lazy-import
+    contract: importing benchmarks.common never imports jax."""
+    import importlib
+    import subprocess
+
+    importlib.import_module("benchmarks.common")
+    code = ("import sys; sys.path.insert(0, {root!r}); "
+            "import benchmarks.common; "
+            "sys.exit(1 if 'jax' in sys.modules else 0)").format(
+        root=str(Path(__file__).resolve().parents[1]))
+    proc = subprocess.run([sys.executable, "-c", code])
+    assert proc.returncode == 0, "importing benchmarks.common pulled in jax"

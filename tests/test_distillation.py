@@ -46,6 +46,7 @@ def test_student_config_smaller():
     assert s_cfg.n_attn_layers < cfg.n_attn_layers
 
 
+@pytest.mark.slow
 def test_student_init_and_distill_step(rec_rules):
     cfg = reduced_recsys("taobao_ssa")
     teacher = init_params(api.param_defs(cfg), jax.random.key(0))

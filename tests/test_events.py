@@ -75,6 +75,104 @@ def test_calendar_width_shrink_keeps_order():
     assert out == [heapq.heappop(ref) for _ in range(len(ref))]
 
 
+def test_scheduler_pop_order_property():
+    """Hypothesis fuzz of the ordering contract: arbitrary push/pop
+    interleavings — duplicate timestamps, zero and NEGATIVE time gaps
+    (pushes scheduled before already-buffered times), pops mid-stream —
+    against the heapq reference, across widths. MAX_BUCKET is dropped to
+    8 so width-shrink bursts (promote -> rebucket) fire constantly
+    instead of needing 4096-event pile-ups. The @given is applied inside
+    the test so the module's other tests run without hypothesis (the
+    optional [test] extra)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    class TinyCalendar(CalendarScheduler):
+        MAX_BUCKET = 8  # shrink on a handful of clustered events
+
+    op_st = st.one_of(
+        st.tuples(st.just("push"),
+                  st.sampled_from([0.0, 0.0, 1e-6, 1e-3, 0.04, 1.0, 30.0]),
+                  st.sampled_from([0.0, 0.0, 0.0, 0.5, 10.0])),
+        st.just("pop"),
+    )
+
+    @given(ops=st.lists(op_st, max_size=250),
+           width=st.sampled_from([1e-3, 0.05, 2.0, 500.0]))
+    @settings(max_examples=80, deadline=None, derandomize=True,
+              print_blob=True)
+    def check(ops, width):
+        cal = TinyCalendar(width=width)
+        ref = []
+        t_base, seq = 0.0, 0
+        for op in ops:
+            if op == "pop":
+                if ref:
+                    assert cal.pop() == heapq.heappop(ref)
+            else:
+                _, advance, back_jump = op
+                t_base += advance
+                entry = (max(0.0, t_base - back_jump), seq, "k", seq)
+                seq += 1
+                cal.push(entry)
+                heapq.heappush(ref, entry)
+        while ref:
+            assert cal.pop() == heapq.heappop(ref)
+        assert len(cal) == 0
+
+    check()
+
+
+def test_stream_merge_property():
+    """Hypothesis fuzz of the lazy stream merge: several interleaved
+    add_stream iterators (duplicate times within AND across streams)
+    plus handler-scheduled queue events at ZERO gap from the current
+    event — the fast path must replay the seed kernel's push-everything-
+    upfront order exactly. Inner @given: see above."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    gaps_st = st.lists(st.sampled_from([0.0, 0.0, 0.01, 0.05, 0.4]),
+                       max_size=40)
+
+    @given(streams=st.lists(gaps_st, min_size=1, max_size=3),
+           echo_mod=st.integers(2, 7))
+    @settings(max_examples=60, deadline=None, derandomize=True,
+              print_blob=True)
+    def check(streams, echo_mod):
+        times = []
+        for gaps in streams:
+            ts, t = [], 0.0
+            for g in gaps:
+                t += g
+                ts.append(t)
+            times.append(ts)
+
+        def drive(loop, use_streams):
+            seen = []
+            for k in range(len(times)):
+                def on_ev(t, p, k=k):
+                    seen.append((f"s{k}", t, p))
+                    if p % echo_mod == 0:
+                        loop.push(t, "echo", p)  # zero-gap follow-up
+                loop.on(f"s{k}", on_ev)
+            loop.on("echo", lambda t, p: seen.append(("echo", t, p)))
+            for k, ts in enumerate(times):
+                if use_streams:
+                    loop.add_stream(f"s{k}", zip(ts, range(len(ts))))
+                else:
+                    for i, tt in enumerate(ts):
+                        loop.push(tt, f"s{k}", i)
+            loop.run()
+            return seen
+
+        ref = drive(EventLoop(scheduler="heap"), use_streams=False)
+        fast = drive(EventLoop(), use_streams=True)
+        assert ref == fast
+
+    check()
+
+
 def test_scheduler_registry_and_unknown_name():
     assert set(SCHEDULERS) == {"heap", "calendar"}
     assert isinstance(EventLoop(scheduler="heap")._sched, HeapScheduler)

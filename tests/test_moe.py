@@ -55,6 +55,7 @@ def test_gspmd_matches_oracle():
     np.testing.assert_allclose(out, _oracle(x, lp, 2), rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_ep_differentiable(lm_rules):
     cfg, lp, x = _setup()
     g = jax.grad(lambda lp: jnp.sum(moe_ffn_ep(x, lp, cfg, lm_rules)[0] ** 2))(lp)

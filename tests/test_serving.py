@@ -135,6 +135,7 @@ def test_simulation_deterministic():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("policy", sorted(ROUTERS))
 def test_router_policy_deterministic_under_seed(policy):
     kw = {"seed": 11} if policy == "power_of_two" else (
@@ -711,6 +712,7 @@ def test_per_cell_budget_independence():
     assert all(h <= 6 for h in hot)
 
 
+@pytest.mark.slow
 def test_global_cap_bounds_sum_of_cell_budgets():
     """With a global fleet cap, per-cell budgets become children of it:
     each cell still respects its own ceiling AND the cells' total replica
@@ -1384,7 +1386,8 @@ def test_online_model_recovers_miscalibrated_system():
 def test_fleet_control_rollup_identity_when_uncontrolled():
     assert fleet_control_rollup([]) == {
         "online_pools": 0, "adaptive_batch_pools": 0, "samples": 0,
-        "mean_latency_correction": 1.0, "mean_fetch_correction": 1.0}
+        "mean_latency_correction": 1.0, "mean_fetch_correction": 1.0,
+        "by_platform": {}}
     # the mean is sample-weighted (a one-sample pool cannot dilute a
     # heavily observed drifted one) and the output keys round-trip as
     # input, which is how federated_rollup reuses the helper per cell
@@ -1460,3 +1463,242 @@ def test_windowed_rows_per_item_forgets_old_mix():
     # and the miss-cost prediction follows (no cache: every row fetches)
     assert pool.predicted_miss_cost(10) == pytest.approx(
         rows_per_item * 10 * 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous platform classes + query-size-aware routing
+# ---------------------------------------------------------------------------
+
+
+def test_platform_family_constructors_curve_shapes():
+    """cpu_like / accelerator_like encode the DeepRecSys curve shapes:
+    CPU wins pointwise, the accelerator wins wide ranking batches, and
+    the curves cross once in between (~30 items at the defaults)."""
+    cpu = ReplicaSpec.cpu_like("v")
+    acc = ReplicaSpec.accelerator_like("v")
+    assert cpu.platform == "cpu" and acc.platform == "accelerator"
+    assert _spec().platform == "generic"  # plain construction untagged
+    assert cpu.latency(1) < acc.latency(1)
+    assert cpu.latency(512) > acc.latency(512)
+    cross = next(n for n in range(1, 513) if acc.latency(n) <= cpu.latency(n))
+    assert 16 <= cross <= 48
+    # curve + start costs are overridable without losing the class tag
+    fast = ReplicaSpec.accelerator_like("v2", base_s=0.01, warm_start_s=0.02)
+    assert fast.platform == "accelerator"
+    assert fast.latency(1) == pytest.approx(0.01 + 3e-5)
+    assert fast.warm_start_s == 0.02
+    # and a fully calibrated curve passes straight through **kw
+    lut = LatencyModel.analytic(0.03, 1e-5)
+    assert ReplicaSpec.cpu_like("v3", latency=lut).latency is lut
+
+
+def test_pool_config_for_platform_defaults_and_overrides():
+    cpu = PoolConfig.for_platform("cpu")
+    acc = PoolConfig.for_platform("accelerator")
+    # CPU-class closes small batches fast; accelerator batches wide
+    assert (cpu.max_batch, cpu.max_batch_items, cpu.max_wait_s) == (16, 64, 0.002)
+    assert (acc.max_batch, acc.max_batch_items, acc.max_wait_s) == (64, 2048, 0.010)
+    # unknown platform -> generic PoolConfig defaults
+    assert PoolConfig.for_platform("tpu-v9") == PoolConfig()
+    # any field overrides its class default
+    tuned = PoolConfig.for_platform("accelerator", n_replicas=5, max_wait_s=0.02)
+    assert tuned.n_replicas == 5 and tuned.max_wait_s == 0.02
+    assert tuned.max_batch_items == 2048
+
+
+def test_bimodal_cost_mix_shapes_and_validation():
+    from repro.data.synthetic import bimodal_cost_mix
+
+    assert bimodal_cost_mix() == ((1, 0.9), (512, 0.1))
+    assert bimodal_cost_mix(rank_frac=0.0) == ((1, 1.0),)
+    assert bimodal_cost_mix(rank_frac=1.0) == ((512, 1.0),)
+    spread = bimodal_cost_mix(spread=0.25, modes=3)
+    costs = [c for c, _ in spread]
+    assert costs == [1, 384, 512, 640]
+    assert sum(w for _, w in spread) == pytest.approx(1.0)
+    # binomial-shaped: the central ranking size dominates the shoulders
+    weights = {c: w for c, w in spread}
+    assert weights[512] > weights[384] == weights[640]
+    assert bimodal_cost_mix(spread=0.25, modes=3) == spread  # deterministic
+    with pytest.raises(ValueError):
+        bimodal_cost_mix(rank_frac=1.5)
+
+
+def _platform_fleet(**kw):
+    pools = {
+        "cpu": PoolSpec(ReplicaSpec.cpu_like("base"),
+                        PoolConfig.for_platform("cpu", n_replicas=2,
+                                                autoscale=False)),
+        "acc": PoolSpec(ReplicaSpec.accelerator_like("base"),
+                        PoolConfig.for_platform("accelerator", n_replicas=2,
+                                                autoscale=False)),
+    }
+    return ServingSystem(pools, kw.pop("router", make_router("size_aware")),
+                         slo_p99_s=0.2, **kw)
+
+
+def test_size_aware_routes_by_class_and_blind_router_cannot():
+    """On an idle mixed fleet the size-aware router sends a ranking
+    batch to the accelerator class and a pointwise probe to the CPU
+    class; the size-blind ablation prices every arrival at cost 1 and
+    sends the ranking batch to the CPU pool's cheaper pointwise quote —
+    the exact admission mistake experiment 9 measures."""
+    sys_ = _platform_fleet()
+    pools = list(sys_.pools.values())
+    rank = Request(0, 0.0, "tier0", cost=512)
+    point = Request(1, 0.0, "tier0", cost=1)
+    assert sys_.router.select_pool(rank, pools, 0.0).name == "acc"
+    assert sys_.router.select_pool(point, pools, 0.0).name == "cpu"
+    blind = make_router("cost_model_blind")
+    assert blind.select_pool(rank, pools, 0.0).name == "cpu"
+    assert blind.select_pool(point, pools, 0.0).name == "cpu"
+    # an explicit threshold overrides the idle-curve comparison
+    thresh = make_router("size_aware", size_threshold=8)
+    assert thresh.select_pool(Request(2, 0.0, "tier0", cost=8),
+                              pools, 0.0).name == "acc"
+    assert thresh.select_pool(Request(3, 0.0, "tier0", cost=7),
+                              pools, 0.0).name == "cpu"
+
+
+def test_size_aware_falls_back_without_both_classes():
+    """A fleet missing either platform class degrades to plain
+    cost-model routing: same pool choice, request for request."""
+    homogeneous = {
+        "a": PoolSpec(_spec("m", 0.02, 1e-3), PoolConfig(n_replicas=2)),
+        "b": PoolSpec(_spec("m", 0.004, 5e-5), PoolConfig(n_replicas=2)),
+    }
+    aware = ServingSystem(dict(homogeneous), make_router("size_aware"))
+    ref = ServingSystem(dict(homogeneous), make_router("cost_model"))
+    for cost in (1, 8, 64, 512):
+        req = Request(cost, 0.0, "tier0", cost=cost)
+        assert (aware.router.select_pool(req, list(aware.pools.values()), 0.0).name
+                == ref.router.select_pool(req, list(ref.pools.values()), 0.0).name)
+
+
+def test_heterogeneous_fleet_replays_bit_exact():
+    """The mixed CPU/accelerator fleet under a bimodal size mix is as
+    deterministic as the homogeneous ones: a fresh build over the same
+    seed reproduces every summary number exactly."""
+    from repro.data.synthetic import bimodal_cost_mix
+
+    def one():
+        sys_ = _platform_fleet()
+        arr = poisson_arrivals(lambda t: 300.0, 5.0, seed=7,
+                               cost_mix=bimodal_cost_mix(rank_frac=0.05))
+        return sys_.run(arr, until=5.0)
+
+    a, b = one(), one()
+    for key in ("p50", "p99", "mean_latency", "throughput",
+                "completed", "rejected", "slo_attainment"):
+        assert a[key] == b[key], key
+    assert {n: p["completed"] for n, p in a["pools"].items()} \
+        == {n: p["completed"] for n, p in b["pools"].items()}
+    # and the summary carries the class tag per pool
+    assert a["pools"]["cpu"]["platform"] == "cpu"
+    assert a["pools"]["acc"]["platform"] == "accelerator"
+
+
+def test_fleet_control_rollup_keeps_platform_classes_apart():
+    """Per-class corrections never blend across classes: a drifted CPU
+    fleet shows up under by_platform["cpu"] with the accelerator mean
+    untouched, while the top-level mean stays the all-class blend —
+    and a cell rollup re-fed through the rollup merges class-wise."""
+    cpu = {"online_latency": True, "adaptive_batch": False, "samples": 90,
+           "latency_correction": 2.0, "fetch_correction": 1.5,
+           "platform": "cpu"}
+    acc = {"online_latency": True, "adaptive_batch": True, "samples": 10,
+           "latency_correction": 1.0, "fetch_correction": 1.0,
+           "platform": "accelerator"}
+    out = fleet_control_rollup([cpu, acc])
+    assert out["online_pools"] == 2 and out["adaptive_batch_pools"] == 1
+    assert out["samples"] == 100
+    assert out["mean_latency_correction"] == pytest.approx(1.9)
+    by = out["by_platform"]
+    assert by["cpu"]["mean_latency_correction"] == pytest.approx(2.0)
+    assert by["cpu"]["mean_fetch_correction"] == pytest.approx(1.5)
+    assert by["accelerator"]["mean_latency_correction"] == pytest.approx(1.0)
+    # cell-level re-entry: two cells' rollups merge per class, sample-
+    # weighted, so a one-sample cell cannot dilute a drifted one
+    cell2 = fleet_control_rollup([
+        {"online_latency": True, "adaptive_batch": False, "samples": 10,
+         "latency_correction": 4.0, "fetch_correction": 1.0,
+         "platform": "cpu"}])
+    fleet = fleet_control_rollup([out, cell2])
+    assert fleet["samples"] == 110
+    assert fleet["by_platform"]["cpu"]["samples"] == 100
+    assert fleet["by_platform"]["cpu"]["mean_latency_correction"] \
+        == pytest.approx((90 * 2.0 + 10 * 4.0) / 100)
+    assert fleet["by_platform"]["accelerator"]["mean_latency_correction"] \
+        == pytest.approx(1.0)
+    # a legacy summary with no platform tag lands under "generic"
+    legacy = fleet_control_rollup([{"online_latency": False,
+                                    "adaptive_batch": False, "samples": 5,
+                                    "latency_correction": 1.2,
+                                    "fetch_correction": 1.0}])
+    assert set(legacy["by_platform"]) == {"generic"}
+
+
+# ---------------------------------------------------------------------------
+# service_time / sustainable_rate edge-case regressions
+# ---------------------------------------------------------------------------
+
+
+def test_service_time_missprofile_transit_without_fetch_rows():
+    """Regression: a batch whose every missed row was absorbed by the
+    shared L2 still pays the recorded inter-cell transit — zero
+    fetch_rows must not short-circuit the transit term (and zero of
+    BOTH must collapse to the pure dense time, same as the int path)."""
+    spec = dataclasses.replace(_spec("m", 0.01, 1e-4), embed_fetch_s=1e-3)
+    l2_only = MissProfile(l2_hits=8, transit_s=0.004)
+    assert l2_only.fetch_rows == 0 and l2_only.total_rows == 8
+    assert spec.service_time(4, l2_only) \
+        == pytest.approx(spec.latency(4) + 0.004)
+    assert spec.service_time(4, MissProfile()) == spec.latency(4)
+    assert spec.service_time(4, 0) == spec.latency(4)
+
+
+def test_service_time_fetch_drift_with_accurate_dense_curve():
+    """Regression: when only the fetch leg drifts (true_embed_fetch_s
+    set, true_latency left None) the service clock charges the OFFLINE
+    dense curve plus the TRUE per-row cost — the dense truth must not
+    default to zero or to the drifted fetch."""
+    offline = LatencyModel.analytic(0.01, 1e-4)
+    spec = ReplicaSpec("m", offline, embed_fetch_s=1e-4,
+                       true_embed_fetch_s=3e-4)
+    assert spec.service_time(4, 10) == pytest.approx(offline(4) + 10 * 3e-4)
+    prof = MissProfile(l2_hits=2, local_rows=6, remote_rows=4,
+                       transit_s=0.002)
+    assert spec.service_time(4, prof) \
+        == pytest.approx(offline(4) + 10 * 3e-4 + 0.002)
+    # sustainable_rate is the PLANNING view: it prices embedding traffic
+    # at the calibrated fetch cost, not the (unknowable) drifted truth
+    w, b1 = 0.02, offline(1)
+    marginal = (offline(32) - b1) / 31.0
+    expect = (2 * w - b1) / (w * (marginal + 8 * 1e-4))
+    assert sustainable_rate(spec, 2, w, ids_per_request=8) \
+        == pytest.approx(expect)
+
+
+def test_sustainable_rate_hit_rate_and_zero_fetch_edges():
+    """Edges around the miss-fetch term: a FULL hit rate on a flat
+    curve removes the only finite term (back to the unbounded / 1 rps
+    branch, not a ZeroDivisionError), and ids_per_request is inert when
+    the spec has no per-row fetch cost."""
+    flat = dataclasses.replace(
+        ReplicaSpec("m", LatencyModel.analytic(0.01, 0.0)),
+        embed_fetch_s=1e-3)
+    assert np.isfinite(sustainable_rate(flat, 2, 0.02, ids_per_request=8))
+    assert sustainable_rate(flat, 2, 0.02, ids_per_request=8,
+                            hit_rate=1.0) == float("inf")
+    # base exceeds the window at full hit rate: the documented floor
+    assert sustainable_rate(flat, 1, 0.005, ids_per_request=8,
+                            hit_rate=1.0) == 1.0
+    # warmer cache -> strictly higher equilibrium on the way there
+    cold = sustainable_rate(flat, 2, 0.02, ids_per_request=8, hit_rate=0.0)
+    warm = sustainable_rate(flat, 2, 0.02, ids_per_request=8, hit_rate=0.9)
+    assert warm > cold
+    # zero fetch cost: embedding traffic cannot change the rate
+    sloped = _spec("m", 0.005, 1e-4)  # embed_fetch_s defaults to 0
+    assert sloped.embed_fetch_s == 0.0
+    assert sustainable_rate(sloped, 2, 0.02, ids_per_request=100) \
+        == sustainable_rate(sloped, 2, 0.02)

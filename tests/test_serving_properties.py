@@ -1,0 +1,278 @@
+"""Property-based serving invariants (hypothesis): whatever fleet the
+strategies assemble — pool counts, platform-class mixes (generic /
+cpu_like / accelerator_like), router policies, cell policies, admission
+tiers, arrival size mixes, horizons — three contracts must hold after
+every run:
+
+    conservation   injected == completed + rejected + in_flight, with
+                   in_flight == 0 once the loop drains (no admitted
+                   request is ever lost, none is counted twice)
+    accounting     every counter, queue length, budget and trace sample
+                   is non-negative; queues and queued_cost end empty;
+                   shared replica budgets are never exceeded
+    timelines      per-request stamps are monotone:
+                   t_arrive <= s*_enqueue <= s*_start <= s*_done
+
+plus bit-exact determinism: the same fleet + seed replayed from scratch
+produces the identical summary.
+
+The suite auto-skips when hypothesis is absent (optional [test] extra,
+same pattern as test_gnn.py); settings are derandomized so CI failures
+reproduce locally."""
+import dataclasses
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional test dep (see pyproject [test])
+from hypothesis import given, settings, strategies as st
+
+from repro.core.serving.cache import CacheConfig
+from repro.core.serving.engine import (
+    PoolSpec, ServingSystem, attach_zipf_ids, poisson_arrivals,
+)
+from repro.core.serving.federation import (
+    CELL_POLICIES, CellSpec, FederatedSystem, assign_homes,
+)
+from repro.core.serving.pool import PoolConfig
+from repro.core.serving.rate_limiter import TierPolicy
+from repro.core.serving.replica import LatencyModel, ReplicaSpec
+from repro.core.serving.router import ROUTERS, make_router
+from repro.data.synthetic import bimodal_cost_mix
+
+# one run per example keeps the whole suite inside a few seconds while
+# still covering hundreds of distinct fleet shapes across the tests
+COMMON = dict(deadline=None, derandomize=True, print_blob=True)
+
+
+def _spec(platform: str, variant: str = "m") -> ReplicaSpec:
+    if platform == "cpu":
+        return ReplicaSpec.cpu_like(variant, cold_start_s=0.5)
+    if platform == "accelerator":
+        return ReplicaSpec.accelerator_like(variant, warm_start_s=0.1,
+                                            cold_start_s=0.5)
+    return ReplicaSpec(variant, LatencyModel.analytic(0.01, 5e-4),
+                       cold_start_s=0.5, warm_start_s=0.05)
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+pool_st = st.fixed_dictionaries({
+    "platform": st.sampled_from(["generic", "cpu", "accelerator"]),
+    "n_replicas": st.integers(1, 3),
+    "autoscale": st.booleans(),
+    "max_batch": st.sampled_from([1, 4, 16]),
+    "max_batch_items": st.sampled_from([None, 64, 512]),
+    "max_wait_s": st.sampled_from([0.001, 0.005, 0.02]),
+    "cache_rows": st.sampled_from([0, 128]),
+})
+
+fleet_st = st.lists(pool_st, min_size=1, max_size=3)
+
+traffic_st = st.fixed_dictionaries({
+    "rate": st.sampled_from([40.0, 150.0, 400.0]),
+    "horizon": st.sampled_from([0.6, 1.5, 3.0]),
+    "seed": st.integers(0, 999),
+    "priority_frac": st.sampled_from([0.0, 0.05, 0.3]),
+    "rank_frac": st.sampled_from([0.0, 0.1, 0.5]),
+    "rank_cost": st.sampled_from([32, 512]),
+    "ids": st.booleans(),
+})
+
+system_st = st.fixed_dictionaries({
+    "router": st.sampled_from(sorted(ROUTERS)),
+    "tier_rate": st.sampled_from([None, 60.0, 1000.0]),
+    "adaptive_shedding": st.booleans(),
+})
+
+
+def _build(fleet, sys_cfg):
+    pools = {}
+    for i, p in enumerate(fleet):
+        pools[f"p{i}_{p['platform']}"] = PoolSpec(
+            _spec(p["platform"], variant=f"v{i}"),
+            PoolConfig.for_platform(
+                p["platform"], n_replicas=p["n_replicas"],
+                autoscale=p["autoscale"], max_batch=p["max_batch"],
+                max_batch_items=p["max_batch_items"],
+                max_wait_s=p["max_wait_s"]),
+            cache=CacheConfig(p["cache_rows"]) if p["cache_rows"] else None,
+        )
+    tiers = None
+    if sys_cfg["tier_rate"] is not None:
+        tiers = {t: TierPolicy(sys_cfg["tier_rate"], sys_cfg["tier_rate"] / 5)
+                 for t in ("tier0", "tier1")}
+    return ServingSystem(
+        pools, make_router(sys_cfg["router"]), tiers=tiers, slo_p99_s=0.1,
+        adaptive_shedding=sys_cfg["adaptive_shedding"])
+
+
+def _arrivals(traffic):
+    mix = None
+    if traffic["rank_frac"] > 0.0:
+        mix = bimodal_cost_mix(rank_cost=traffic["rank_cost"],
+                               rank_frac=traffic["rank_frac"])
+    arr = poisson_arrivals(
+        lambda t: traffic["rate"], traffic["horizon"], seed=traffic["seed"],
+        priority_frac=traffic["priority_frac"], cost_mix=mix)
+    if traffic["ids"]:
+        attach_zipf_ids(arr, 2000, 4, alpha=1.1, seed=traffic["seed"])
+    return arr
+
+
+def _check_invariants(arrivals, res, pools):
+    injected = len(arrivals)
+    stamped = [r for r in arrivals if f"s{r.stage}_enqueue" in r.timeline]
+    # conservation: every arrival is exactly one of completed/rejected,
+    # and nothing is left queued or in flight once the loop drains
+    assert res["arrived"] == injected
+    assert res["rejected"] == injected - len(stamped)
+    assert res["completed"] == len(stamped)
+    assert res["completed"] + res["rejected"] == injected
+    assert res["in_queue"] == 0
+    assert 0 <= res["completed_in_horizon"] <= res["completed"]
+    # non-negative accounting, empty end-state queues, sane percentiles
+    assert res["rejected"] >= 0 and res["throughput"] >= 0.0
+    assert 0.0 <= res["p50"] <= res["p99"]
+    assert res["mean_latency"] >= 0.0
+    for pool in pools.values():
+        assert not pool.queue and pool.queued_cost == 0
+        assert pool.shed >= 0
+        assert len(pool.replicas) >= 1
+    trace = res["trace"]
+    assert all(q >= 0 for q in trace["queue"])
+    assert all(n >= 1 for n in trace["replicas"])
+    # per-request timeline monotonicity (every admitted request carries
+    # the full enqueue -> start -> done chain of its final stage)
+    for r in stamped:
+        tl = r.timeline
+        pre = f"s{r.stage}_"
+        assert r.t_arrive <= tl[pre + "enqueue"]
+        assert tl[pre + "enqueue"] <= tl[pre + "start"] <= tl[pre + "done"]
+
+
+@given(fleet=fleet_st, sys_cfg=system_st, traffic=traffic_st)
+@settings(max_examples=40, **COMMON)
+def test_system_invariants_hold_for_any_fleet(fleet, sys_cfg, traffic):
+    arrivals = _arrivals(traffic)
+    sys_ = _build(fleet, sys_cfg)
+    res = sys_.run(arrivals, until=traffic["horizon"])
+    _check_invariants(arrivals, res, sys_.pools)
+
+
+@given(fleet=fleet_st, sys_cfg=system_st, traffic=traffic_st)
+@settings(max_examples=10, **COMMON)
+def test_replay_is_bit_exact_for_any_fleet(fleet, sys_cfg, traffic):
+    """The determinism contract, fuzzed: rebuilding the same fleet and
+    replaying the same seed gives the identical summary — percentiles,
+    counters and traces — including heterogeneous platform mixes."""
+    def once():
+        arr = _arrivals(traffic)
+        return _build(fleet, sys_cfg).run(arr, until=traffic["horizon"])
+
+    a, b = once(), once()
+    assert (a["p50"], a["p99"], a["mean_latency"]) == \
+        (b["p50"], b["p99"], b["mean_latency"])
+    assert a["completed"] == b["completed"]
+    assert a["rejected"] == b["rejected"]
+    assert a["trace"] == b["trace"]
+    assert {n: p["completed"] for n, p in a["pools"].items()} == \
+        {n: p["completed"] for n, p in b["pools"].items()}
+
+
+cell_st = st.fixed_dictionaries({
+    "platforms": st.lists(
+        st.sampled_from(["generic", "cpu", "accelerator"]),
+        min_size=1, max_size=2),
+    "n_replicas": st.integers(1, 2),
+})
+
+federation_st = st.fixed_dictionaries({
+    "cells": st.lists(cell_st, min_size=2, max_size=3),
+    "policy": st.sampled_from(sorted(CELL_POLICIES)),
+    "spillover": st.booleans(),
+    "hot_frac": st.sampled_from([0.5, 0.8]),
+})
+
+
+@given(fed_cfg=federation_st, traffic=traffic_st)
+@settings(max_examples=25, **COMMON)
+def test_federation_invariants_hold_for_any_cell_mix(fed_cfg, traffic):
+    """The same contracts one layer up: heterogeneous CELL class mixes
+    (each cell's pool set drawn independently, so fleets mix pure-CPU
+    cells with accelerator and mixed cells), every cell policy, spill
+    on/off. The federation's own summary documents the conservation
+    identity — this pins it."""
+    cells = {}
+    for ci, c in enumerate(fed_cfg["cells"]):
+        pools = {
+            f"p{pi}_{plat}": PoolSpec(
+                _spec(plat, variant=f"c{ci}v{pi}"),
+                PoolConfig.for_platform(plat, n_replicas=c["n_replicas"],
+                                        autoscale=False))
+            for pi, plat in enumerate(c["platforms"])
+        }
+        cells[f"cell{ci}"] = CellSpec(pools=pools, slo_p99_s=0.1,
+                                      adaptive_shedding=False)
+    fed = FederatedSystem(cells, policy=fed_cfg["policy"],
+                          spillover=fed_cfg["spillover"], rtt_s=0.002,
+                          slo_p99_s=0.1)
+    arrivals = _arrivals(traffic)
+    rest = (1.0 - fed_cfg["hot_frac"]) / (len(cells) - 1)
+    skew = {name: (fed_cfg["hot_frac"] if i == 0 else rest)
+            for i, name in enumerate(cells)}
+    assign_homes(arrivals, skew, seed=traffic["seed"])
+    res = fed.run(arrivals, until=traffic["horizon"])
+
+    injected = len(arrivals)
+    assert res["injected"] == injected
+    assert res["completed"] + res["rejected"] + res["in_flight"] == injected
+    assert res["in_flight"] == 0 and res["in_transit"] == 0
+    assert res["spilled"] >= 0 and res["spilled_in"] >= 0
+    assert 0 <= res["completed_in_horizon"] <= res["completed"]
+    assert 0.0 <= res["p50"] <= res["p99"]
+    for cell in fed.cells.values():
+        for pool in cell.system.pools.values():
+            assert not pool.queue and pool.queued_cost == 0
+    assert all(s >= 0 for s in res["trace"]["spilled"])
+    assert all(n >= 0 for n in res["trace"]["in_transit"])
+    for r in arrivals:
+        pre = f"s{r.stage}_"
+        if pre + "enqueue" not in r.timeline:
+            continue
+        tl = r.timeline
+        # a spilled request re-stamps enqueue at the serving cell after
+        # transit; the final chain must still be monotone from arrival
+        assert r.t_arrive <= tl[pre + "enqueue"]
+        assert tl[pre + "enqueue"] <= tl[pre + "start"] <= tl[pre + "done"]
+
+
+@given(traffic=traffic_st, threshold=st.sampled_from([None, 8, 64]))
+@settings(max_examples=15, **COMMON)
+def test_size_aware_class_affinity_property(traffic, threshold):
+    """SizeAwareRouter's structural guarantee on a two-class fleet: with
+    an explicit threshold, NO request at or above it is ever served by a
+    CPU-class pool and none below it by an accelerator-class pool
+    (admission-time affinity is absolute, not a preference); class
+    totals always add up to the fleet's completed count."""
+    pools = {
+        "cpu": PoolSpec(_spec("cpu"),
+                        PoolConfig.for_platform("cpu", n_replicas=2,
+                                                autoscale=False)),
+        "acc": PoolSpec(_spec("accelerator"),
+                        PoolConfig.for_platform("accelerator", n_replicas=2,
+                                                autoscale=False)),
+    }
+    sys_ = ServingSystem(pools, make_router("size_aware",
+                                            size_threshold=threshold),
+                         slo_p99_s=0.1, adaptive_shedding=False)
+    arrivals = _arrivals(traffic)
+    res = sys_.run(arrivals, until=traffic["horizon"])
+    by_pool = {n: p["completed"] for n, p in res["pools"].items()}
+    assert sum(by_pool.values()) == res["completed"]
+    assert res["rejected"] == 0  # unlimited tiers, shedding off
+    if threshold is not None:
+        n_large = sum(1 for r in arrivals if r.cost >= threshold)
+        assert by_pool["acc"] == n_large
+        assert by_pool["cpu"] == len(arrivals) - n_large
