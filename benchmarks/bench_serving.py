@@ -68,8 +68,22 @@ executables of the five Table-I variants (or analytic stand-ins under
      throughput at equal-or-better p99, and that the heterogeneous fleet
      replays bit-identically.
 
+  10. latency waterfall (serving/tracing.py): the experiment-9 routing
+     comparison re-read through the always-on attribution layer — every
+     completed request's latency decomposes into named components
+     (queue wait, replica wait, dense compute, embedding fetches, shard
+     transit, inter-cell transit) whose sum equals the end-to-end
+     latency bit-exactly. --smoke asserts the size-blind router's
+     latency premium is attributed >= majority to the WAIT components:
+     misrouting changes where requests queue, not what they compute.
+
 `--smoke` skips calibration (analytic Table-I-shaped latency models) and
 shrinks every horizon so CI can run the whole file in seconds.
+`--trace-out` / `--metrics-out` additionally run one TRACED federated
+run over the sharded embedding tier and write a Perfetto-loadable
+Chrome trace (tools/check_trace.py validates it) and/or a Prometheus
+text exposition whose conserved counters are asserted against
+`federated_rollup` before the file is written.
 """
 from __future__ import annotations
 
@@ -87,11 +101,13 @@ from repro.core.serving.engine import (
     poisson_arrivals,
 )
 from repro.core.serving.federation import CellSpec, FederatedSystem, assign_homes
+from repro.core.serving.metrics import MetricsRegistry, federated_rollup
 from repro.core.serving.pool import PoolConfig
 from repro.core.serving.rate_limiter import TierPolicy
 from repro.core.serving.replica import LatencyModel, ReplicaSpec, sustainable_rate
 from repro.core.serving.router import make_router
 from repro.core.serving.shard import EmbeddingShardService
+from repro.core.serving.tracing import COMPONENTS, Tracer
 from repro.data.synthetic import bimodal_cost_mix, update_event_stream, zipf_id_stream
 
 def spike(horizon: float):
@@ -708,6 +724,23 @@ def shard_rows(specs, horizon=25.0, check=False) -> list:
 
 PLATFORM_RANK_COST = 512
 PLATFORM_RATIO_FLOOR = 1.5  # asserted; measured 1.60-1.66 across seeds
+PLATFORM_POINT_RATE = 1800.0  # pointwise probes / s offered to the fleet
+PLATFORM_RANK_RATE = 48.0  # 512-candidate ranking queries / s
+
+
+def _platform_fleet():
+    """The experiment-9/10 mixed fleet: 3 CPU-class + 2 accelerator-class
+    replicas, batched per platform (shared by the routing comparison and
+    the latency-waterfall attribution of the same comparison)."""
+    return {
+        "baseline_cpu": PoolSpec(
+            ReplicaSpec.cpu_like("baseline"),
+            PoolConfig.for_platform("cpu", n_replicas=3, autoscale=False)),
+        "baseline_acc": PoolSpec(
+            ReplicaSpec.accelerator_like("baseline"),
+            PoolConfig.for_platform("accelerator", n_replicas=2,
+                                    autoscale=False)),
+    }
 
 
 def platform_rows(horizon=20.0, check=False) -> list:
@@ -731,25 +764,13 @@ def platform_rows(horizon=20.0, check=False) -> list:
     so the run (and its asserted margins) replays bit-identically
     anywhere. Fixed fleet (autoscale off) and no adaptive shedding:
     routing quality alone separates the rows."""
-    point_rate, rank_rate = 1800.0, 48.0
-    total = point_rate + rank_rate
+    total = PLATFORM_POINT_RATE + PLATFORM_RANK_RATE
     mix = bimodal_cost_mix(rank_cost=PLATFORM_RANK_COST,
-                           rank_frac=rank_rate / total)
-
-    def fleet():
-        return {
-            "baseline_cpu": PoolSpec(
-                ReplicaSpec.cpu_like("baseline"),
-                PoolConfig.for_platform("cpu", n_replicas=3, autoscale=False)),
-            "baseline_acc": PoolSpec(
-                ReplicaSpec.accelerator_like("baseline"),
-                PoolConfig.for_platform("accelerator", n_replicas=2,
-                                        autoscale=False)),
-        }
+                           rank_frac=PLATFORM_RANK_RATE / total)
 
     def one(router: str) -> dict:
-        sys_ = ServingSystem(fleet(), make_router(router), slo_p99_s=0.15,
-                             adaptive_shedding=False)
+        sys_ = ServingSystem(_platform_fleet(), make_router(router),
+                             slo_p99_s=0.15, adaptive_shedding=False)
         # default priority_frac: the 2% of head queries that bypass
         # batching are part of the workload — a priority ranking query
         # blind-routed onto a CPU-class pool occupies a replica solo for
@@ -790,6 +811,131 @@ def platform_rows(horizon=20.0, check=False) -> list:
     return rows
 
 
+# the components the size-blind router's collapse should concentrate in:
+# time spent waiting for a batch to close or a replica to free up
+WATERFALL_WAIT_COMPONENTS = ("queue_wait", "replica_wait")
+
+
+def waterfall_rows(horizon=20.0, check=False) -> list:
+    """Experiment 10: the latency WATERFALL of experiment 9's routing
+    comparison. The always-on attribution layer (serving/tracing.py)
+    decomposes every completed request's latency into named components
+    whose sum equals the end-to-end latency bit-exactly, so the
+    size-aware-vs-blind gap is not just measurable but attributable: the
+    blind router's extra latency must sit in the WAIT components (queue
+    wait behind poisoned steep-curve batches + replica wait), not in
+    compute — the work per request is identical, only where it queues
+    differs. `check` asserts the majority attribution, which turns the
+    experiment-9 headline number into an explained number."""
+    total = PLATFORM_POINT_RATE + PLATFORM_RANK_RATE
+    mix = bimodal_cost_mix(rank_cost=PLATFORM_RANK_COST,
+                           rank_frac=PLATFORM_RANK_RATE / total)
+
+    def one(router: str) -> dict:
+        sys_ = ServingSystem(_platform_fleet(), make_router(router),
+                             slo_p99_s=0.15, adaptive_shedding=False)
+        arr = poisson_arrivals(lambda t: total, horizon, seed=0, cost_mix=mix)
+        return sys_.run(arr, until=horizon)
+
+    rows, res = [], {}
+    for router in ("size_aware", "cost_model_blind"):
+        r = one(router)
+        res[router] = r
+        bd = r["latency_breakdown"]
+        n = max(bd["count"], 1)
+        rows.append({
+            "experiment": "latency_waterfall", "router": router,
+            "p99_ms": r["p99"] * 1e3, "throughput": r["throughput"],
+            "count": bd["count"],
+            "mean_end_to_end_ms": bd["end_to_end_s"] / n * 1e3,
+            "component_s": dict(bd["components"]),
+            "mean_ms": {c: bd["components"][c] / n * 1e3 for c in COMPONENTS},
+            "share": dict(bd["shares"]),
+        })
+    if check:
+        aware = res["size_aware"]["latency_breakdown"]
+        blind = res["cost_model_blind"]["latency_breakdown"]
+        mean = lambda bd, c: bd["components"][c] / max(bd["count"], 1)
+        d_total = (blind["end_to_end_s"] / max(blind["count"], 1)
+                   - aware["end_to_end_s"] / max(aware["count"], 1))
+        d_wait = sum(mean(blind, c) - mean(aware, c)
+                     for c in WATERFALL_WAIT_COMPONENTS)
+        assert d_total > 0, (
+            "the size-blind router must pay a mean-latency premium for the"
+            f" waterfall to attribute: delta {d_total * 1e3:.2f}ms")
+        assert d_wait >= 0.5 * d_total, (
+            "the size-aware-vs-blind latency gap (the p99 collapse of"
+            " experiment 9) must be attributed >= majority to batch-wait /"
+            " queue components — misrouting changes where requests WAIT,"
+            f" not what they compute: wait delta {d_wait * 1e3:.2f}ms of"
+            f" {d_total * 1e3:.2f}ms total")
+        assert res["cost_model_blind"]["p99"] > res["size_aware"]["p99"]
+    return rows
+
+
+def export_observability(trace_path=None, metrics_path=None,
+                         smoke: bool = False) -> dict:
+    """--trace-out / --metrics-out: one traced 2-cell federated run over
+    the sharded embedding tier (the experiment-8 operating point, so the
+    trace shows every span kind: queue/replica waits, dense + local and
+    REMOTE embedding fetches, shard transit, inter-cell hops), exported
+    as a Perfetto-loadable Chrome trace and/or a Prometheus text
+    exposition. The exposition's conserved counters are asserted against
+    `federated_rollup` before anything hits disk — the artifact CI
+    uploads is self-checked, not best-effort."""
+    horizon = 6.0 if smoke else 20.0
+    spec = _cached_spec(analytic_specs()["baseline"])
+    replicas, wait = 2, 0.02
+    l1_rows, l2_rows = SHARD_VOCAB // 64, SHARD_VOCAB // 4
+    p = np.arange(1, SHARD_VOCAB + 1, dtype=np.float64) ** -CACHE_ALPHA
+    p /= p.sum()
+    r_l2 = sustainable_rate(spec, replicas, wait, CACHE_IDS,
+                            hit_rate=float(p[:l2_rows].sum()))
+    tracer = Tracer(sample_every=4 if smoke else 16, seed=0)
+    shard = EmbeddingShardService(N_SHARDS, ("a", "b"))
+    cache = CacheConfig(l1_rows, l2=CacheConfig(l2_rows))
+    cells = {
+        name: CellSpec(
+            pools={"baseline": PoolSpec(
+                spec, PoolConfig(n_replicas=replicas, autoscale=False,
+                                 max_batch=32, max_wait_s=wait),
+                cache=cache)},
+            slo_p99_s=0.15, adaptive_shedding=False)
+        for name in ("a", "b")
+    }
+    fed = FederatedSystem(cells, policy="least_loaded", rtt_s=SHARD_RTT_S,
+                          slo_p99_s=0.15, shard=shard, tracer=tracer)
+    arr = poisson_arrivals(lambda t: 2 * 0.8 * r_l2, horizon, seed=0,
+                           priority_frac=0.0)
+    assign_homes(arr, {"a": 0.6, "b": 0.4}, seed=1)
+    attach_zipf_ids(arr, SHARD_VOCAB, CACHE_IDS, alpha=CACHE_ALPHA, seed=1)
+    res = fed.run(arr, until=horizon)
+
+    rollup = federated_rollup(res["cells"])
+    assert rollup["latency_breakdown"]["count"] == res["completed"], \
+        "fleet breakdown must account for exactly the completed requests"
+    text = MetricsRegistry.from_summary(res).to_prometheus_text()
+    for key in ("completed", "rejected"):
+        line = next(
+            l for l in text.splitlines()
+            if l.startswith(f'repro_serving_{key}_total{{scope="fleet"}}'))
+        assert int(line.split()[-1]) == res[key] == rollup[key], (
+            f"prometheus {key} counter must match the federated rollup")
+    stats = {"completed": res["completed"], "spans": len(tracer),
+             "dropped_spans": tracer.dropped_spans}
+    if trace_path:
+        with open(trace_path, "w") as fh:
+            json.dump(tracer.to_chrome_trace(), fh)
+        print(f"# wrote {len(tracer)} spans ({tracer.summary()['tracks']}"
+              f" tracks, 1-in-{tracer.sample_every} sampling) to {trace_path}")
+    if metrics_path:
+        with open(metrics_path, "w") as fh:
+            fh.write(text)
+        print(f"# wrote {len(text.splitlines())} exposition lines to"
+              f" {metrics_path}")
+    return stats
+
+
 def run(smoke: bool = False) -> list:
     if smoke:
         specs = analytic_specs()
@@ -801,12 +947,14 @@ def run(smoke: bool = False) -> list:
                 + caching_rows(specs, horizon=10.0)
                 + control_rows(specs, horizon=12.0, check=True)
                 + shard_rows(specs, horizon=10.0, check=True)
-                + platform_rows(horizon=8.0, check=True))
+                + platform_rows(horizon=8.0, check=True)
+                + waterfall_rows(horizon=8.0, check=True))
     specs = calibrated_specs()
     return (single_pool_rows(specs) + heterogeneous_rows(specs)
             + cascade_rows(specs) + mixed_batching_rows(specs)
             + federation_rows(specs) + caching_rows(specs)
-            + control_rows(specs) + shard_rows(specs) + platform_rows())
+            + control_rows(specs) + shard_rows(specs) + platform_rows()
+            + waterfall_rows())
 
 
 def main(argv=None):
@@ -820,6 +968,15 @@ def main(argv=None):
                     help="run under cProfile and print the top-25 cumulative"
                          " table (hot-loop regressions diagnosable without"
                          " editing code)")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="write a Perfetto-loadable Chrome trace (span"
+                         " waterfall of a traced federated run) to PATH,"
+                         " e.g. BENCH_trace.json")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="write the same run's Prometheus text exposition"
+                         " (conserved counters, cache/shard tallies, latency"
+                         " component histograms) to PATH, e.g."
+                         " BENCH_metrics.prom")
     args = ap.parse_args(argv)
     if args.profile:
         # script-mode runs have benchmarks/ itself on sys.path, not the root
@@ -831,15 +988,28 @@ def main(argv=None):
         rows = profiled(run, smoke=args.smoke)
     else:
         rows = run(smoke=args.smoke)
+    if args.trace_out or args.metrics_out:
+        export_observability(args.trace_out, args.metrics_out,
+                             smoke=args.smoke)
     if args.json:
         # lazy: only the artifact writer needs the shared schema helper
         try:
             from benchmarks.common import bench_payload
         except ImportError:
             from common import bench_payload
+        # schema v2: the waterfall rows flatten into the breakdown block
+        # so attribution diffs across PRs without a bench-specific parser
+        breakdown = [
+            {"label": r["router"], "component": c,
+             "seconds": r["component_s"][c], "share": r["share"][c],
+             "mean_ms": r["mean_ms"][c]}
+            for r in rows if r["experiment"] == "latency_waterfall"
+            for c in COMPONENTS
+        ]
         payload = bench_payload(
             "serving", rows, smoke=args.smoke,
-            row_keys=("experiment", "p99_ms", "throughput"))
+            row_keys=("experiment", "p99_ms", "throughput"),
+            breakdown=breakdown)
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=1, default=float)
         print(f"# wrote {len(rows)} experiment rows to {args.json}"
@@ -1033,6 +1203,28 @@ def main(argv=None):
                   <= plat["cost_model_blind"]["p99_ms"])
     print(f"size_aware_over_blind_throughput={ratio:.2f}x")
     print(f"size_aware_beats_size_blind={aware_wins}")
+
+    print("\n# 10. latency waterfall of the experiment-9 gap: per-request"
+          " attribution (sums to end-to-end latency bit-exactly), mean ms"
+          " per component")
+    wf_cols = [c for c in COMPONENTS if c != "closure"]
+    print("router,count,mean_e2e_ms," + ",".join(wf_cols))
+    wf = {}
+    for r in rows:
+        if r["experiment"] != "latency_waterfall":
+            continue
+        wf[r["router"]] = r
+        comps = ",".join(f"{r['mean_ms'][c]:.2f}" for c in wf_cols)
+        print(f"{r['router']},{r['count']},{r['mean_end_to_end_ms']:.1f},"
+              f"{comps}")
+    aware_wf, blind_wf = wf["size_aware"], wf["cost_model_blind"]
+    d_total = blind_wf["mean_end_to_end_ms"] - aware_wf["mean_end_to_end_ms"]
+    d_wait = sum(blind_wf["mean_ms"][c] - aware_wf["mean_ms"][c]
+                 for c in WATERFALL_WAIT_COMPONENTS)
+    frac = d_wait / d_total if d_total else float("nan")
+    print(f"blind_premium_ms={d_total:.1f}"
+          f" wait_attributed_ms={d_wait:.1f} ({frac:.0%})")
+    print(f"gap_is_majority_wait={d_wait >= 0.5 * d_total and d_total > 0}")
     return rows
 
 

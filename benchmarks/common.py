@@ -20,27 +20,46 @@ VARIANTS = ("baseline", "quantized", "pruned", "pruned_quantized", "distilled")
 # --json artifact schema, shared by every bench main. Bump when the
 # top-level payload shape changes so downstream diff tooling can refuse
 # mixed-version comparisons instead of silently misreading fields.
-BENCH_SCHEMA_VERSION = 1
+# v2: optional top-level "breakdown" — latency-attribution waterfall rows
+# (core/serving/tracing.py taxonomy), one per (label, component).
+BENCH_SCHEMA_VERSION = 2
+
+# the keys every breakdown row must carry: which run it describes, which
+# latency component, the summed seconds attributed to it, and its share
+# of the run's summed end-to-end latency
+BREAKDOWN_ROW_KEYS = ("label", "component", "seconds", "share")
+
+
+def _check_rows(bench: str, what: str, rows, keys: Sequence[str]) -> list:
+    rows = list(rows)
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            raise TypeError(f"{bench} {what} {i} is not a dict: {row!r}")
+        missing = [k for k in keys if k not in row]
+        if missing:
+            raise ValueError(
+                f"{bench} {what} {i} is missing required keys {missing}"
+                f" (has {sorted(row)})")
+    return rows
 
 
 def bench_payload(bench: str, rows: Sequence[dict], *, smoke: bool,
-                  row_keys: Sequence[str] = (), **extra) -> dict:
+                  row_keys: Sequence[str] = (),
+                  breakdown: Sequence[dict] = None, **extra) -> dict:
     """The validated payload a bench --json run writes: a stable
     top-level shape {bench, schema_version, smoke, rows, ...} so
     BENCH_*.json artifacts diff across PRs without per-bench parsers.
     `row_keys` are the keys this bench promises on EVERY row; a missing
-    one raises here, before a malformed artifact hits disk."""
-    rows = list(rows)
-    for i, row in enumerate(rows):
-        if not isinstance(row, dict):
-            raise TypeError(f"{bench} row {i} is not a dict: {row!r}")
-        missing = [k for k in row_keys if k not in row]
-        if missing:
-            raise ValueError(
-                f"{bench} row {i} is missing required keys {missing}"
-                f" (has {sorted(row)})")
-    return {"bench": bench, "schema_version": BENCH_SCHEMA_VERSION,
-            "smoke": bool(smoke), "rows": rows, **extra}
+    one raises here, before a malformed artifact hits disk. `breakdown`
+    (schema v2) optionally attaches latency-attribution rows — each must
+    carry BREAKDOWN_ROW_KEYS, so waterfall diffs stay parseable too."""
+    rows = _check_rows(bench, "row", rows, row_keys)
+    payload = {"bench": bench, "schema_version": BENCH_SCHEMA_VERSION,
+               "smoke": bool(smoke), "rows": rows, **extra}
+    if breakdown is not None:
+        payload["breakdown"] = _check_rows(
+            bench, "breakdown row", breakdown, BREAKDOWN_ROW_KEYS)
+    return payload
 
 # Paper Table I reference numbers (V100 ms / req/s) for side-by-side ratios.
 PAPER_TABLE1 = {

@@ -64,6 +64,7 @@ from repro.core.serving.events import EventLoop
 from repro.core.serving.metrics import (
     SLOMonitor, TraceBuffer, fleet_cache_rollup, fleet_control_rollup,
 )
+from repro.core.serving.tracing import BreakdownAccumulator, Tracer
 from repro.core.serving.pool import PoolConfig, ReplicaPool, Request
 from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
 from repro.core.serving.replica import ReplicaSpec
@@ -121,6 +122,7 @@ class ServingSystem:
         scheduler: str = "calendar",
         strict_events: bool = False,
         shard: Optional[EmbeddingShardService] = None,
+        tracer: Optional[Tracer] = None,
     ):
         # `loop`/`event_ns` let a federation embed several systems (cells)
         # on ONE shared clock: each system's events — and its pools' — are
@@ -147,6 +149,11 @@ class ServingSystem:
             self.budget = CapacityBudget(capacity) if capacity is not None else None
         self.monitor = SLOMonitor(slo_s=slo_p99_s)  # end-to-end latencies
         self.shard = shard
+        # latency attribution (serving/tracing.py): always-on end-to-end
+        # breakdown; the tracer is optional, shared with every pool, and
+        # observes only — no simulation decision or summary reads it
+        self.breakdown = BreakdownAccumulator()
+        self.tracer = tracer
         specs = {
             name: ps if isinstance(ps, PoolSpec) else PoolSpec(ps)
             for name, ps in pools.items()
@@ -182,7 +189,7 @@ class ServingSystem:
                 event_key=f"{event_ns}/{name}" if event_ns else name,
                 cache_cfg=ps.cache, control_cfg=ps.control,
                 l2_cache=self.l2_cache if has_l2 else None,
-                shard=shard, cell=event_ns,
+                shard=shard, cell=event_ns, tracer=tracer,
             )
         self.cascade = CascadeDispatcher(cascade) if cascade is not None else None
         if self.cascade is not None:
@@ -255,6 +262,13 @@ class ServingSystem:
                 nxt.submit(now, req, force=True)
                 return
         self.monitor.record(now, now - req.t_arrive)
+        # end-to-end attribution at the same instant and from the same
+        # floats the monitor records — the decomposition's total IS the
+        # recorded latency, bit for bit
+        self.breakdown.observe(req, now)
+        if self.tracer is not None and self.tracer.sampled(req.rid):
+            self.tracer.record_request(req, now,
+                                       track=self.event_ns or "system")
         if now <= self._horizon:
             self._completed_in_horizon += 1
         if self.on_complete is not None:
@@ -359,6 +373,11 @@ class ServingSystem:
             # loop (shared with every cell when federated); the seed kernel
             # dropped these silently
             "dropped_events": self.loop.dropped_events,
+            "dropped_kinds": dict(self.loop.dropped_kinds),
+            # end-to-end latency attribution (serving/tracing.py): per-
+            # component seconds whose per-request sums equal the recorded
+            # latencies exactly
+            "latency_breakdown": self.breakdown.summary(),
             "trace": self.trace.as_dict(),
             "pools": {name: p.summary() for name, p in self.pools.items()},
         }

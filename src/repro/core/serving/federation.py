@@ -137,7 +137,8 @@ class Cell:
     def __init__(self, name: str, spec: CellSpec, loop: EventLoop,
                  budget: Optional[CapacityBudget], scale_tick_s: float,
                  rtt: Optional[RttMatrix] = None,
-                 shard: Optional[EmbeddingShardService] = None):
+                 shard: Optional[EmbeddingShardService] = None,
+                 tracer=None):
         self.name = name
         # per-pair transfer time INTO this cell; policies charge it for
         # off-home candidates so the decision rule and the physical hop
@@ -148,7 +149,7 @@ class Cell:
             slo_p99_s=spec.slo_p99_s, scale_tick_s=scale_tick_s,
             capacity=budget, cascade=spec.cascade,
             adaptive_shedding=spec.adaptive_shedding,
-            loop=loop, event_ns=name, shard=shard,
+            loop=loop, event_ns=name, shard=shard, tracer=tracer,
         )
         self.spill = SpillStats()
 
@@ -289,6 +290,7 @@ class FederatedSystem:
         scheduler: str = "calendar",
         strict_events: bool = False,
         shard: Optional[EmbeddingShardService] = None,
+        tracer=None,
     ):
         if not cells:
             raise ValueError("a federation needs at least one cell")
@@ -296,6 +298,7 @@ class FederatedSystem:
         # strict-mode policy are fleet-wide
         self.loop = EventLoop(scheduler=scheduler, strict=strict_events)
         self.policy = make_cell_policy(policy) if isinstance(policy, str) else policy
+        self.tracer = tracer
         self.rtt_s = rtt_s
         self.rtt = RttMatrix(rtt_s, rtt)  # per-(src, dst) with scalar fallback
         self.shard = shard
@@ -314,7 +317,7 @@ class FederatedSystem:
             else:
                 budget = self.global_budget  # share the global cap directly
             cell = Cell(name, spec, self.loop, budget, scale_tick_s,
-                        rtt=self.rtt, shard=shard)
+                        rtt=self.rtt, shard=shard, tracer=tracer)
             cell.system.on_complete = self._request_done
             cell.system.spill_stage = (
                 lambda now, req, pool_name, _cell=cell:
@@ -532,6 +535,14 @@ class FederatedSystem:
             ),
             "final_replicas": rollup["final_replicas"],
             "dropped_events": self.loop.dropped_events,
+            "dropped_kinds": dict(self.loop.dropped_kinds),
+            # fleet-wide cache/shard tallies (summed across cells) so the
+            # fleet scope exposes staleness the same way each cell does
+            "cache": rollup["cache"],
+            # fleet latency attribution: the cells' always-on breakdown
+            # blocks rolled up (metrics.fleet_breakdown_rollup) — transit
+            # here includes every inter-cell RTT spill hops paid
+            "latency_breakdown": rollup["latency_breakdown"],
             "trace": self.trace.as_dict(),
             # fleet-global shard view (per-cell fetch splits live in each
             # cell's own summary["shard"] and in summary["cache"] rollups)

@@ -86,8 +86,14 @@ class TraceBuffer:
         self._n = n + 1
 
     def column(self, name: str) -> np.ndarray:
-        """Live view of one column (length == rows appended so far)."""
-        return self._bufs[self._names.index(name)][: self._n]
+        """Snapshot COPY of one column (length == rows appended so far).
+        This used to hand out a live view, which silently detached from
+        the buffer at the next amortised-doubling growth — a caller
+        holding the view across appends read frozen, stale data with no
+        error. A copy costs O(rows) but makes the contract unambiguous:
+        what you got is what the column held when you asked
+        (tests/test_events.py pins the growth boundary down)."""
+        return self._bufs[self._names.index(name)][: self._n].copy()
 
     def as_dict(self) -> Dict[str, List]:
         """Plain {column: list} — the summary()-facing representation."""
@@ -206,6 +212,45 @@ def fleet_control_rollup(control_summaries) -> Dict:
     return out
 
 
+def fleet_breakdown_rollup(breakdowns) -> Dict:
+    """Sum per-pool / per-cell `latency_breakdown` blocks
+    (tracing.BreakdownAccumulator.summary() dicts) into one aggregate:
+    counts, per-component seconds and cumulative histogram rows all sum;
+    shares recompute against the summed end-to-end latency. Empty input
+    (or blocks from systems with no completions) rolls up to a valid
+    all-zero block, and — like the cache/control rollups — output blocks
+    feed back in as input, so pool -> cell -> fleet is the same helper
+    applied twice."""
+    out = {"count": 0, "end_to_end_s": 0.0, "component_sum_s": 0.0,
+           "components": {}, "histogram_buckets_s": None, "histograms": {}}
+    for block in breakdowns:
+        if not block:
+            continue
+        out["count"] += block.get("count", 0)
+        out["end_to_end_s"] += block.get("end_to_end_s", 0.0)
+        out["component_sum_s"] += block.get("component_sum_s", 0.0)
+        for name, v in block.get("components", {}).items():
+            out["components"][name] = out["components"].get(name, 0.0) + v
+        buckets = block.get("histogram_buckets_s")
+        if buckets is not None:
+            if out["histogram_buckets_s"] is None:
+                out["histogram_buckets_s"] = list(buckets)
+            elif list(buckets) != out["histogram_buckets_s"]:
+                raise ValueError(
+                    "latency_breakdown blocks disagree on histogram buckets: "
+                    f"{buckets} vs {out['histogram_buckets_s']}")
+        for name, counts in block.get("histograms", {}).items():
+            have = out["histograms"].get(name)
+            if have is None:
+                out["histograms"][name] = list(counts)
+            else:
+                for i, c in enumerate(counts):
+                    have[i] += c
+    denom = out["end_to_end_s"] if out["end_to_end_s"] > 0 else 1.0
+    out["shares"] = {n: v / denom for n, v in out["components"].items()}
+    return out
+
+
 def federated_rollup(cells: Dict[str, Dict]) -> Dict[str, int]:
     """Sum per-cell summaries (each a ServingSystem.summary() dict plus a
     "spill" sub-dict) into fleet-wide counters. Latency percentiles do NOT
@@ -217,6 +262,8 @@ def federated_rollup(cells: Dict[str, Dict]) -> Dict[str, int]:
         "completed_in_horizon": 0, "final_replicas": 0,
         "spilled_out": 0, "spilled_in": 0, "cascade_out": 0, "cascade_in": 0,
     }
+    dropped = 0
+    dropped_kinds: Dict[str, int] = {}
     for summary in cells.values():
         for key in ("arrived", "completed", "rejected", "in_queue",
                     "completed_in_horizon", "final_replicas"):
@@ -224,13 +271,27 @@ def federated_rollup(cells: Dict[str, Dict]) -> Dict[str, int]:
         spill = summary.get("spill", {})
         for key in ("spilled_out", "spilled_in", "cascade_out", "cascade_in"):
             out[key] += spill.get(key, 0)
+        # federated cells share ONE EventLoop, so each cell reports the
+        # same loop-global drop counters — merge by max, never sum
+        # (summing would multiply the drops by the cell count)
+        dropped = max(dropped, summary.get("dropped_events", 0))
+        for kind, n in (summary.get("dropped_kinds") or {}).items():
+            dropped_kinds[kind] = max(dropped_kinds.get(kind, 0), n)
+    out["dropped_events"] = dropped
+    out["dropped_kinds"] = dropped_kinds
     out["cache"] = fleet_cache_rollup(
         s.get("cache", {}) for s in cells.values()
     )
+    # shard staleness must survive above the cell level even when a
+    # consumer drops the cache block: mirror it at the top of the rollup
+    out["staleness"] = out["cache"]["staleness"]
     # per-cell control planes roll up through the same helper (cells
     # adapt independently; sample weighting keeps the fleet mean honest)
     out["control"] = fleet_control_rollup(
         s.get("control", {}) for s in cells.values()
+    )
+    out["latency_breakdown"] = fleet_breakdown_rollup(
+        s.get("latency_breakdown") for s in cells.values()
     )
     return out
 
@@ -309,3 +370,163 @@ class SLOMonitor:
             "completed": self.completed,
             "attainment": self.attainment(),
         }
+
+
+class MetricsRegistry:
+    """Prometheus text exposition over a finished run's summary dict.
+
+    `MetricsRegistry.from_summary(summary)` accepts either a
+    `FederatedSystem.summary()` (has "cells") or a
+    `ServingSystem.summary()` (has "pools") and registers the conserved
+    counters (arrived/completed/rejected/in-flight/spill legs — the same
+    numbers `federated_rollup` sums, fleet-wide AND per cell), the
+    cache/shard tallies including `staleness`, the control-plane
+    corrections per platform class, the event loop's
+    `dropped_events`/`dropped_kinds`, and the latency-breakdown
+    component sums + histograms from the `latency_breakdown` blocks.
+    `to_prometheus_text()` renders the standard `# HELP`/`# TYPE` +
+    labeled-sample exposition format. Purely read-only over the summary:
+    building a registry never mutates a running system."""
+
+    def __init__(self, namespace: str = "repro_serving"):
+        self.namespace = namespace
+        # name -> (type, help, [(labels dict, value)]) in insertion order
+        self._metrics: Dict[str, Tuple[str, str, List[Tuple[Dict, float]]]] = {}
+
+    def add(self, name: str, kind: str, help_: str, value: float,
+            **labels) -> None:
+        full = f"{self.namespace}_{name}"
+        if full not in self._metrics:
+            self._metrics[full] = (kind, help_, [])
+        self._metrics[full][2].append((labels, value))
+
+    # ---- construction from summaries ----
+    @classmethod
+    def from_summary(cls, summary: Dict,
+                     namespace: str = "repro_serving") -> "MetricsRegistry":
+        reg = cls(namespace)
+        if "cells" in summary:
+            reg._add_scope(summary, scope="fleet")
+            for name, cell in summary["cells"].items():
+                reg._add_scope(cell, scope="cell", cell=name)
+        else:
+            reg._add_scope(summary, scope="system")
+        return reg
+
+    def _add_scope(self, s: Dict, **labels) -> None:
+        conserved = (
+            ("arrived", "requests offered to this scope"),
+            ("injected", "requests injected fleet-wide"),
+            ("completed", "requests fully served"),
+            ("rejected", "requests shed by admission"),
+            ("in_queue", "requests still queued at summary time"),
+            ("in_flight", "requests queued or in inter-cell transit"),
+            ("in_transit", "requests paying an inter-cell RTT"),
+            ("completed_in_horizon", "completions inside the horizon"),
+            ("spilled", "requests spilled out of their entry cell"),
+            ("spilled_in", "spilled requests served for a remote home"),
+            ("cascade_spilled", "cascade stages handed to a remote cell"),
+            ("dropped_events", "loop events that fired with no handler"),
+        )
+        for key, help_ in conserved:
+            if key in s:
+                self.add(f"{key}_total", "counter", help_, s[key], **labels)
+        for kind, n in (s.get("dropped_kinds") or {}).items():
+            self.add("dropped_events_by_kind_total", "counter",
+                     "unhandled loop events by event kind", n,
+                     kind=kind, **labels)
+        spill = s.get("spill") or {}
+        for key in ("spilled_out", "spilled_in", "cascade_out", "cascade_in"):
+            if key in spill:
+                self.add(f"spill_{key}_total", "counter",
+                         "per-cell spill attribution", spill[key], **labels)
+        for key, help_ in (("p50", "full-run median latency (seconds)"),
+                           ("p99", "full-run p99 latency (seconds)"),
+                           ("mean_latency", "full-run mean latency (seconds)"),
+                           ("slo_attainment", "fraction completed inside SLO"),
+                           ("throughput", "in-horizon completions per second"),
+                           ("final_replicas", "replicas at summary time")):
+            if key in s:
+                self.add(key, "gauge", help_, s[key], **labels)
+        cache = s.get("cache") or {}
+        for key in ("hits", "misses", "evictions", "result_hits",
+                    "staleness", "invalidated", "l2_hits", "l2_misses",
+                    "local_fetches", "remote_fetches"):
+            if key in cache:
+                self.add(f"cache_{key}_total", "counter",
+                         "embedding cache / shard tier tallies",
+                         cache[key], **labels)
+        if "transit_s" in cache:
+            self.add("shard_transit_seconds_total", "counter",
+                     "inter-cell RTT paid by remote shard fetches",
+                     cache["transit_s"], **labels)
+        control = s.get("control") or {}
+        if "samples" in control:
+            self.add("control_samples_total", "counter",
+                     "online latency-model observations", control["samples"],
+                     **labels)
+        for plat, d in (control.get("by_platform") or {}).items():
+            self.add("control_latency_correction", "gauge",
+                     "learned dense-latency correction (1.0 = calibrated)",
+                     d.get("mean_latency_correction", 1.0),
+                     platform=plat, **labels)
+            self.add("control_fetch_correction", "gauge",
+                     "learned embed-fetch correction (1.0 = calibrated)",
+                     d.get("mean_fetch_correction", 1.0),
+                     platform=plat, **labels)
+        self._add_breakdown(s.get("latency_breakdown") or {}, **labels)
+
+    def _add_breakdown(self, block: Dict, **labels) -> None:
+        if not block:
+            return
+        self.add("latency_breakdown_requests_total", "counter",
+                 "requests decomposed into latency components",
+                 block.get("count", 0), **labels)
+        self.add("latency_end_to_end_seconds_total", "counter",
+                 "summed end-to-end latency of decomposed requests",
+                 block.get("end_to_end_s", 0.0), **labels)
+        for name, v in (block.get("components") or {}).items():
+            self.add("latency_component_seconds_total", "counter",
+                     "summed per-component latency attribution",
+                     v, component=name, **labels)
+        buckets = block.get("histogram_buckets_s")
+        for name, cum in (block.get("histograms") or {}).items():
+            if buckets is None:
+                break
+            for edge, c in zip(list(buckets) + ["+Inf"], cum):
+                le = edge if isinstance(edge, str) else repr(float(edge))
+                self.add("latency_component_seconds_bucket", "histogram",
+                         "per-component latency distribution (cumulative)",
+                         c, component=name, le=le, **labels)
+
+    # ---- rendering ----
+    @staticmethod
+    def _fmt_value(v: float) -> str:
+        if isinstance(v, bool):
+            return str(int(v))
+        if isinstance(v, int):
+            return str(v)
+        f = float(v)
+        return str(int(f)) if f.is_integer() and abs(f) < 1e15 else repr(f)
+
+    @staticmethod
+    def _fmt_label(v) -> str:
+        s = str(v).replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+        return f'"{s}"'
+
+    def to_prometheus_text(self) -> str:
+        """The text exposition format scrapers ingest: `# HELP`/`# TYPE`
+        headers once per metric, then one labeled sample per line."""
+        lines: List[str] = []
+        for name, (kind, help_, samples) in self._metrics.items():
+            lines.append(f"# HELP {name} {help_}")
+            lines.append(f"# TYPE {name} {kind}")
+            for labels, value in samples:
+                if labels:
+                    inner = ",".join(
+                        f"{k}={self._fmt_label(v)}" for k, v in labels.items()
+                    )
+                    lines.append(f"{name}{{{inner}}} {self._fmt_value(value)}")
+                else:
+                    lines.append(f"{name} {self._fmt_value(value)}")
+        return "\n".join(lines) + "\n"

@@ -104,6 +104,9 @@ from repro.core.serving.metrics import SLOMonitor, TraceBuffer
 from repro.core.serving.rate_limiter import HybridRateLimiter, TierPolicy
 from repro.core.serving.replica import MissProfile, Replica, ReplicaSpec
 from repro.core.serving.shard import EmbeddingShardService
+from repro.core.serving.tracing import (
+    BreakdownAccumulator, Tracer, service_phases,
+)
 
 
 @dataclasses.dataclass
@@ -177,6 +180,7 @@ class ReplicaPool:
         l2_cache: Optional[EmbeddingCache] = None,
         shard: Optional[EmbeddingShardService] = None,
         cell: str = "",
+        tracer: Optional[Tracer] = None,
     ):
         self.name = name
         # events are keyed by event_key, not name: a federation runs several
@@ -232,6 +236,12 @@ class ReplicaPool:
         # routers' predicted miss cost for a prospective batch, learned
         # from dispatched traffic and able to FORGET an old traffic mix
         self._rows_per_item = Ewma(ewma_alpha)
+        # latency attribution (serving/tracing.py): the always-on stage
+        # breakdown — every completion decomposes against its enqueue time,
+        # so breakdown.count tracks monitor.completed — and the OPTIONAL
+        # sampling tracer, which only observes (no summary reads it)
+        self.breakdown = BreakdownAccumulator()
+        self.tracer = tracer
 
         if budget is not None and budget.acquire(cfg.n_replicas) < cfg.n_replicas:
             raise ValueError(
@@ -334,6 +344,10 @@ class ReplicaPool:
             req.stamp("start", now)
             req.stamp("done", now)
             self.monitor.record(now, 0.0)
+            # a cached repeat is a completion too: all-zero components,
+            # so breakdown.count keeps tracking monitor.completed
+            self.breakdown.observe(req, now, t_origin=req.t_enqueue,
+                                   stages=[req.stage])
             self.on_complete(now, req, self)
             return True
         if (
@@ -425,8 +439,31 @@ class ReplicaPool:
         if items > 0:
             self._rows_per_item.update(id_rows / items)
         start, done = rep.start_batch(now, items, miss_rows)
+        # service-phase boundaries for attribution/tracing: cumulative
+        # stamps in the order service_time charges the clock (dense ->
+        # local fetch -> remote fetch -> shard transit), clamped at the
+        # batch's done so float dust from re-deriving the phases never
+        # pushes a boundary past the completion stamp. Zero phases stamp
+        # nothing (decompose falls back to the previous boundary).
+        bounds = []
+        t = start
+        for key, dur in zip(
+            ("compute_done", "fetch_local_done",
+             "fetch_remote_done", "service_done"),
+            service_phases(self.spec, items, miss_rows),
+        ):
+            if dur > 0.0:
+                t = min(t + dur, done)
+                bounds.append((key, t))
         for r in take:
+            r.stamp("dispatch", now)
             r.stamp("start", start)
+            for key, bt in bounds:
+                r.stamp(key, bt)
+        if self.tracer is not None and any(
+                self.tracer.sampled(r.rid) for r in take):
+            self.tracer.record_batch(self.cell, self.name, rep.rid,
+                                     start, done, items, len(take))
         # the payload carries the batch observation (items, miss rows,
         # service start) so batch_done can feed the online latency model
         # the MEASURED service time without re-deriving the batch shape
@@ -460,6 +497,13 @@ class ReplicaPool:
         for r in take:
             r.stamp("done", now)
             self.monitor.record(now, now - r.t_enqueue)
+            # stage-local attribution: the same decomposition the engine
+            # applies end-to-end, with this stage's enqueue as origin —
+            # the component sum reproduces the monitor's latency bit-exactly
+            self.breakdown.observe(r, now, t_origin=r.t_enqueue,
+                                   stages=[r.stage])
+            if self.tracer is not None and self.tracer.sampled(r.rid):
+                self.tracer.record_stage(r, self.cell, self.name, now)
             if self.result_cache is not None and r.stage == 0 and r.ids is not None:
                 # freshly computed scores become servable repeats
                 self.result_cache.put(now, (r.ids, r.cost))
@@ -574,5 +618,6 @@ class ReplicaPool:
             "served_items": sum(r.served for r in self._registry.values()),
             "cache": self.cache_summary(),
             "control": self.control_summary(),
+            "latency_breakdown": self.breakdown.summary(),
             "trace": self.trace.as_dict(),
         }

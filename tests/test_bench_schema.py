@@ -10,7 +10,9 @@ import pytest
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
-from benchmarks.common import BENCH_SCHEMA_VERSION, bench_payload  # noqa: E402
+from benchmarks.common import (  # noqa: E402
+    BENCH_SCHEMA_VERSION, BREAKDOWN_ROW_KEYS, bench_payload,
+)
 
 
 def test_bench_payload_stamps_schema_and_passes_rows_through():
@@ -36,6 +38,24 @@ def test_bench_payload_rejects_incomplete_rows():
         bench_payload("serving", [("tuple", "row")], smoke=True)
     # no required keys declared -> any dict row is acceptable
     assert bench_payload("x", [{}], smoke=False)["rows"] == [{}]
+
+
+def test_bench_payload_carries_validated_breakdown_rows():
+    """Schema v2: the optional breakdown block (latency-attribution
+    waterfall rows) is validated against BREAKDOWN_ROW_KEYS, absent when
+    not provided, and passed through untouched when well-formed."""
+    assert BENCH_SCHEMA_VERSION >= 2
+    wf = [{"label": "size_aware", "component": "queue_wait",
+           "seconds": 1.5, "share": 0.4, "mean_ms": 0.7}]
+    out = bench_payload("serving", [], smoke=True, breakdown=wf)
+    assert out["breakdown"] == wf  # extra per-row keys survive untouched
+    assert "breakdown" not in bench_payload("serving", [], smoke=True)
+    with pytest.raises(ValueError, match=r"breakdown row 0 is missing.*share"):
+        bench_payload("serving", [], smoke=True,
+                      breakdown=[{"label": "x", "component": "queue_wait",
+                                  "seconds": 1.0}])
+    with pytest.raises(TypeError, match="breakdown row 0 is not a dict"):
+        bench_payload("serving", [], smoke=True, breakdown=[("bad",)])
 
 
 def test_common_imports_without_jax():

@@ -472,3 +472,29 @@ def test_tracebuffer_roundtrip_types_and_growth():
     assert buf.column("n").max() == 99
     with pytest.raises(ValueError):
         buf.append(1.0)  # arity is checked
+
+
+def test_tracebuffer_column_survives_growth():
+    """column() returns a snapshot COPY, not a live view. The old
+    contract handed out a numpy view that silently detached at the next
+    amortised-doubling growth — a caller holding it across appends kept
+    reading the pre-growth buffer with no error. Pin the fix exactly at
+    the growth boundary (initial capacity is 16)."""
+    import numpy as np
+
+    buf = TraceBuffer([("n", np.int64)])
+    for i in range(16):  # fill to exactly the initial capacity
+        buf.append(i)
+    held = buf.column("n")
+    assert held.tolist() == list(range(16))
+    buf.append(16)  # triggers the doubling reallocation
+    # the held snapshot is immutable history, not a window into the
+    # abandoned old buffer...
+    assert held.tolist() == list(range(16))
+    # ...and is genuinely detached: writing through it cannot corrupt
+    # the buffer, and fresh reads see all rows
+    held[0] = 999
+    assert buf.column("n").tolist() == list(range(17))
+    assert buf.as_dict()["n"] == list(range(17))
+    # a snapshot taken after growth reflects post-growth contents
+    assert buf.column("n")[16] == 16

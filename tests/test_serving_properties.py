@@ -14,7 +14,15 @@ every run:
                    t_arrive <= s*_enqueue <= s*_start <= s*_done
 
 plus bit-exact determinism: the same fleet + seed replayed from scratch
-produces the identical summary.
+produces the identical summary, and two observability contracts from the
+tracing layer:
+
+    attribution    every completed request's latency decomposes into
+                   named components whose left-to-right sum equals the
+                   end-to-end latency bit-exactly (closure term, not
+                   estimate)
+    transparency   attaching a sampling Tracer leaves the run's summary
+                   bit-identical — observation never perturbs replay
 
 The suite auto-skips when hypothesis is absent (optional [test] extra,
 same pattern as test_gnn.py); settings are derandomized so CI failures
@@ -37,6 +45,7 @@ from repro.core.serving.pool import PoolConfig
 from repro.core.serving.rate_limiter import TierPolicy
 from repro.core.serving.replica import LatencyModel, ReplicaSpec
 from repro.core.serving.router import ROUTERS, make_router
+from repro.core.serving.tracing import COMPONENTS, Tracer, decompose
 from repro.data.synthetic import bimodal_cost_mix
 
 # one run per example keeps the whole suite inside a few seconds while
@@ -87,7 +96,7 @@ system_st = st.fixed_dictionaries({
 })
 
 
-def _build(fleet, sys_cfg):
+def _build(fleet, sys_cfg, tracer=None):
     pools = {}
     for i, p in enumerate(fleet):
         pools[f"p{i}_{p['platform']}"] = PoolSpec(
@@ -105,7 +114,7 @@ def _build(fleet, sys_cfg):
                  for t in ("tier0", "tier1")}
     return ServingSystem(
         pools, make_router(sys_cfg["router"]), tiers=tiers, slo_p99_s=0.1,
-        adaptive_shedding=sys_cfg["adaptive_shedding"])
+        adaptive_shedding=sys_cfg["adaptive_shedding"], tracer=tracer)
 
 
 def _arrivals(traffic):
@@ -276,3 +285,101 @@ def test_size_aware_class_affinity_property(traffic, threshold):
         n_large = sum(1 for r in arrivals if r.cost >= threshold)
         assert by_pool["acc"] == n_large
         assert by_pool["cpu"] == len(arrivals) - n_large
+
+
+@given(fleet=fleet_st, sys_cfg=system_st, traffic=traffic_st)
+@settings(max_examples=25, **COMMON)
+def test_breakdown_sums_to_latency_bit_exact(fleet, sys_cfg, traffic):
+    """The attribution invariant, fuzzed: for EVERY completed request in
+    any fleet the per-request component decomposition, summed left to
+    right in COMPONENTS order, reproduces the end-to-end latency with no
+    float error at all (== on binary64, not approx). The summary's
+    latency_breakdown must account for exactly the completed requests."""
+    arrivals = _arrivals(traffic)
+    sys_ = _build(fleet, sys_cfg)
+    res = sys_.run(arrivals, until=traffic["horizon"])
+    checked = 0
+    for r in arrivals:
+        done = r.timeline.get(f"s{r.stage}_done")
+        if done is None:
+            continue
+        comps = decompose(r, done)
+        assert set(comps) == set(COMPONENTS)
+        acc = 0.0
+        for name in COMPONENTS:
+            assert comps[name] >= 0.0 or name in ("transit", "closure")
+            acc += comps[name]
+        assert acc == done - r.t_arrive  # bit-exact, no tolerance
+        checked += 1
+    assert checked == res["completed"]
+    bd = res["latency_breakdown"]
+    assert bd["count"] == res["completed"]
+    assert set(bd["components"]) == set(COMPONENTS)
+    assert all(v >= 0.0 for k, v in bd["components"].items()
+               if k not in ("transit", "closure"))
+    if bd["count"]:
+        assert bd["end_to_end_s"] == pytest.approx(bd["component_sum_s"])
+
+
+@given(fleet=fleet_st, sys_cfg=system_st, traffic=traffic_st,
+       sample_every=st.sampled_from([1, 4, 32]))
+@settings(max_examples=15, **COMMON)
+def test_tracer_does_not_perturb_replay(fleet, sys_cfg, traffic,
+                                        sample_every):
+    """The transparency contract, fuzzed: the same fleet + seed run bare
+    and run under a sampling Tracer produce byte-identical summaries —
+    sampling density included, because tracer state must never leak into
+    system accounting. (json round-trip flattens tuples so the compare
+    is structural, not object-identity.)"""
+    import json
+
+    def once(tracer):
+        arr = _arrivals(traffic)
+        sys_ = _build(fleet, sys_cfg, tracer=tracer)
+        return sys_.run(arr, until=traffic["horizon"])
+
+    bare = once(None)
+    traced = once(Tracer(sample_every=sample_every, seed=traffic["seed"]))
+    assert json.dumps(bare, sort_keys=True, default=float) == \
+        json.dumps(traced, sort_keys=True, default=float)
+
+
+@given(fed_cfg=federation_st, traffic=traffic_st)
+@settings(max_examples=8, **COMMON)
+def test_federation_breakdown_and_tracer_transparency(fed_cfg, traffic):
+    """Both observability contracts one layer up, across cell policies
+    and spill on/off: the fleet latency_breakdown rollup accounts for
+    every completed request, and a Tracer on the federation leaves the
+    summary bit-identical."""
+    import json
+
+    def build():
+        cells = {}
+        for ci, c in enumerate(fed_cfg["cells"]):
+            pools = {
+                f"p{pi}_{plat}": PoolSpec(
+                    _spec(plat, variant=f"c{ci}v{pi}"),
+                    PoolConfig.for_platform(plat, n_replicas=c["n_replicas"],
+                                            autoscale=False))
+                for pi, plat in enumerate(c["platforms"])
+            }
+            cells[f"cell{ci}"] = CellSpec(pools=pools, slo_p99_s=0.1,
+                                          adaptive_shedding=False)
+        return cells
+
+    def once(tracer):
+        fed = FederatedSystem(build(), policy=fed_cfg["policy"],
+                              spillover=fed_cfg["spillover"], rtt_s=0.002,
+                              slo_p99_s=0.1, tracer=tracer)
+        arrivals = _arrivals(traffic)
+        rest = (1.0 - fed_cfg["hot_frac"]) / (len(fed.cells) - 1)
+        skew = {name: (fed_cfg["hot_frac"] if i == 0 else rest)
+                for i, name in enumerate(fed.cells)}
+        assign_homes(arrivals, skew, seed=traffic["seed"])
+        return fed.run(arrivals, until=traffic["horizon"])
+
+    bare = once(None)
+    assert bare["latency_breakdown"]["count"] == bare["completed"]
+    traced = once(Tracer(sample_every=4, seed=traffic["seed"]))
+    assert json.dumps(bare, sort_keys=True, default=float) == \
+        json.dumps(traced, sort_keys=True, default=float)

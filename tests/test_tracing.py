@@ -1,0 +1,349 @@
+"""Unit tests for the tracing/attribution layer (core/serving/tracing.py)
+and its metrics-side counterparts (fleet_breakdown_rollup,
+MetricsRegistry): the bit-exact decomposition closure, the deterministic
+pure-hash sampler, span recording + Chrome-trace export structure, the
+breakdown accumulator/rollup round trip, and the Prometheus exposition —
+including the dropped_events / dropped_kinds / staleness surfacing the
+federated rollup now guarantees."""
+import json
+import math
+
+import pytest
+
+from repro.core.serving.engine import (
+    PoolSpec, ServingSystem, attach_zipf_ids, poisson_arrivals,
+)
+from repro.core.serving.federation import (
+    CellSpec, FederatedSystem, assign_homes,
+)
+from repro.core.serving.metrics import (
+    MetricsRegistry, federated_rollup, fleet_breakdown_rollup,
+)
+from repro.core.serving.pool import PoolConfig, Request
+from repro.core.serving.replica import LatencyModel, MissProfile, ReplicaSpec
+from repro.core.serving.router import make_router
+from repro.core.serving.tracing import (
+    COMPONENTS, HISTOGRAM_BUCKETS_S, BreakdownAccumulator, Tracer,
+    decompose, service_phases, stage_components,
+)
+
+
+def _spec(name="m", base=0.004, per=1e-4):
+    return ReplicaSpec(name, LatencyModel.analytic(base, per),
+                       embed_fetch_s=1e-5)
+
+
+def _system(tracer=None, n_replicas=2):
+    pools = {
+        "main": PoolSpec(_spec(), PoolConfig(
+            max_batch=4, max_wait_s=0.002, n_replicas=n_replicas,
+            autoscale=False)),
+    }
+    return ServingSystem(pools, make_router("least_loaded"), slo_p99_s=0.1,
+                         adaptive_shedding=False, tracer=tracer)
+
+
+def _run(tracer=None, rate=300.0, horizon=1.0, seed=3):
+    arr = poisson_arrivals(lambda t: rate, horizon, seed=seed)
+    sys_ = _system(tracer)
+    res = sys_.run(arr, until=horizon)
+    return arr, res
+
+
+# ---------------------------------------------------------------------------
+# decomposition
+# ---------------------------------------------------------------------------
+
+def _synthetic_request(**stamps):
+    req = Request(rid=1, t_arrive=stamps.pop("t_arrive", 0.0), tier="tier0")
+    for k, v in stamps.items():
+        req.timeline[f"s0_{k}"] = v
+    return req
+
+
+def test_decompose_reads_every_stamp():
+    req = _synthetic_request(
+        t_arrive=0.0, enqueue=0.001, dispatch=0.004, start=0.005,
+        compute_done=0.009, fetch_local_done=0.010,
+        fetch_remote_done=0.012, service_done=0.014)
+    comps = decompose(req, 0.014)
+    assert comps["queue_wait"] == pytest.approx(0.003)
+    assert comps["replica_wait"] == pytest.approx(0.001)
+    assert comps["dense_compute"] == pytest.approx(0.004)
+    assert comps["embed_fetch_local"] == pytest.approx(0.001)
+    assert comps["embed_fetch_remote"] == pytest.approx(0.002)
+    assert comps["shard_transit"] == pytest.approx(0.002)
+    # the 1 ms before enqueue is inter-stage transit (front-door hop)
+    assert comps["transit"] == pytest.approx(0.001)
+
+
+def test_decompose_closure_is_bit_exact_on_adversarial_floats():
+    """The two-term closure must land EXACTLY on `done - t_origin` even
+    for stamp patterns chosen to stress round-ties-to-even (the regime
+    where a single residual term provably cannot close the sum)."""
+    import random
+    rng = random.Random(0xC0FFEE)
+    for _ in range(2000):
+        t = sorted(rng.uniform(0.0, 10.0) for _ in range(8))
+        req = _synthetic_request(
+            t_arrive=t[0], enqueue=t[1], dispatch=t[2], start=t[3],
+            compute_done=t[4], fetch_local_done=t[5],
+            fetch_remote_done=t[6], service_done=t[7])
+        done = t[7]
+        comps = decompose(req, done)
+        acc = 0.0
+        for name in COMPONENTS:
+            acc += comps[name]
+        assert acc == done - t[0]  # no tolerance: IEEE-754 equality
+        assert abs(comps["closure"]) <= 4 * math.ulp(done - t[0] or 1.0)
+
+
+def test_decompose_fast_path_is_all_transit():
+    # a result-cache hit stamps only enqueue/start/done: every modelled
+    # component is zero and the whole latency lands in the residual
+    req = _synthetic_request(t_arrive=0.0, enqueue=0.002, start=0.002)
+    comps = decompose(req, 0.002)
+    assert comps["transit"] + comps["closure"] == 0.002
+    for name in COMPONENTS[:-2]:
+        assert comps[name] == 0.0
+
+
+def test_decompose_stage_restriction():
+    """A pool's stage-local view (stages=[k], t_origin=t_enqueue) must
+    not double-count upstream stages against the stage-local total."""
+    req = Request(rid=7, t_arrive=0.0, tier="tier0", stage=2)
+    req.timeline.update({
+        "s1_enqueue": 0.001, "s1_start": 0.002, "s1_dispatch": 0.002,
+        "s1_service_done": 0.004, "s1_done": 0.004,
+        "s2_enqueue": 0.005, "s2_dispatch": 0.006, "s2_start": 0.006,
+        "s2_service_done": 0.009, "s2_done": 0.009,
+    })
+    local = decompose(req, 0.009, t_origin=0.005, stages=[2])
+    acc = 0.0
+    for name in COMPONENTS:
+        acc += local[name]
+    assert acc == 0.009 - 0.005
+    assert local["queue_wait"] == pytest.approx(0.001)
+    full = decompose(req, 0.009)  # default: full path, origin t_arrive
+    acc = 0.0
+    for name in COMPONENTS:
+        acc += full[name]
+    assert acc == 0.009
+    assert full["queue_wait"] == pytest.approx(0.002)  # both stages
+
+
+def test_service_phases_splits_miss_profile():
+    spec = _spec(base=0.004, per=0.0)
+    dense, local, remote, transit = service_phases(
+        spec, 8, MissProfile(l2_hits=1, local_rows=3, remote_rows=2,
+                             transit_s=0.0015))
+    assert dense == pytest.approx(0.004)
+    assert local == pytest.approx(3e-5)
+    assert remote == pytest.approx(2e-5)
+    assert transit == pytest.approx(0.0015)
+    # plain int miss_rows (no shard service): everything is local
+    dense, local, remote, transit = service_phases(spec, 8, 4)
+    assert (local, remote, transit) == (pytest.approx(4e-5), 0.0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# accumulator + rollup
+# ---------------------------------------------------------------------------
+
+def test_breakdown_accumulator_summary_shape():
+    acc = BreakdownAccumulator()
+    req = _synthetic_request(t_arrive=0.0, enqueue=0.0, dispatch=0.001,
+                             start=0.001, service_done=0.005)
+    acc.observe(req, 0.005)
+    s = acc.summary()
+    assert s["count"] == 1
+    assert s["end_to_end_s"] == pytest.approx(0.005)
+    assert set(s["components"]) == set(COMPONENTS)
+    assert sum(s["shares"].values()) == pytest.approx(1.0)
+    assert s["histogram_buckets_s"] == list(HISTOGRAM_BUCKETS_S)
+    for name in COMPONENTS:
+        hist = s["histograms"][name]
+        assert len(hist) == len(HISTOGRAM_BUCKETS_S) + 1
+        assert hist == sorted(hist)  # cumulative, le-style
+        assert hist[-1] == s["count"]
+
+
+def test_fleet_breakdown_rollup_round_trips():
+    a, b = BreakdownAccumulator(), BreakdownAccumulator()
+    req = _synthetic_request(t_arrive=0.0, enqueue=0.0, dispatch=0.002,
+                             start=0.002, service_done=0.01)
+    a.observe(req, 0.01)
+    b.observe(req, 0.01)
+    b.observe(req, 0.01)
+    merged = fleet_breakdown_rollup([a.summary(), b.summary()])
+    assert merged["count"] == 3
+    assert merged["end_to_end_s"] == pytest.approx(0.03)
+    for name in COMPONENTS:
+        assert merged["components"][name] == pytest.approx(
+            a.summary()["components"][name] * 3)
+        assert merged["histograms"][name][-1] == 3
+    # empty/falsy blocks are skipped, not fatal
+    assert fleet_breakdown_rollup([None, a.summary()])["count"] == 1
+    bad = a.summary()
+    bad["histogram_buckets_s"] = [1.0, 2.0]
+    with pytest.raises(ValueError):
+        fleet_breakdown_rollup([b.summary(), bad])
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+def test_sampler_is_deterministic_and_dense_at_one():
+    tr = Tracer(sample_every=4, seed=9)
+    picks = [tr.sampled(rid) for rid in range(4000)]
+    assert picks == [tr.sampled(rid) for rid in range(4000)]
+    frac = sum(picks) / len(picks)
+    assert 0.15 < frac < 0.35  # ~1/4, hash-spread
+    assert all(Tracer(sample_every=1).sampled(r) for r in range(100))
+    # different seeds pick different subsets
+    other = [Tracer(sample_every=4, seed=10).sampled(r) for r in range(4000)]
+    assert other != picks
+    with pytest.raises(ValueError):
+        Tracer(sample_every=0)
+
+
+def test_tracer_caps_spans_and_counts_drops():
+    tr = Tracer(sample_every=1, max_spans=5)
+    for i in range(9):
+        tr.record_batch("", "main", 0, float(i), float(i) + 0.5, 4, 2)
+    assert len(tr) == 5
+    assert tr.dropped_spans == 4
+    assert tr.summary()["dropped_spans"] == 4
+    assert tr.to_chrome_trace()["metadata"]["dropped_spans"] == 4
+
+
+def test_chrome_trace_structure():
+    tr = Tracer(sample_every=1, seed=0)
+    arr, res = _run(tracer=tr)
+    assert res["completed"] > 0 and len(tr) > 0
+    doc = tr.to_chrome_trace()
+    events = doc["traceEvents"]
+    meta = [e for e in events if e["ph"] == "M"]
+    spans = [e for e in events if e["ph"] != "M"]
+    # every (pid, tid) used by a span is named by metadata
+    named_pids = {e["pid"] for e in meta if e["name"] == "process_name"}
+    named_tids = {(e["pid"], e["tid"])
+                  for e in meta if e["name"] == "thread_name"}
+    for e in spans:
+        assert e["pid"] in named_pids
+        assert (e["pid"], e["tid"]) in named_tids
+    # globally non-decreasing timestamps
+    ts = [e["ts"] for e in spans]
+    assert ts == sorted(ts)
+    # sync B/E balance per (pid, tid); async b/e balance per (cat, id, name)
+    depth = {}
+    for e in spans:
+        if e["ph"] == "B":
+            depth[(e["pid"], e["tid"])] = depth.get((e["pid"], e["tid"]), 0) + 1
+        elif e["ph"] == "E":
+            key = (e["pid"], e["tid"])
+            depth[key] = depth.get(key, 0) - 1
+            assert depth[key] >= 0
+    assert all(v == 0 for v in depth.values())
+    async_open = {}
+    for e in spans:
+        if e["ph"] == "b":
+            async_open[(e["id"], e["name"])] = \
+                async_open.get((e["id"], e["name"]), 0) + 1
+        elif e["ph"] == "e":
+            async_open[(e["id"], e["name"])] = \
+                async_open.get((e["id"], e["name"]), 0) - 1
+    assert all(v == 0 for v in async_open.values())
+    # the whole document is JSON-serializable as-is (what --trace-out does)
+    json.dumps(doc)
+
+
+def test_tracer_only_records_sampled_requests():
+    tr = Tracer(sample_every=16, seed=2)
+    arr, res = _run(tracer=tr)
+    cols = tr._spans.as_dict()
+    from repro.core.serving.tracing import _SPAN_KINDS
+    for kind_id, rid in zip(cols["kind"], cols["rid"]):
+        if _SPAN_KINDS[kind_id] != "batch":  # batch rid column = n_requests
+            assert tr.sampled(rid)
+
+
+# ---------------------------------------------------------------------------
+# prometheus exposition
+# ---------------------------------------------------------------------------
+
+def _federation(tracer=None):
+    def cell():
+        return CellSpec(pools={"main": PoolSpec(_spec(), PoolConfig(
+            max_batch=4, max_wait_s=0.002, n_replicas=2, autoscale=False))},
+            slo_p99_s=0.1, adaptive_shedding=False)
+    return FederatedSystem({"a": cell(), "b": cell()},
+                           policy="least_loaded", rtt_s=0.002,
+                           slo_p99_s=0.1, tracer=tracer)
+
+
+def test_federated_rollup_surfaces_drops_and_staleness():
+    fed = _federation()
+    arr = poisson_arrivals(lambda t: 200.0, 1.0, seed=11)
+    attach_zipf_ids(arr, 1000, 4, seed=1)
+    assign_homes(arr, {"a": 0.6, "b": 0.4}, seed=2)
+    res = fed.run(arr, until=1.0)
+    rollup = federated_rollup(res["cells"])
+    assert "dropped_events" in rollup and rollup["dropped_events"] >= 0
+    assert isinstance(rollup["dropped_kinds"], dict)
+    assert "staleness" in rollup
+    assert rollup["staleness"] == rollup["cache"]["staleness"]
+    assert rollup["latency_breakdown"]["count"] == rollup["completed"]
+    # cells share one event loop: drops must merge by max, never sum
+    per_cell = [c.get("dropped_events", 0) for c in res["cells"].values()]
+    assert rollup["dropped_events"] == max(per_cell)
+
+
+def test_prometheus_text_exposes_conserved_counters():
+    fed = _federation()
+    arr = poisson_arrivals(lambda t: 200.0, 1.0, seed=11)
+    attach_zipf_ids(arr, 1000, 4, seed=1)
+    assign_homes(arr, {"a": 0.6, "b": 0.4}, seed=2)
+    res = fed.run(arr, until=1.0)
+    text = MetricsRegistry.from_summary(res).to_prometheus_text()
+    assert text.endswith("\n")
+    # conserved counters surface at fleet scope AND per cell
+    for metric in ("completed_total", "rejected_total", "dropped_events_total",
+                   "cache_staleness_total"):
+        assert f'repro_serving_{metric}{{scope="fleet"}}' in text
+        assert f'scope="cell",cell="a"' in text
+    # breakdown series: per-component sums + le-bucketed histograms
+    assert 'latency_component_seconds_total{component="queue_wait",scope="fleet"}' in text
+    assert 'le="+Inf"' in text
+    # exposition-format sanity: every non-comment line is "name{...} value"
+    for line in text.splitlines():
+        if line.startswith("#") or not line:
+            continue
+        name_part, _, value = line.rpartition(" ")
+        float(value)
+        assert name_part.startswith("repro_serving_")
+    # the counters must MATCH the rollup (the acceptance criterion)
+    rollup = federated_rollup(res["cells"])
+    line = next(l for l in text.splitlines()
+                if l.startswith('repro_serving_completed_total{scope="fleet"}'))
+    assert int(line.split()[-1]) == rollup["completed"] == res["completed"]
+
+
+def test_prometheus_system_scope_from_plain_summary():
+    _, res = _run()
+    text = MetricsRegistry.from_summary(res).to_prometheus_text()
+    assert 'repro_serving_completed_total{scope="system"}' in text
+    assert int(next(
+        l for l in text.splitlines()
+        if l.startswith('repro_serving_completed_total{scope="system"}')
+    ).split()[-1]) == res["completed"]
+
+
+def test_prometheus_label_escaping():
+    reg = MetricsRegistry()
+    reg.add("weird", "gauge", "odd labels", 1.0,
+            label='a"b\\c\nd')
+    text = reg.to_prometheus_text()
+    assert '\\"' in text and "\\\\" in text and "\\n" in text
+    assert "\nd" not in text.replace("\\n", "")

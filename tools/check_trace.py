@@ -1,0 +1,121 @@
+"""Chrome-trace artifact validator (run by the CI docs job on the trace
+the docs/observability.md runnable block writes, and usable against any
+`bench_serving --trace-out` artifact):
+
+  1. the document parses and carries a `traceEvents` array;
+  2. non-metadata events have globally non-decreasing timestamps;
+  3. synchronous B/E pairs balance per (pid, tid) as a LIFO stack and
+     names match on close (nesting is well-formed, nothing dangles);
+  4. async "b"/"e" pairs balance per (cat, id, name);
+  5. every (pid, tid) a span uses is named by "M" metadata events
+     (process_name for the pid, thread_name for the pid+tid) — what
+     makes the trace readable, not just loadable, in Perfetto.
+
+Run it the same way CI does:
+
+    python tools/check_trace.py PATH/to/trace.json
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+
+def check_trace(doc) -> list:
+    errors = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return ["document has no traceEvents array"]
+    named_pids, named_tids = set(), set()
+    for ev in events:
+        if ev.get("ph") != "M":
+            continue
+        if ev.get("name") == "process_name":
+            named_pids.add(ev["pid"])
+        elif ev.get("name") == "thread_name":
+            named_tids.add((ev["pid"], ev["tid"]))
+    spans = [ev for ev in events if ev.get("ph") != "M"]
+    last_ts = None
+    stacks = {}  # (pid, tid) -> [name, ...] for sync B/E
+    async_open = {}  # (cat, id, name) -> open count
+    for i, ev in enumerate(spans):
+        ph, ts = ev.get("ph"), ev.get("ts")
+        where = f"event {i} ({ph} {ev.get('name')!r})"
+        if ts is None or ts < 0:
+            errors.append(f"{where}: missing/negative ts")
+            continue
+        if last_ts is not None and ts < last_ts:
+            errors.append(f"{where}: ts {ts} < previous {last_ts}"
+                          " (not sorted)")
+        last_ts = ts
+        pid, tid = ev.get("pid"), ev.get("tid")
+        if pid not in named_pids:
+            errors.append(f"{where}: pid {pid} has no process_name metadata")
+        if (pid, tid) not in named_tids:
+            errors.append(f"{where}: tid {pid}/{tid} has no thread_name"
+                          " metadata")
+        if ph == "B":
+            stacks.setdefault((pid, tid), []).append(ev.get("name"))
+        elif ph == "E":
+            stack = stacks.get((pid, tid))
+            if not stack:
+                errors.append(f"{where}: E with empty stack on {pid}/{tid}")
+            elif ev.get("name") not in (None, stack[-1]):
+                errors.append(f"{where}: E {ev.get('name')!r} closes"
+                              f" B {stack.pop()!r} (mismatched nesting)")
+            else:
+                stack.pop()
+        elif ph in ("b", "e"):
+            key = (ev.get("cat"), ev.get("id"), ev.get("name"))
+            if None in key:
+                errors.append(f"{where}: async event missing cat/id/name")
+                continue
+            async_open[key] = async_open.get(key, 0) + (1 if ph == "b" else -1)
+            if async_open[key] < 0:
+                errors.append(f"{where}: async e before its b for {key}")
+        elif ph not in ("X", "i", "C"):  # other legal phases pass through
+            errors.append(f"{where}: unknown phase {ph!r}")
+    for key, stack in stacks.items():
+        if stack:
+            errors.append(f"track {key}: {len(stack)} unclosed B span(s):"
+                          f" {stack[:3]}")
+    dangling = {k: n for k, n in async_open.items() if n != 0}
+    if dangling:
+        errors.append(f"{len(dangling)} unbalanced async span key(s), e.g."
+                      f" {next(iter(dangling.items()))}")
+    if not spans:
+        errors.append("trace has metadata but zero spans")
+    return errors
+
+
+def main(argv=None) -> int:
+    args = sys.argv[1:] if argv is None else argv
+    if not args:
+        print("usage: check_trace.py TRACE.json [TRACE2.json ...]",
+              file=sys.stderr)
+        return 2
+    failed = False
+    for arg in args:
+        path = pathlib.Path(arg)
+        try:
+            doc = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as exc:
+            print(f"{path}: unreadable: {exc}", file=sys.stderr)
+            failed = True
+            continue
+        errors = check_trace(doc)
+        n = sum(1 for ev in doc["traceEvents"] if ev.get("ph") != "M") \
+            if isinstance(doc, dict) and isinstance(doc.get("traceEvents"),
+                                                    list) else 0
+        if errors:
+            print(f"{path}: {len(errors)} problem(s)", file=sys.stderr)
+            print("\n".join(errors[:20]), file=sys.stderr)
+            failed = True
+        else:
+            print(f"checked {path}: {n} span events OK")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
