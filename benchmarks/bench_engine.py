@@ -27,6 +27,8 @@ the floor is set low enough to survive noisy shared CI runners).
 so the kernel's own perf trajectory is tracked alongside
 BENCH_serving.json.
 """
+# simlint: disable=SL001  (benchmarks time REAL work: the wall
+# clock IS the measurement here, never the simulated clock)
 from __future__ import annotations
 
 import argparse

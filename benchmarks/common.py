@@ -6,6 +6,8 @@ jax and the model stack import INSIDE the functions that need them, so
 `from benchmarks.common import bench_payload` stays cheap — the event-
 kernel bench (bench_engine.py) must keep its worker subprocesses and its
 aggregation path free of jax for attributable RSS numbers."""
+# simlint: disable=SL001  (benchmarks time REAL work: the wall
+# clock IS the measurement here, never the simulated clock)
 from __future__ import annotations
 
 import dataclasses

@@ -5,6 +5,8 @@
 Prints each benchmark's own section plus a final ``name,us_per_call,derived``
 CSV summary across all of them.
 """
+# simlint: disable=SL001  (benchmarks time REAL work: the wall
+# clock IS the measurement here, never the simulated clock)
 from __future__ import annotations
 
 import argparse

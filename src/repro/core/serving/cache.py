@@ -66,7 +66,7 @@ class CachePolicyBase:
 
     name = "base"
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int) -> None:
         if capacity < 1:
             raise ValueError(f"cache capacity must be >= 1 row, got {capacity}")
         self.capacity = capacity
@@ -93,11 +93,11 @@ class LRUCache(CachePolicyBase):
 
     name = "lru"
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int) -> None:
         super().__init__(capacity)
         self._od: "OrderedDict[Hashable, None]" = OrderedDict()
 
-    def access(self, key):
+    def access(self, key: Hashable) -> bool:
         if key in self._od:
             self._od.move_to_end(key)
             return True
@@ -107,10 +107,10 @@ class LRUCache(CachePolicyBase):
         self._od[key] = None
         return False
 
-    def resident_keys(self):
+    def resident_keys(self) -> Tuple:
         return tuple(self._od)  # LRU -> MRU order
 
-    def __contains__(self, key):
+    def __contains__(self, key: Hashable) -> bool:
         return key in self._od
 
 
@@ -121,13 +121,13 @@ class LFUCache(CachePolicyBase):
 
     name = "lfu"
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int) -> None:
         super().__init__(capacity)
         self._freq: Dict[Hashable, Tuple[int, int]] = {}  # key -> (freq, seq)
         self._heap: list = []  # (freq, seq, key), lazily invalidated
         self._seq = itertools.count()
 
-    def _compact(self):
+    def _compact(self) -> None:
         # hot-heavy streams push a heap entry per HIT and stale ones only
         # leave at eviction time — rebuild before the heap outgrows a few
         # multiples of capacity so memory tracks capacity, not stream length
@@ -135,7 +135,7 @@ class LFUCache(CachePolicyBase):
             self._heap = [(f, s, k) for k, (f, s) in self._freq.items()]
             heapq.heapify(self._heap)
 
-    def access(self, key):
+    def access(self, key: Hashable) -> bool:
         if key in self._freq:
             freq, seq = self._freq[key]
             self._freq[key] = (freq + 1, seq)
@@ -155,11 +155,11 @@ class LFUCache(CachePolicyBase):
         self._compact()
         return False
 
-    def resident_keys(self):
+    def resident_keys(self) -> Tuple:
         # (freq asc, insertion seq asc): eviction order, coldest first
         return tuple(sorted(self._freq, key=self._freq.__getitem__))
 
-    def __contains__(self, key):
+    def __contains__(self, key: Hashable) -> bool:
         return key in self._freq
 
 
@@ -172,7 +172,7 @@ class S3FifoCache(CachePolicyBase):
 
     name = "s3fifo"
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int) -> None:
         super().__init__(capacity)
         if capacity < 2:
             # one row can't split into probationary + main tiers; letting
@@ -192,7 +192,7 @@ class S3FifoCache(CachePolicyBase):
         self._ghost_live: Dict[Hashable, int] = {}  # key -> live stamp
         self._stamp = itertools.count()
 
-    def _remember_ghost(self, key):
+    def _remember_ghost(self, key: Hashable) -> None:
         while len(self._ghost) >= self.capacity:
             gone, stamp = self._ghost.popleft()
             if self._ghost_live.get(gone) == stamp:
@@ -201,7 +201,7 @@ class S3FifoCache(CachePolicyBase):
         self._ghost.append((key, stamp))
         self._ghost_live[key] = stamp
 
-    def _evict_main(self):
+    def _evict_main(self) -> None:
         while True:
             victim = self._main.popleft()
             if self._freq.get(victim, 0) > 0:  # second chance
@@ -213,14 +213,14 @@ class S3FifoCache(CachePolicyBase):
             self.evictions += 1
             return
 
-    def _insert_main(self, key):
+    def _insert_main(self, key: Hashable) -> None:
         if len(self._main) >= self._main_cap:
             self._evict_main()
         self._main.append(key)
         self._where[key] = "main"
         self._freq[key] = 0
 
-    def _evict_small(self):
+    def _evict_small(self) -> None:
         victim = self._small.popleft()
         del self._where[victim]
         if self._freq.pop(victim, 0) > 0:
@@ -229,7 +229,7 @@ class S3FifoCache(CachePolicyBase):
             self._remember_ghost(victim)
             self.evictions += 1
 
-    def access(self, key):
+    def access(self, key: Hashable) -> bool:
         if key in self._where:
             self._freq[key] = min(self._freq.get(key, 0) + 1, 3)
             return True
@@ -244,10 +244,10 @@ class S3FifoCache(CachePolicyBase):
         self._freq[key] = 0
         return False
 
-    def resident_keys(self):
+    def resident_keys(self) -> Tuple:
         return tuple(self._small) + tuple(self._main)  # FIFO order per tier
 
-    def __contains__(self, key):
+    def __contains__(self, key: Hashable) -> bool:
         return key in self._where
 
 
@@ -307,7 +307,7 @@ class EmbeddingCache:
         policy: str = "lru",
         *,
         version_of: Optional[Callable[[Hashable], int]] = None,
-    ):
+    ) -> None:
         self.impl = make_cache_policy(policy, capacity_rows)
         self.policy = policy
         self.capacity_rows = capacity_rows
@@ -422,7 +422,7 @@ class ResultCache:
     dropped on get. Deterministic: eviction and expiry depend only on
     the (now, key) call sequence."""
 
-    def __init__(self, capacity: int, ttl_s: float):
+    def __init__(self, capacity: int, ttl_s: float) -> None:
         if capacity < 1:
             raise ValueError(f"result cache capacity must be >= 1, got {capacity}")
         self.capacity = capacity
@@ -431,7 +431,7 @@ class ResultCache:
         self.hits = 0
         self.misses = 0
 
-    def get(self, now: float, key: Hashable):
+    def get(self, now: float, key: Hashable) -> Optional[object]:
         """The cached value, or None on miss/expiry."""
         entry = self._od.get(key)
         if entry is not None and now - entry[0] <= self.ttl_s:

@@ -174,7 +174,7 @@ class ServingSystem:
             )
         self.l2_cache: Optional[EmbeddingCache] = None
         if l2_cfgs:
-            cap, policy = next(iter(l2_cfgs))
+            cap, policy = min(l2_cfgs)  # singleton; min() is order-free
             self.l2_cache = EmbeddingCache(cap, policy)
             if shard is not None:
                 shard.register_cache(self.l2_cache)

@@ -308,7 +308,8 @@ class _Stream:
 
     __slots__ = ("kind", "t", "payload", "_it")
 
-    def __init__(self, kind: str, events: Iterable[Tuple[float, object]]):
+    def __init__(self, kind: str,
+                 events: Iterable[Tuple[float, object]]) -> None:
         self.kind = kind
         self._it: Iterator[Tuple[float, object]] = iter(events)
         self.t = float("-inf")
@@ -331,7 +332,8 @@ class _Stream:
 
 
 class EventLoop:
-    def __init__(self, scheduler: str = "calendar", strict: bool = False):
+    def __init__(self, scheduler: str = "calendar",
+                 strict: bool = False) -> None:
         try:
             self._sched = SCHEDULERS[scheduler]()
         except KeyError:

@@ -41,7 +41,7 @@ online model re-learning a drifted calibration.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -56,7 +56,7 @@ class TraceBuffer:
 
     __slots__ = ("_names", "_bufs", "_n")
 
-    def __init__(self, columns: Sequence[Union[str, Tuple[str, type]]]):
+    def __init__(self, columns: Sequence[Union[str, Tuple[str, type]]]) -> None:
         self._names: List[str] = []
         self._bufs: List[np.ndarray] = []
         for col in columns:
@@ -68,7 +68,7 @@ class TraceBuffer:
     def __len__(self) -> int:
         return self._n
 
-    def append(self, *values) -> None:
+    def append(self, *values: float) -> None:
         """Append one row, positionally in declared column order."""
         if len(values) != len(self._bufs):
             raise ValueError(
@@ -117,7 +117,41 @@ class SpillStats:
         return dataclasses.asdict(self)
 
 
-def fleet_cache_rollup(cache_summaries) -> Dict:
+# Schema key lists shared by the rollups and the Prometheus registry —
+# the single source of truth simlint's SL003 checks consumers against.
+# SPILL_KEYS mirrors the SpillStats fields (pinned by a test).
+FEDERATED_CONSERVED_KEYS = ("arrived", "completed", "rejected", "in_queue",
+                            "completed_in_horizon", "final_replicas")
+SPILL_KEYS = ("spilled_out", "spilled_in", "cascade_out", "cascade_in")
+CACHE_COUNTER_KEYS = ("hits", "misses", "evictions", "result_hits",
+                      "staleness", "invalidated", "l2_hits", "l2_misses",
+                      "local_fetches", "remote_fetches")
+# (key, help) pairs rendered by MetricsRegistry._add_scope
+SCOPE_CONSERVED_KEYS = (
+    ("arrived", "requests offered to this scope"),
+    ("injected", "requests injected fleet-wide"),
+    ("completed", "requests fully served"),
+    ("rejected", "requests shed by admission"),
+    ("in_queue", "requests still queued at summary time"),
+    ("in_flight", "requests queued or in inter-cell transit"),
+    ("in_transit", "requests paying an inter-cell RTT"),
+    ("completed_in_horizon", "completions inside the horizon"),
+    ("spilled", "requests spilled out of their entry cell"),
+    ("spilled_in", "spilled requests served for a remote home"),
+    ("cascade_spilled", "cascade stages handed to a remote cell"),
+    ("dropped_events", "loop events that fired with no handler"),
+)
+SCOPE_GAUGE_KEYS = (
+    ("p50", "full-run median latency (seconds)"),
+    ("p99", "full-run p99 latency (seconds)"),
+    ("mean_latency", "full-run mean latency (seconds)"),
+    ("slo_attainment", "fraction completed inside SLO"),
+    ("throughput", "in-horizon completions per second"),
+    ("final_replicas", "replicas at summary time"),
+)
+
+
+def fleet_cache_rollup(cache_summaries: Iterable[Dict]) -> Dict:
     """Sum per-pool cache summaries (ReplicaPool.cache_summary() dicts)
     into one tally with the aggregate hit-rates — the caching layer's
     contribution to an engine or federation summary. Pools without a
@@ -129,9 +163,8 @@ def fleet_cache_rollup(cache_summaries) -> Dict:
     `federated_rollup`. Output keys round-trip as input: feeding rollups
     back through re-sums every counter and recomputes the rates (a
     property the tests pin down)."""
-    out = {"hits": 0, "misses": 0, "evictions": 0, "result_hits": 0,
-           "staleness": 0, "invalidated": 0, "l2_hits": 0, "l2_misses": 0,
-           "local_fetches": 0, "remote_fetches": 0, "transit_s": 0.0}
+    out: Dict = {key: 0 for key in CACHE_COUNTER_KEYS}
+    out["transit_s"] = 0.0
     for s in cache_summaries:
         for key in out:
             out[key] += s.get(key, 0)
@@ -142,7 +175,7 @@ def fleet_cache_rollup(cache_summaries) -> Dict:
     return out
 
 
-def fleet_control_rollup(control_summaries) -> Dict:
+def fleet_control_rollup(control_summaries: Iterable[Dict]) -> Dict:
     """Sum control summaries into one fleet view of the adaptive
     control plane (serving/control.py): how many pools learn their
     latency online / adapt their batch size, total observation samples,
@@ -168,7 +201,8 @@ def fleet_control_rollup(control_summaries) -> Dict:
     fetch_corr_sum = 0.0
     plat: Dict[str, Dict[str, float]] = {}
 
-    def _per_class(platform, n, corr, fetch):
+    def _per_class(platform: str, n: int, corr: float,
+                   fetch: float) -> None:
         d = plat.setdefault(platform, {"samples": 0, "corr": 0.0, "fetch": 0.0})
         d["samples"] += n
         d["corr"] += n * corr
@@ -212,7 +246,7 @@ def fleet_control_rollup(control_summaries) -> Dict:
     return out
 
 
-def fleet_breakdown_rollup(breakdowns) -> Dict:
+def fleet_breakdown_rollup(breakdowns: Iterable[Optional[Dict]]) -> Dict:
     """Sum per-pool / per-cell `latency_breakdown` blocks
     (tracing.BreakdownAccumulator.summary() dicts) into one aggregate:
     counts, per-component seconds and cumulative histogram rows all sum;
@@ -257,19 +291,14 @@ def federated_rollup(cells: Dict[str, Dict]) -> Dict[str, int]:
     roll up from per-cell percentiles — the federation keeps its own
     fleet-wide SLOMonitor for those; this merges the conserved counts
     (plus the cells' cache tallies, via fleet_cache_rollup)."""
-    out = {
-        "arrived": 0, "completed": 0, "rejected": 0, "in_queue": 0,
-        "completed_in_horizon": 0, "final_replicas": 0,
-        "spilled_out": 0, "spilled_in": 0, "cascade_out": 0, "cascade_in": 0,
-    }
+    out = {key: 0 for key in FEDERATED_CONSERVED_KEYS + SPILL_KEYS}
     dropped = 0
     dropped_kinds: Dict[str, int] = {}
     for summary in cells.values():
-        for key in ("arrived", "completed", "rejected", "in_queue",
-                    "completed_in_horizon", "final_replicas"):
+        for key in FEDERATED_CONSERVED_KEYS:
             out[key] += summary[key]
         spill = summary.get("spill", {})
-        for key in ("spilled_out", "spilled_in", "cascade_out", "cascade_in"):
+        for key in SPILL_KEYS:
             out[key] += spill.get(key, 0)
         # federated cells share ONE EventLoop, so each cell reports the
         # same loop-global drop counters — merge by max, never sum
@@ -304,7 +333,8 @@ class SLOMonitor:
     on the monotone finish-time column instead of a per-event deque
     popleft, and percentile inputs are ready-made float64 slices."""
 
-    def __init__(self, window_s: float = 10.0, slo_s: Optional[float] = None):
+    def __init__(self, window_s: float = 10.0,
+                 slo_s: Optional[float] = None) -> None:
         self.window_s = window_s
         self.slo_s = slo_s
         self._fin = np.empty(1024)  # finish times, monotone non-decreasing
@@ -316,7 +346,7 @@ class SLOMonitor:
         self.completed = 0
         self.slo_hits = 0
 
-    def record(self, finish: float, latency: float):
+    def record(self, finish: float, latency: float) -> None:
         n = self._n
         if n == len(self._lat):
             for name in ("_fin", "_lat"):
@@ -388,13 +418,13 @@ class MetricsRegistry:
     labeled-sample exposition format. Purely read-only over the summary:
     building a registry never mutates a running system."""
 
-    def __init__(self, namespace: str = "repro_serving"):
+    def __init__(self, namespace: str = "repro_serving") -> None:
         self.namespace = namespace
         # name -> (type, help, [(labels dict, value)]) in insertion order
         self._metrics: Dict[str, Tuple[str, str, List[Tuple[Dict, float]]]] = {}
 
     def add(self, name: str, kind: str, help_: str, value: float,
-            **labels) -> None:
+            **labels: object) -> None:
         full = f"{self.namespace}_{name}"
         if full not in self._metrics:
             self._metrics[full] = (kind, help_, [])
@@ -413,22 +443,8 @@ class MetricsRegistry:
             reg._add_scope(summary, scope="system")
         return reg
 
-    def _add_scope(self, s: Dict, **labels) -> None:
-        conserved = (
-            ("arrived", "requests offered to this scope"),
-            ("injected", "requests injected fleet-wide"),
-            ("completed", "requests fully served"),
-            ("rejected", "requests shed by admission"),
-            ("in_queue", "requests still queued at summary time"),
-            ("in_flight", "requests queued or in inter-cell transit"),
-            ("in_transit", "requests paying an inter-cell RTT"),
-            ("completed_in_horizon", "completions inside the horizon"),
-            ("spilled", "requests spilled out of their entry cell"),
-            ("spilled_in", "spilled requests served for a remote home"),
-            ("cascade_spilled", "cascade stages handed to a remote cell"),
-            ("dropped_events", "loop events that fired with no handler"),
-        )
-        for key, help_ in conserved:
+    def _add_scope(self, s: Dict, **labels: object) -> None:
+        for key, help_ in SCOPE_CONSERVED_KEYS:
             if key in s:
                 self.add(f"{key}_total", "counter", help_, s[key], **labels)
         for kind, n in (s.get("dropped_kinds") or {}).items():
@@ -436,22 +452,15 @@ class MetricsRegistry:
                      "unhandled loop events by event kind", n,
                      kind=kind, **labels)
         spill = s.get("spill") or {}
-        for key in ("spilled_out", "spilled_in", "cascade_out", "cascade_in"):
+        for key in SPILL_KEYS:
             if key in spill:
                 self.add(f"spill_{key}_total", "counter",
                          "per-cell spill attribution", spill[key], **labels)
-        for key, help_ in (("p50", "full-run median latency (seconds)"),
-                           ("p99", "full-run p99 latency (seconds)"),
-                           ("mean_latency", "full-run mean latency (seconds)"),
-                           ("slo_attainment", "fraction completed inside SLO"),
-                           ("throughput", "in-horizon completions per second"),
-                           ("final_replicas", "replicas at summary time")):
+        for key, help_ in SCOPE_GAUGE_KEYS:
             if key in s:
                 self.add(key, "gauge", help_, s[key], **labels)
         cache = s.get("cache") or {}
-        for key in ("hits", "misses", "evictions", "result_hits",
-                    "staleness", "invalidated", "l2_hits", "l2_misses",
-                    "local_fetches", "remote_fetches"):
+        for key in CACHE_COUNTER_KEYS:
             if key in cache:
                 self.add(f"cache_{key}_total", "counter",
                          "embedding cache / shard tier tallies",
@@ -476,7 +485,7 @@ class MetricsRegistry:
                      platform=plat, **labels)
         self._add_breakdown(s.get("latency_breakdown") or {}, **labels)
 
-    def _add_breakdown(self, block: Dict, **labels) -> None:
+    def _add_breakdown(self, block: Dict, **labels: object) -> None:
         if not block:
             return
         self.add("latency_breakdown_requests_total", "counter",
@@ -510,7 +519,7 @@ class MetricsRegistry:
         return str(int(f)) if f.is_integer() and abs(f) < 1e15 else repr(f)
 
     @staticmethod
-    def _fmt_label(v) -> str:
+    def _fmt_label(v: object) -> str:
         s = str(v).replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
         return f'"{s}"'
 

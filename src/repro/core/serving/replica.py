@@ -110,14 +110,19 @@ class LatencyModel:
         sizes: Sequence[int] = (1, 8, 32, 128, 512),
         reps: int = 3,
     ) -> "LatencyModel":
-        """fn(batch) runs one real (blocking) inference at that batch size."""
+        """fn(batch) runs one real (blocking) inference at that batch size.
+
+        Wall-clock timing of REAL kernels is calibrate()'s whole job —
+        it runs offline, never on the simulated path, so the SL001
+        determinism rule is suppressed for exactly these two reads.
+        """
         ts = []
         for b in sizes:
             fn(b)  # compile / warm
-            t0 = time.perf_counter()
+            t0 = time.perf_counter()  # simlint: disable=SL001
             for _ in range(reps):
                 fn(b)
-            ts.append((time.perf_counter() - t0) / reps)
+            ts.append((time.perf_counter() - t0) / reps)  # simlint: disable=SL001
         return LatencyModel(np.asarray(sizes, np.float64), np.asarray(ts))
 
     @staticmethod

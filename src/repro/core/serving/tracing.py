@@ -62,11 +62,15 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.serving.metrics import TraceBuffer
+
+if TYPE_CHECKING:  # pool imports tracing at runtime; type-only here
+    from repro.core.serving.pool import Request
+    from repro.core.serving.replica import MissRows, ReplicaSpec
 
 # The ordered taxonomy. `transit` and `closure` MUST stay last (in this
 # order): they are the residual and the sub-ULP closure term that make
@@ -90,7 +94,8 @@ HISTOGRAM_BUCKETS_S: Tuple[float, ...] = (
 )
 
 
-def service_phases(spec, items: int, miss_rows) -> Tuple[float, float, float, float]:
+def service_phases(spec: "ReplicaSpec", items: int,
+                   miss_rows: "MissRows") -> Tuple[float, float, float, float]:
     """Decompose one batch's service duration into its modelled phases
     (dense_s, fetch_local_s, fetch_remote_s, transit_s) using the same
     curves `ReplicaSpec.service_time` charges the clock with — the TRUE
@@ -116,7 +121,7 @@ def service_phases(spec, items: int, miss_rows) -> Tuple[float, float, float, fl
     return dense(items), miss_rows * fetch, 0.0, 0.0
 
 
-def _stage_path(req) -> List[int]:
+def _stage_path(req: "Request") -> List[int]:
     """The cascade stages THIS run's request actually traversed. Timeline
     dicts are shared across replayed runs (cascade.admit clones but keeps
     the dict), so stale stamps from a previous baseline run may coexist —
@@ -152,7 +157,8 @@ def stage_components(timeline: Dict[str, float], stage: int,
     }
 
 
-def decompose(req, done: float, *, t_origin: Optional[float] = None,
+def decompose(req: "Request", done: float, *,
+              t_origin: Optional[float] = None,
               stages: Optional[Sequence[int]] = None) -> Dict[str, float]:
     """Attribute one completed request's latency to the component
     taxonomy. `done` is the completion time (the event-loop `now` the
@@ -199,7 +205,7 @@ class BreakdownAccumulator:
 
     __slots__ = ("count", "end_to_end_s", "sums", "_hist")
 
-    def __init__(self):
+    def __init__(self) -> None:
         self.count = 0
         self.end_to_end_s = 0.0
         self.sums = {name: 0.0 for name in COMPONENTS}
@@ -217,7 +223,8 @@ class BreakdownAccumulator:
             self.sums[name] += v
             self._hist[name][bisect.bisect_left(HISTOGRAM_BUCKETS_S, v)] += 1
 
-    def observe(self, req, done: float, *, t_origin: Optional[float] = None,
+    def observe(self, req: "Request", done: float, *,
+                t_origin: Optional[float] = None,
                 stages: Optional[Sequence[int]] = None) -> None:
         """Decompose + add in one call (the pool/engine completion hook)."""
         origin = req.t_arrive if t_origin is None else t_origin
@@ -280,7 +287,7 @@ class Tracer:
     the accounting stays honest)."""
 
     def __init__(self, *, sample_every: int = 16, seed: int = 0,
-                 max_spans: int = 200_000):
+                 max_spans: int = 200_000) -> None:
         if sample_every < 1:
             raise ValueError(f"sample_every must be >= 1, got {sample_every}")
         self.sample_every = sample_every
@@ -328,7 +335,8 @@ class Tracer:
         track = f"{cell or 'system'}/{pool}/replica{replica}"
         self._push("batch", track, n_requests, 0, t0, t1, items)
 
-    def record_stage(self, req, cell: str, pool: str, done: float) -> None:
+    def record_stage(self, req: "Request", cell: str, pool: str,
+                     done: float) -> None:
         """One sampled request's in-pool stage spans: queue wait, replica
         wait, and the service sub-phases, read off the timeline stamps
         `ReplicaPool._dispatch` wrote. Called from the pool's batch-done
@@ -355,7 +363,8 @@ class Tracer:
                 self._push(kind, track, req.rid, stage, prev, nxt)
             prev = nxt
 
-    def record_request(self, req, done: float, track: str = "fleet") -> None:
+    def record_request(self, req: "Request", done: float,
+                       track: str = "fleet") -> None:
         """A sampled request's root span [t_arrive, done) plus the
         inter-stage transit gaps (front-door routing hop, cross-cell
         spill RTT, cascade hand-offs) — called once, at final

@@ -1,0 +1,417 @@
+"""simlint (tools/lint) — fixture-verified behavior per rule.
+
+Every rule gets at least one true-positive fixture (the violation is
+reported) and one true-negative fixture (the idiomatic spelling passes),
+plus suppression, baseline, and CLI exit-code coverage. Fixtures are
+written to tmp_path and linted through the same `run_paths` driver the
+CLI uses, so what these tests pin down is exactly what CI enforces.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from tools.lint import CHECKERS, run_paths  # noqa: E402
+from tools.lint.core import (Finding, Suppressions,  # noqa: E402
+                             load_baseline, write_baseline)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def lint_source(tmp_path, source, rules=None, name="fixture.py"):
+    path = tmp_path / name
+    path.write_text(source)
+    return run_paths([path], root=tmp_path, rules=rules)
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+def test_registry_has_all_five_rules():
+    assert set(CHECKERS) == {"SL001", "SL002", "SL003", "SL004", "SL005"}
+
+
+# ---- SL001 determinism ----
+
+SL001_POSITIVE = """\
+import os
+import random
+import time
+
+def bad(loop, cfgs):
+    t0 = time.perf_counter()
+    now = time.time()
+    salt = os.urandom(8)
+    pick = random.random()
+    order = sorted(cfgs, key=lambda c: id(c))
+    cap = next(iter({1, 2, 3}))
+    opts = {("a", 1), ("b", 2)}
+    first = next(iter(opts))
+    listed = list(opts)
+    for item in opts:
+        loop.push(0.0, "arrive", item)
+    return [x for x in opts]
+"""
+
+SL001_NEGATIVE = """\
+import numpy as np
+
+def good(loop, cfgs):
+    rng = np.random.default_rng(7)
+    draw = rng.random()
+    opts = {("a", 1), ("b", 2)}
+    if ("a", 1) in opts:  # membership tests never leak order
+        pass
+    first = min(opts)  # order-free reduction over a set
+    for item in sorted(opts):  # sorted() launders the set
+        loop.push(0.0, "arrive", item)
+    ordered = sorted(cfgs, key=lambda c: c.name)
+    return ordered, draw
+"""
+
+
+def test_sl001_true_positives(tmp_path):
+    findings = lint_source(tmp_path, SL001_POSITIVE, rules=["SL001"])
+    messages = " | ".join(f.message for f in findings)
+    assert rules_of(findings) == {"SL001"}
+    assert "time.perf_counter" in messages
+    assert "time.time" in messages
+    assert "os.urandom" in messages
+    assert "random.random" in messages
+    assert "id()" in messages
+    assert "next(iter(" in messages
+    assert "for loop" in messages
+    assert "comprehension" in messages
+    assert "list(<set>)" in messages
+    assert len(findings) >= 9
+
+
+def test_sl001_true_negatives(tmp_path):
+    assert lint_source(tmp_path, SL001_NEGATIVE, rules=["SL001"]) == []
+
+
+def test_sl001_rebinding_a_set_name_clears_it(tmp_path):
+    source = (
+        "def ok(opts):\n"
+        "    opts = set(opts)\n"
+        "    opts = sorted(opts)\n"
+        "    return [o for o in opts]\n"
+    )
+    assert lint_source(tmp_path, source, rules=["SL001"]) == []
+
+
+# ---- SL002 units ----
+
+SL002_POSITIVE = """\
+def bad(lat_s, wait_ms, rate_rps):
+    total_ms = lat_s  # cross-assign without conversion
+    mixed = lat_s + wait_ms
+    diff = wait_ms - lat_s
+    rate_rps += lat_s
+    return total_ms, mixed, diff, rate_rps
+"""
+
+SL002_NEGATIVE = """\
+def good(lat_s, wait_ms, extra_s):
+    total_s = lat_s + extra_s  # same unit adds freely
+    lat_ms = lat_s * 1e3  # explicit conversion factor
+    back_s = wait_ms / 1e3
+    total_ms = lat_s * 1e3 + wait_ms  # converted operand carries no suffix
+    plain = lat_s  # un-suffixed name on the left is unchecked
+    return total_s, lat_ms, back_s, total_ms, plain
+"""
+
+
+def test_sl002_true_positives(tmp_path):
+    findings = lint_source(tmp_path, SL002_POSITIVE, rules=["SL002"])
+    assert rules_of(findings) == {"SL002"}
+    assert len(findings) == 4
+    assert any("'_s' and '_ms'" in f.message or "'_ms' and '_s'" in f.message
+               for f in findings)
+    assert any("'_rps'" in f.message for f in findings)
+
+
+def test_sl002_true_negatives(tmp_path):
+    assert lint_source(tmp_path, SL002_NEGATIVE, rules=["SL002"]) == []
+
+
+# ---- SL003 summary-schema drift ----
+
+SL003_POSITIVE = """\
+def summary():
+    return {"arrived": 1, "completed": 2}
+
+def federated_rollup(cells):
+    out = {}
+    for s in cells:
+        out["arrived"] = s["arrived"] + s["vanished"]  # no producer emits it
+    for key in ("arrived", "completed", "rejected"):  # inline key list
+        out[key] = 0
+    return out
+"""
+
+SL003_NEGATIVE = """\
+ROLLUP_KEYS = ("arrived", "completed", "rejected")
+
+def summary():
+    out = {key: 0 for key in ROLLUP_KEYS}
+    out["extra"] = 1
+    return out
+
+def federated_rollup(cells):
+    out = {key: 0 for key in ROLLUP_KEYS}
+    for s in cells:
+        for key in ROLLUP_KEYS:  # constant-driven, single source of truth
+            out[key] += s[key]
+        opt = s.get("maybe_absent", 0)  # .get() stays optional
+    return out
+"""
+
+
+def test_sl003_true_positives(tmp_path):
+    findings = lint_source(tmp_path, SL003_POSITIVE, rules=["SL003"])
+    assert rules_of(findings) == {"SL003"}
+    messages = " | ".join(f.message for f in findings)
+    assert "'vanished'" in messages  # consumed key nobody produces
+    assert "inline schema key list" in messages
+    # 'rejected' comes only from the inline tuple, which counts as
+    # consumption — and no producer emits it either
+    assert "'rejected'" in messages
+
+
+def test_sl003_true_negatives(tmp_path):
+    assert lint_source(tmp_path, SL003_NEGATIVE, rules=["SL003"]) == []
+
+
+def test_sl003_dataclass_asdict_counts_as_production(tmp_path):
+    source = (
+        "import dataclasses\n"
+        "@dataclasses.dataclass\n"
+        "class SpillStats:\n"
+        "    spilled_out: int = 0\n"
+        "    spilled_in: int = 0\n"
+        "    def as_dict(self):\n"
+        "        return dataclasses.asdict(self)\n"
+        "def federated_rollup(cells):\n"
+        "    return [c['spilled_out'] + c['spilled_in'] for c in cells]\n"
+    )
+    assert lint_source(tmp_path, source, rules=["SL003"]) == []
+
+
+def test_sl003_cross_file_producer_satisfies_consumer(tmp_path):
+    (tmp_path / "producer.py").write_text(
+        "def summary():\n    return {'deep_key': 1}\n")
+    (tmp_path / "consumer.py").write_text(
+        "def federated_rollup(cells):\n"
+        "    return [c['deep_key'] for c in cells]\n")
+    findings = run_paths([tmp_path], root=tmp_path, rules=["SL003"])
+    assert findings == []
+
+
+# ---- SL004 event-kind exhaustiveness ----
+
+SL004_POSITIVE = """\
+def wire(loop):
+    loop.on("arrive", lambda t, p: None)
+    loop.on("ghost_kind", lambda t, p: None)  # never pushed
+    loop.push(0.0, "arrive")
+    loop.push(0.0, "orphan_kind")  # never registered
+"""
+
+SL004_NEGATIVE = """\
+class System:
+    def _event(self, kind):
+        return f"{kind}:{self.ns}"
+
+    def _transit(self, now, kind, payload, delay_s):
+        self.loop.push(now + delay_s, kind, payload)
+
+    def wire(self):
+        self.loop.on("route", self.handle)
+        self.loop.on(self._event("scale"), self.handle)
+        self.loop.on(f"batch_done:{self.key}", self.handle)
+        self.loop.add_stream("tick", iter(()))
+        self.loop.on("tick", self.handle)
+
+    def drive(self, now):
+        self._transit(now, "route", None, 0.1)  # forwarded kind
+        self.loop.push(now, self._event("scale"))  # wrapper kind
+        self.loop.push(now, f"batch_done:{self.key}")  # namespaced kind
+"""
+
+
+def test_sl004_true_positives(tmp_path):
+    findings = lint_source(tmp_path, SL004_POSITIVE, rules=["SL004"])
+    assert rules_of(findings) == {"SL004"}
+    messages = " | ".join(f.message for f in findings)
+    assert "'orphan_kind' is pushed" in messages
+    assert "'ghost_kind' has a handler" in messages
+    assert len(findings) == 2
+
+
+def test_sl004_true_negatives(tmp_path):
+    assert lint_source(tmp_path, SL004_NEGATIVE, rules=["SL004"]) == []
+
+
+def test_sl004_is_cross_file(tmp_path):
+    (tmp_path / "register.py").write_text(
+        "def wire(loop):\n    loop.on('split_kind', id)\n")
+    (tmp_path / "pusher.py").write_text(
+        "def drive(loop):\n    loop.push(0.0, 'split_kind')\n")
+    assert run_paths([tmp_path], root=tmp_path, rules=["SL004"]) == []
+
+
+# ---- SL005 float-accumulation hygiene ----
+
+SL005_POSITIVE = """\
+def report(rows):
+    total_latency = 0.0
+    for row in rows:
+        total_latency += row.latency  # bare += accumulation
+    mean_latency = sum(r.latency for r in rows) / len(rows)
+    wait = sum(r.queue_wait for r in rows)
+    return total_latency, mean_latency, wait
+"""
+
+SL005_NEGATIVE = """\
+import numpy as np
+
+def fleet_breakdown_rollup(blocks):
+    total_latency = 0.0
+    for b in blocks:
+        total_latency += b["end_to_end_s"]  # rollups are blessed
+    return total_latency
+
+def report(latencies, costs):
+    vector = np.sum(latencies)  # numpy pairwise summation passes
+    spend = sum(costs)  # non-latency sums are out of scope
+    return vector, spend
+"""
+
+
+def test_sl005_true_positives(tmp_path):
+    findings = lint_source(tmp_path, SL005_POSITIVE, rules=["SL005"])
+    assert rules_of(findings) == {"SL005"}
+    messages = " | ".join(f.message for f in findings)
+    assert "bare sum()" in messages
+    assert "bare += " in messages
+    assert len(findings) == 3
+
+
+def test_sl005_true_negatives(tmp_path):
+    assert lint_source(tmp_path, SL005_NEGATIVE, rules=["SL005"]) == []
+
+
+def test_sl005_tracing_module_is_blessed(tmp_path):
+    findings = lint_source(tmp_path, SL005_POSITIVE, rules=["SL005"],
+                           name="tracing.py")
+    assert findings == []
+
+
+# ---- suppressions ----
+
+def test_trailing_comment_suppresses_that_line_only(tmp_path):
+    source = (
+        "import time\n"
+        "def f():\n"
+        "    a = time.time()  # simlint: disable=SL001\n"
+        "    b = time.time()\n"
+        "    return a, b\n"
+    )
+    findings = lint_source(tmp_path, source, rules=["SL001"])
+    assert [f.line for f in findings] == [4]
+
+
+def test_standalone_comment_suppresses_whole_file(tmp_path):
+    source = (
+        "# simlint: disable=SL001  (fixture: wall clock is the point)\n"
+        "import time\n"
+        "def f():\n"
+        "    return time.time(), time.perf_counter()\n"
+    )
+    assert lint_source(tmp_path, source, rules=["SL001"]) == []
+
+
+def test_suppression_is_per_rule():
+    supp = Suppressions("# simlint: disable=SL002\n")
+    hidden = Finding("SL002", "x.py", 3, "m")
+    visible = Finding("SL001", "x.py", 3, "m")
+    assert supp.hides(hidden) and not supp.hides(visible)
+
+
+def test_justification_text_does_not_join_rule_list():
+    supp = Suppressions("x = 1  # simlint: disable=SL001 legit wall clock\n")
+    assert supp.hides(Finding("SL001", "x.py", 1, "m"))
+    assert not supp.hides(Finding("SL005", "x.py", 1, "m"))
+
+
+# ---- baseline ----
+
+def test_baseline_roundtrip_filters_known_findings(tmp_path):
+    findings = lint_source(tmp_path, "import time\nt = time.time()\n",
+                           rules=["SL001"])
+    assert findings
+    baseline_path = tmp_path / "baseline.json"
+    write_baseline(baseline_path, findings)
+    keys = load_baseline(baseline_path)
+    assert all(f.key() in keys for f in findings)
+    # keys are line-free so unrelated edits upstream don't resurrect them
+    assert all("::SL001::" in k and ":1:" not in k for k in keys)
+
+
+def test_committed_baseline_is_empty():
+    doc = json.loads((REPO / "tools" / "lint" / "baseline.json").read_text())
+    assert doc["findings"] == []
+
+
+# ---- CLI + the real tree ----
+
+def _run_cli(args, cwd):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.lint", *args],
+        cwd=cwd, capture_output=True, text=True)
+
+
+def test_cli_clean_tree_exits_zero():
+    proc = _run_cli(["src/repro/core/serving", "benchmarks", "tools"], REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 finding(s)" in proc.stdout
+
+
+def test_cli_reports_and_fails_on_findings(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import time\nt = time.time()\n")
+    report = tmp_path / "report.txt"
+    proc = _run_cli([str(bad), "--no-baseline", "--report", str(report)],
+                    REPO)
+    assert proc.returncode == 1
+    assert "SL001" in proc.stdout
+    assert "SL001" in report.read_text()
+
+
+def test_cli_rejects_unknown_rule():
+    proc = _run_cli(["--rules", "SL999"], REPO)
+    assert proc.returncode == 2
+
+
+# ---- the real schema constants stay truthful ----
+
+def test_spill_keys_mirror_spillstats_fields():
+    import dataclasses
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.core.serving.metrics import SPILL_KEYS, SpillStats
+    assert SPILL_KEYS == tuple(
+        f.name for f in dataclasses.fields(SpillStats))
+
+
+def test_cache_counter_keys_match_cache_rollup_output():
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.core.serving.metrics import (CACHE_COUNTER_KEYS,
+                                            fleet_cache_rollup)
+    out = fleet_cache_rollup([])
+    assert set(CACHE_COUNTER_KEYS) <= set(out)

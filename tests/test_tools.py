@@ -1,0 +1,193 @@
+"""The CI guard scripts guarded: tools/check_docs.py (markdown link +
+executable-fence validation) and tools/check_trace.py (Chrome-trace
+structural validation) get their rejection paths pinned down — a
+malformed/broken python fence, unbalanced sync and async span pairs,
+unsorted timestamps, unnamed tracks, and unreadable documents — plus
+the happy paths CI relies on staying green.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from tools import check_docs, check_trace  # noqa: E402
+
+
+# ---- check_docs: links ----
+
+def test_check_links_accepts_resolving_and_external(tmp_path):
+    (tmp_path / "exists.md").write_text("target")
+    doc = tmp_path / "doc.md"
+    text = ("[ok](exists.md) [web](https://example.com/x) "
+            "[anchor](#section) [mail](mailto:a@b.c)")
+    assert check_docs.check_links(doc, text) == []
+
+
+def test_check_links_rejects_missing_target(tmp_path):
+    doc = tmp_path / "doc.md"
+    errors = check_docs.check_links(doc, "[broken](missing.md)")
+    assert len(errors) == 1
+    assert "missing.md" in errors[0]
+
+
+def test_check_links_repo_absolute_paths_resolve_from_root():
+    # "/docs/architecture.md" means repo-root-relative on GitHub
+    doc = check_docs.ROOT / "README.md"
+    assert check_docs.check_links(doc, "[a](/docs/architecture.md)") == []
+    errors = check_docs.check_links(doc, "[a](/docs/nope.md)")
+    assert len(errors) == 1
+
+
+# ---- check_docs: executable fences ----
+
+def test_run_blocks_share_one_namespace(tmp_path):
+    doc = tmp_path / "doc.md"
+    text = ("```python\nx = 21\n```\n"
+            "prose between blocks\n"
+            "```python\nassert x * 2 == 42\n```\n")
+    assert check_docs.run_blocks(doc, text) == []
+
+
+def test_run_blocks_reports_failing_fence(tmp_path):
+    doc = tmp_path / "doc.md"
+    text = "```python\nraise RuntimeError('doc drifted')\n```\n"
+    errors = check_docs.run_blocks(doc, text)
+    assert len(errors) == 1
+    assert "python block 0 failed" in errors[0]
+    assert "doc drifted" in errors[0]
+
+
+def test_run_blocks_rejects_malformed_fence_code(tmp_path):
+    # an unterminated string inside the fence must fail the doc check,
+    # not crash the checker
+    doc = tmp_path / "doc.md"
+    text = "```python\nvalue = 'unterminated\n```\n"
+    errors = check_docs.run_blocks(doc, text)
+    assert len(errors) == 1
+    assert "SyntaxError" in errors[0]
+
+
+def test_unclosed_fence_is_not_executed(tmp_path):
+    # FENCE requires a closing ``` — a dangling open fence yields no
+    # blocks instead of executing the rest of the document as code
+    text = "```python\nraise RuntimeError('never runs')\n"
+    assert check_docs.FENCE.findall(text) == []
+    assert check_docs.run_blocks(tmp_path / "doc.md", text) == []
+
+
+# ---- check_trace ----
+
+def _meta(pid=1, tid=1):
+    return [
+        {"ph": "M", "name": "process_name", "pid": pid,
+         "args": {"name": "proc"}},
+        {"ph": "M", "name": "thread_name", "pid": pid, "tid": tid,
+         "args": {"name": "thread"}},
+    ]
+
+
+def _span(ph, ts, name="span", pid=1, tid=1, **extra):
+    return {"ph": ph, "ts": ts, "name": name, "pid": pid, "tid": tid,
+            **extra}
+
+
+def _doc(events):
+    return {"traceEvents": events}
+
+
+def test_valid_trace_passes():
+    events = _meta() + [
+        _span("B", 0), _span("E", 10),
+        _span("b", 10, name="req", cat="request", id="r1"),
+        _span("e", 20, name="req", cat="request", id="r1"),
+        _span("X", 30, dur=5),
+    ]
+    assert check_trace.check_trace(_doc(events)) == []
+
+
+def test_missing_trace_events_array():
+    assert check_trace.check_trace({"other": 1}) == \
+        ["document has no traceEvents array"]
+
+
+def test_unsorted_timestamps_rejected():
+    events = _meta() + [_span("B", 10), _span("E", 5)]
+    errors = check_trace.check_trace(_doc(events))
+    assert any("not sorted" in e for e in errors)
+
+
+def test_unbalanced_sync_spans_rejected():
+    dangling = _meta() + [_span("B", 0)]
+    errors = check_trace.check_trace(_doc(dangling))
+    assert any("unclosed B span" in e for e in errors)
+
+    orphan_close = _meta() + [_span("E", 0)]
+    errors = check_trace.check_trace(_doc(orphan_close))
+    assert any("E with empty stack" in e for e in errors)
+
+    mismatched = _meta() + [_span("B", 0, name="outer"),
+                            _span("E", 1, name="inner")]
+    errors = check_trace.check_trace(_doc(mismatched))
+    assert any("mismatched nesting" in e for e in errors)
+
+
+def test_unbalanced_async_pairs_rejected():
+    never_closed = _meta() + [
+        _span("b", 0, name="req", cat="request", id="r1")]
+    errors = check_trace.check_trace(_doc(never_closed))
+    assert any("unbalanced async span" in e for e in errors)
+
+    e_before_b = _meta() + [
+        _span("e", 0, name="req", cat="request", id="r1")]
+    errors = check_trace.check_trace(_doc(e_before_b))
+    assert any("async e before its b" in e for e in errors)
+
+    missing_id = _meta() + [_span("b", 0, name="req", cat="request")]
+    errors = check_trace.check_trace(_doc(missing_id))
+    assert any("missing cat/id/name" in e for e in errors)
+
+
+def test_unnamed_pid_tid_rejected():
+    events = _meta(pid=1, tid=1) + [
+        _span("X", 0, pid=2, tid=9, dur=1)]
+    errors = check_trace.check_trace(_doc(events))
+    assert any("no process_name" in e for e in errors)
+    assert any("no thread_name" in e for e in errors)
+
+
+def test_metadata_only_trace_rejected():
+    errors = check_trace.check_trace(_doc(_meta()))
+    assert any("zero spans" in e for e in errors)
+
+
+def test_unknown_phase_rejected():
+    events = _meta() + [_span("Z", 0)]
+    errors = check_trace.check_trace(_doc(events))
+    assert any("unknown phase" in e for e in errors)
+
+
+# ---- check_trace CLI ----
+
+def test_main_ok_and_failing_paths(tmp_path, capsys):
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(_doc(_meta() + [_span("X", 0, dur=1)])))
+    assert check_trace.main([str(good)]) == 0
+
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(_doc(_meta() + [_span("B", 0)])))
+    assert check_trace.main([str(bad)]) == 1
+
+    unreadable = tmp_path / "nope.json"
+    assert check_trace.main([str(unreadable)]) == 1
+
+    garbage = tmp_path / "garbage.json"
+    garbage.write_text("{not json")
+    assert check_trace.main([str(garbage)]) == 1
+    capsys.readouterr()  # keep the pytest output clean
+
+
+def test_main_usage_error():
+    assert check_trace.main([]) == 2

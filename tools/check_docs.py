@@ -25,6 +25,15 @@ FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 EXTERNAL = ("http://", "https://", "mailto:")
 
 
+def _rel(path: pathlib.Path):
+    """Repo-relative for readability; as-given for docs outside ROOT
+    (the test suite checks fixture docs in tmp dirs)."""
+    try:
+        return path.relative_to(ROOT)
+    except ValueError:
+        return path
+
+
 def doc_files() -> list:
     files = []
     readme = ROOT / "README.md"
@@ -45,7 +54,7 @@ def check_links(path: pathlib.Path, text: str) -> list:
         # "/docs/x.md" is repo-root-absolute on GitHub, not filesystem-absolute
         base = ROOT / rel.lstrip("/") if rel.startswith("/") else path.parent / rel
         if not base.exists():
-            errors.append(f"{path.relative_to(ROOT)}: broken link -> {target}")
+            errors.append(f"{_rel(path)}: broken link -> {target}")
     return errors
 
 
@@ -56,7 +65,7 @@ def run_blocks(path: pathlib.Path, text: str) -> list:
             exec(compile(code, f"{path.name}[python block {i}]", "exec"), namespace)
         except Exception:
             return [
-                f"{path.relative_to(ROOT)}: python block {i} failed:\n"
+                f"{_rel(path)}: python block {i} failed:\n"
                 + traceback.format_exc(limit=3)
             ]
     return []
@@ -69,7 +78,7 @@ def main() -> int:
         errors.extend(check_links(path, text))
         errors.extend(run_blocks(path, text))
         n_blocks = len(FENCE.findall(text))
-        print(f"checked {path.relative_to(ROOT)}: "
+        print(f"checked {_rel(path)}: "
               f"{len(LINK.findall(text))} links, {n_blocks} python blocks")
     if errors:
         print("\n".join(errors), file=sys.stderr)

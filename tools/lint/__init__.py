@@ -1,0 +1,28 @@
+"""simlint — AST-based invariant checker for the serving stack.
+
+Mechanically enforces the contracts the paper's latency/throughput
+claims rest on: bit-exact deterministic replay (SL001), seconds-
+everywhere units (SL002), producer/consumer summary-schema agreement
+(SL003), event-kind exhaustiveness (SL004), and Sterbenz-closed latency
+accumulation (SL005). See docs/static-analysis.md for the rule table
+and the suppression/baseline workflow.
+
+Usage:
+
+    python -m tools.lint [paths...]          # defaults to the CI tree
+    python -m tools.lint --write-baseline    # grandfather current findings
+
+Programmatic: ``from tools.lint import run_paths, CHECKERS``.
+"""
+from .core import (CHECKERS, Checker, Finding, Suppressions,  # noqa: F401
+                   iter_py_files, load_baseline, register, run_paths,
+                   write_baseline)
+
+# importing the rule modules registers them with CHECKERS
+from . import rules_determinism  # noqa: F401,E402
+from . import rules_units  # noqa: F401,E402
+from . import rules_schema  # noqa: F401,E402
+from . import rules_events  # noqa: F401,E402
+from . import rules_accumulation  # noqa: F401,E402
+
+DEFAULT_PATHS = ("src/repro/core/serving", "benchmarks", "tools")

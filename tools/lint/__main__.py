@@ -1,0 +1,79 @@
+"""simlint CLI — see `python -m tools.lint --help`.
+
+Exit status: 0 when every finding is suppressed or baselined, 1 when
+new findings exist, 2 on usage errors. CI runs this before tier-1 and
+uploads ``--report`` as the findings artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import List
+
+from . import CHECKERS, DEFAULT_PATHS, run_paths
+from .core import Finding, load_baseline, write_baseline
+
+_PKG_BASELINE = pathlib.Path(__file__).resolve().parent / "baseline.json"
+
+
+def main(argv: List[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="simlint: serving-stack invariant checks "
+                    f"({', '.join(sorted(CHECKERS))})")
+    parser.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                        help="files or directories to lint "
+                             f"(default: {' '.join(DEFAULT_PATHS)})")
+    parser.add_argument("--rules", default=None,
+                        help="comma-separated rule subset, e.g. SL001,SL004")
+    parser.add_argument("--baseline", type=pathlib.Path,
+                        default=_PKG_BASELINE,
+                        help="baseline JSON of grandfathered findings")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="ignore the baseline file entirely")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="write all current findings to the baseline "
+                             "and exit 0")
+    parser.add_argument("--report", type=pathlib.Path, default=None,
+                        help="also write the findings report to this file")
+    args = parser.parse_args(argv)
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = [r for r in rules if r not in CHECKERS]
+        if unknown:
+            parser.error(f"unknown rule(s): {', '.join(unknown)}")
+
+    findings = run_paths(args.paths, root=pathlib.Path.cwd(), rules=rules)
+
+    if args.write_baseline:
+        write_baseline(args.baseline, findings)
+        print(f"wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    baseline = set() if args.no_baseline else load_baseline(args.baseline)
+    new = [f for f in findings if f.key() not in baseline]
+    stale = baseline - {f.key() for f in findings}
+
+    lines = [f.render() for f in new]
+    summary = (f"simlint: {len(new)} finding(s), "
+               f"{len(findings) - len(new)} baselined, "
+               f"{len(stale)} stale baseline entr(y/ies)")
+    report = "\n".join(lines + [summary]) + "\n"
+    if args.report is not None:
+        args.report.write_text(report)
+    for line in lines:
+        print(line)
+    if stale:
+        print("stale baseline entries (fixed findings — prune them):",
+              file=sys.stderr)
+        for key in sorted(stale):
+            print(f"  {key}", file=sys.stderr)
+    print(summary)
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

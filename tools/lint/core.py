@@ -1,0 +1,183 @@
+"""simlint core: findings, suppressions, baseline handling, the checker
+registry, and the two-phase driver.
+
+Checkers are small classes registered by rule id. The driver parses each
+file once, hands every checker the (path, tree, source) triple, then —
+after all files are seen — calls ``finalize()`` so cross-file rules
+(schema drift, event-kind exhaustiveness) can reconcile what producers
+and consumers in *different* modules agreed on.
+
+Suppressions: a ``# simlint: disable=SL001[,SL002]`` comment on a line
+of its own disables the rule(s) for the whole file; as a trailing
+comment it disables them for that line only. The baseline file
+(JSON, committed) grandfathers findings by a line-number-free key so
+unrelated edits don't resurrect them.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import re
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Type
+
+# rule ids only, so trailing justification text never joins the list:
+#   # simlint: disable=SL001,SL005  (why this site is legitimate)
+_DISABLE_RE = re.compile(
+    r"#\s*simlint:\s*disable=([A-Z]{2}\d{3}(?:\s*,\s*[A-Z]{2}\d{3})*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one site."""
+
+    rule: str
+    path: str  # posix path relative to the lint root
+    line: int
+    message: str
+
+    def key(self) -> str:
+        """Baseline identity: line numbers drift with unrelated edits, so
+        the key is (path, rule, message) only."""
+        return f"{self.path}::{self.rule}::{self.message}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+class Suppressions:
+    """Parsed ``# simlint: disable=...`` comments for one file."""
+
+    def __init__(self, source: str):
+        self.file_rules: Set[str] = set()
+        self.line_rules: Dict[int, Set[str]] = {}
+        for lineno, line in enumerate(source.splitlines(), start=1):
+            m = _DISABLE_RE.search(line)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            if line.lstrip().startswith("#"):
+                self.file_rules |= rules
+            else:
+                self.line_rules.setdefault(lineno, set()).update(rules)
+
+    def hides(self, finding: Finding) -> bool:
+        if finding.rule in self.file_rules:
+            return True
+        return finding.rule in self.line_rules.get(finding.line, set())
+
+
+class Checker:
+    """Base class: per-file pass + optional project-level finalize."""
+
+    rule = "SL000"
+    title = "base checker"
+
+    def check_file(self, path: str, tree: ast.AST,
+                   source: str) -> List[Finding]:
+        return []
+
+    def finalize(self) -> List[Finding]:
+        return []
+
+    def finding(self, path: str, node, message: str) -> Finding:
+        line = node if isinstance(node, int) else getattr(node, "lineno", 0)
+        return Finding(self.rule, path, line, message)
+
+
+CHECKERS: Dict[str, Type[Checker]] = {}
+
+
+def register(cls: Type[Checker]) -> Type[Checker]:
+    CHECKERS[cls.rule] = cls
+    return cls
+
+
+# ---- baseline ----
+
+def load_baseline(path: Optional[pathlib.Path]) -> Set[str]:
+    if path is None or not path.exists():
+        return set()
+    doc = json.loads(path.read_text())
+    return set(doc.get("findings", []))
+
+
+def write_baseline(path: pathlib.Path, findings: Sequence[Finding]) -> None:
+    doc = {
+        "comment": "simlint grandfathered findings; regenerate with "
+                   "`python -m tools.lint --write-baseline`",
+        "findings": sorted({f.key() for f in findings}),
+    }
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+
+
+# ---- driver ----
+
+def iter_py_files(paths: Iterable[pathlib.Path]) -> Iterator[pathlib.Path]:
+    for p in paths:
+        if p.is_dir():
+            yield from sorted(q for q in p.rglob("*.py")
+                              if "__pycache__" not in q.parts)
+        elif p.suffix == ".py":
+            yield p
+
+
+def run_paths(paths: Sequence, root: Optional[pathlib.Path] = None,
+              rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint every .py file under ``paths``; return unsuppressed findings
+    (baseline filtering is the caller's job — the CLI applies it)."""
+    root = pathlib.Path(root) if root is not None else pathlib.Path.cwd()
+    active = [CHECKERS[r]() for r in (rules or sorted(CHECKERS))]
+    suppressions: Dict[str, Suppressions] = {}
+    findings: List[Finding] = []
+    for file_path in iter_py_files([pathlib.Path(p) for p in paths]):
+        source = file_path.read_text()
+        try:
+            tree = ast.parse(source, filename=str(file_path))
+        except SyntaxError as exc:
+            findings.append(Finding("SL000", _rel(file_path, root),
+                                    exc.lineno or 0,
+                                    f"file does not parse: {exc.msg}"))
+            continue
+        rel = _rel(file_path, root)
+        supp = Suppressions(source)
+        suppressions[rel] = supp
+        for checker in active:
+            for f in checker.check_file(rel, tree, source):
+                if not supp.hides(f):
+                    findings.append(f)
+    for checker in active:
+        for f in checker.finalize():
+            supp = suppressions.get(f.path)
+            if supp is None or not supp.hides(f):
+                findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    return findings
+
+
+def _rel(path: pathlib.Path, root: pathlib.Path) -> str:
+    try:
+        return path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+# ---- shared AST helpers ----
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for nested Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def str_const(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None

@@ -1,0 +1,113 @@
+"""SL005 — float-accumulation hygiene for latency attribution.
+
+PR 9's waterfall guarantee — component sums equal end-to-end latency
+BIT-EXACTLY — only holds because every latency accumulation goes
+through the Sterbenz-closure helpers in ``core/serving/tracing.py``
+(or the fleet rollups, which sum already-closed blocks). A bare
+``sum(...)`` or ``+=`` loop over latency/breakdown component values
+anywhere else reintroduces the float-associativity drift the closure
+was built to absorb.
+
+Flags, outside the blessed scopes (``tracing.py`` itself and functions
+named ``*_rollup``):
+
+  * builtin ``sum(...)`` whose argument mentions a latency-ish
+    identifier (``*latency*``, ``latencies``, ``*_breakdown``, or one of
+    the waterfall component names from ``tracing.COMPONENTS``);
+  * ``+=`` onto such an identifier inside a ``for``/``while`` loop.
+
+``numpy`` reductions (``np.sum``, ``arr.sum()``) are attribute calls
+and pass — pairwise summation is the fix, not the bug. Annotate truly
+intentional sites with ``# simlint: disable=SL005``.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import List
+
+from .core import Checker, Finding, register
+
+# mirror of tracing.COMPONENTS plus the end-to-end total itself
+_COMPONENT_NAMES = {
+    "queue_wait", "replica_wait", "dense_compute", "embed_fetch_local",
+    "embed_fetch_remote", "shard_transit", "transit", "closure",
+    "end_to_end",
+}
+
+
+def _hot(name: str) -> bool:
+    low = name.lower()
+    return ("latency" in low or low == "latencies"
+            or low.endswith("_breakdown") or low in _COMPONENT_NAMES)
+
+
+def _mentions_hot(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and _hot(sub.id):
+            return True
+        if isinstance(sub, ast.Attribute) and _hot(sub.attr):
+            return True
+    return False
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, checker: "AccumulationChecker", path: str):
+        self.checker = checker
+        self.path = path
+        self.findings: List[Finding] = []
+        self.loop_depth = 0
+        self.blessed_depth = 0
+
+    def _flag(self, node: ast.AST, message: str) -> None:
+        if not self.blessed_depth:
+            self.findings.append(
+                self.checker.finding(self.path, node, message))
+
+    def _visit_func(self, node: ast.AST) -> None:
+        blessed = node.name.endswith("_rollup")  # type: ignore[attr-defined]
+        self.blessed_depth += blessed
+        self.generic_visit(node)
+        self.blessed_depth -= blessed
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def _visit_loop(self, node: ast.AST) -> None:
+        self.loop_depth += 1
+        self.generic_visit(node)
+        self.loop_depth -= 1
+
+    visit_For = _visit_loop
+    visit_While = _visit_loop
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if isinstance(node.func, ast.Name) and node.func.id == "sum" \
+                and node.args and _mentions_hot(node.args[0]):
+            self._flag(node, "bare sum() over latency/breakdown components "
+                             "drifts under float associativity; use the "
+                             "closure helpers in serving/tracing.py or a "
+                             "*_rollup")
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if isinstance(node.op, ast.Add) and self.loop_depth \
+                and _mentions_hot(node.target):
+            self._flag(node, "bare += loop accumulation of latency/"
+                             "breakdown components; use the closure "
+                             "helpers in serving/tracing.py or a *_rollup")
+        self.generic_visit(node)
+
+
+@register
+class AccumulationChecker(Checker):
+    rule = "SL005"
+    title = "float-accumulation hygiene for latency components"
+
+    def check_file(self, path: str, tree: ast.AST,
+                   source: str) -> List[Finding]:
+        if pathlib.PurePosixPath(path).name == "tracing.py":
+            return []
+        visitor = _Visitor(self, path)
+        visitor.visit(tree)
+        return visitor.findings

@@ -1,0 +1,158 @@
+"""SL001 — determinism: the simulated path must replay bit-exactly.
+
+Flags the nondeterminism sources that have historically broken replay in
+discrete-event simulators:
+
+  * wall-clock reads (``time.time`` / ``perf_counter`` / ``monotonic`` /
+    ``process_time`` and their ``_ns`` variants) — simulated time is the
+    loop clock, never the host's;
+  * process-global RNG (``random.*``, ``os.urandom``, legacy
+    ``numpy.random.<fn>`` module calls) — only seeded
+    ``numpy.random.default_rng`` / ``Generator`` instances are allowed;
+  * ``id()`` used inside ``sorted``/``min``/``max``/``.sort`` — CPython
+    addresses vary run to run, so id-keyed ordering is nondeterministic;
+  * iterating a ``set``/``frozenset`` where the order leaks into results
+    (``for`` over a set, ``next(iter(s))``, ``list(s)``, ``tuple(s)``,
+    comprehensions over sets). Set iteration order depends on insertion
+    history and hash seeding; sort first or keep an ordered structure.
+
+Wall-clock calibration of *real* kernels is legitimate — annotate those
+sites with ``# simlint: disable=SL001``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from .core import Checker, Finding, dotted_name, register
+
+_WALL_CLOCK = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "time.process_time",
+    "time.process_time_ns", "os.urandom",
+}
+# construction of *seeded* generators off the legacy module is fine
+_NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                 "Philox", "SFC64", "BitGenerator"}
+_ORDERING_FNS = {"sorted", "min", "max"}
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        return node.func.id in ("set", "frozenset")
+    return False
+
+
+class _Scope:
+    def __init__(self) -> None:
+        self.set_names: Set[str] = set()
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, checker: "DeterminismChecker", path: str):
+        self.checker = checker
+        self.path = path
+        self.findings: List[Finding] = []
+        self.scopes: List[_Scope] = [_Scope()]
+
+    # -- scope handling: one name-set per function nesting level --
+    def _visit_scope(self, node: ast.AST) -> None:
+        self.scopes.append(_Scope())
+        self.generic_visit(node)
+        self.scopes.pop()
+
+    visit_FunctionDef = _visit_scope
+    visit_AsyncFunctionDef = _visit_scope
+    visit_Lambda = _visit_scope
+
+    def _known_set(self, node: ast.AST) -> bool:
+        if _is_set_expr(node):
+            return True
+        if isinstance(node, ast.Name):
+            return any(node.id in s.set_names for s in reversed(self.scopes))
+        return False
+
+    def _flag(self, node: ast.AST, message: str) -> None:
+        self.findings.append(self.checker.finding(self.path, node, message))
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if len(node.targets) == 1 and isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+            scope = self.scopes[-1]
+            if _is_set_expr(node.value):
+                scope.set_names.add(name)
+            else:
+                scope.set_names.discard(name)  # rebound to a non-set
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        dotted = dotted_name(node.func)
+        if dotted in _WALL_CLOCK:
+            self._flag(node, f"wall-clock read {dotted}() on the simulated "
+                             "path; use the event-loop clock")
+        elif dotted is not None:
+            parts = dotted.split(".")
+            if parts[0] == "random" and len(parts) > 1:
+                self._flag(node, f"process-global RNG {dotted}(); use a "
+                                 "seeded numpy.random.Generator")
+            elif (len(parts) >= 3 and parts[-2] == "random"
+                  and parts[0] in ("np", "numpy")
+                  and parts[-1] not in _NP_RANDOM_OK):
+                self._flag(node, f"legacy global numpy RNG {dotted}(); use "
+                                 "a seeded numpy.random.default_rng")
+        # id() inside an ordering call
+        fn = node.func
+        is_ordering = (isinstance(fn, ast.Name) and fn.id in _ORDERING_FNS) \
+            or (isinstance(fn, ast.Attribute) and fn.attr == "sort")
+        if is_ordering:
+            for sub in ast.walk(node):
+                if (isinstance(sub, ast.Call)
+                        and isinstance(sub.func, ast.Name)
+                        and sub.func.id == "id"):
+                    self._flag(sub, "id() used as an ordering key; object "
+                                    "addresses vary across runs")
+        # next(iter(set)) / list(set) / tuple(set)
+        if isinstance(fn, ast.Name) and node.args:
+            arg = node.args[0]
+            if fn.id == "next" and isinstance(arg, ast.Call) \
+                    and isinstance(arg.func, ast.Name) \
+                    and arg.func.id == "iter" and arg.args \
+                    and self._known_set(arg.args[0]):
+                self._flag(node, "next(iter(<set>)) picks an arbitrary "
+                                 "element; sort or use min()/max()")
+            elif fn.id in ("list", "tuple") and self._known_set(arg):
+                self._flag(node, f"{fn.id}(<set>) materializes arbitrary "
+                                 "set order; wrap in sorted()")
+        self.generic_visit(node)
+
+    def visit_For(self, node: ast.For) -> None:
+        if self._known_set(node.iter):
+            self._flag(node, "iterating a set in a for loop leaks arbitrary "
+                             "order into the simulation; sort first")
+        self.generic_visit(node)
+
+    def _visit_comp(self, node: ast.AST) -> None:
+        for gen in node.generators:  # type: ignore[attr-defined]
+            if self._known_set(gen.iter):
+                self._flag(node, "comprehension over a set leaks arbitrary "
+                                 "order into the result; sort first")
+        self._visit_scope(node)
+
+    visit_ListComp = _visit_comp
+    visit_GeneratorExp = _visit_comp
+    visit_DictComp = _visit_comp
+    # SetComp result is itself unordered, so set-over-set is harmless
+
+
+@register
+class DeterminismChecker(Checker):
+    rule = "SL001"
+    title = "determinism: no wall clock, global RNG, or order leaks"
+
+    def check_file(self, path: str, tree: ast.AST,
+                   source: str) -> List[Finding]:
+        visitor = _Visitor(self, path)
+        visitor.visit(tree)
+        return visitor.findings

@@ -1,0 +1,129 @@
+"""SL004 — event-kind exhaustiveness across the event loop.
+
+Every string event kind the stack schedules — ``loop.push(t, kind, ...)``
+or ``loop.add_stream(kind, ...)`` — must have a handler registered with
+``loop.on(kind, ...)`` somewhere in the linted tree, and every
+registered kind must actually be scheduled by someone. A kind pushed
+with no handler silently increments ``dropped_events``; a handler for a
+kind nobody pushes is dead wiring from a refactor.
+
+Kind extraction understands the repo's real shapes:
+
+  * plain string literals: ``loop.on("arrive", ...)``;
+  * namespaced f-strings: ``f"batch_timeout:{self.event_key}"``
+    normalizes to its literal prefix ``batch_timeout`` on both the push
+    and the registration side;
+  * wrapper calls with one string argument: ``self._event("scale")``
+    counts as ``"scale"``;
+  * kind-forwarding helpers: a function whose ``kind`` parameter flows
+    into an internal ``.push`` call (federation's ``_transit``) makes
+    its call sites count — ``self._transit(now, "spill", ...)`` pushes
+    ``"spill"``. Forwarders are resolved within the defining file.
+
+Dynamic kinds that never resolve to a literal are skipped, not guessed.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .core import Checker, Finding, register, str_const
+
+
+def _literal_kind(node: ast.AST) -> Optional[str]:
+    """Resolve a kind expression to its registry name, else None."""
+    s = str_const(node)
+    if s is not None:
+        return s
+    if isinstance(node, ast.JoinedStr):
+        prefix = ""
+        for value in node.values:
+            part = str_const(value)
+            if part is None:
+                break
+            prefix += part
+        return prefix.rstrip(":") or None
+    if isinstance(node, ast.Call) and len(node.args) >= 1:
+        # one-string-arg wrapper like self._event("scale")
+        inner = str_const(node.args[0])
+        if inner is not None and len(node.args) == 1:
+            return inner
+    return None
+
+
+def _func_name(call: ast.Call) -> Optional[str]:
+    fn = call.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return None
+
+
+def _forwarders(tree: ast.AST) -> Dict[str, int]:
+    """name -> positional index (self excluded) of a parameter that the
+    function forwards as the kind argument of an internal ``.push``."""
+    out: Dict[str, int] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        params = [a.arg for a in node.args.args]
+        offset = 1 if params and params[0] in ("self", "cls") else 0
+        for call in ast.walk(node):
+            if not (isinstance(call, ast.Call)
+                    and _func_name(call) == "push" and len(call.args) >= 2):
+                continue
+            kind_arg = call.args[1]
+            if isinstance(kind_arg, ast.Name) and kind_arg.id in params:
+                out[node.name] = params.index(kind_arg.id) - offset
+    return out
+
+
+@register
+class EventKindChecker(Checker):
+    rule = "SL004"
+    title = "event kinds: every push has a handler and vice versa"
+
+    def __init__(self) -> None:
+        # kind -> [(path, line)] sites
+        self.pushed: Dict[str, List[Tuple[str, int]]] = {}
+        self.registered: Dict[str, List[Tuple[str, int]]] = {}
+
+    def check_file(self, path: str, tree: ast.AST,
+                   source: str) -> List[Finding]:
+        forwarders = _forwarders(tree)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _func_name(node)
+            kind: Optional[str] = None
+            side: Optional[Dict] = None
+            if name == "on" and node.args:
+                kind, side = _literal_kind(node.args[0]), self.registered
+            elif name == "push" and len(node.args) >= 2:
+                kind, side = _literal_kind(node.args[1]), self.pushed
+            elif name == "add_stream" and node.args:
+                kind, side = _literal_kind(node.args[0]), self.pushed
+            elif name in forwarders:
+                index = forwarders[name]
+                if 0 <= index < len(node.args):
+                    kind, side = _literal_kind(node.args[index]), self.pushed
+            if kind is not None and side is not None:
+                side.setdefault(kind, []).append((path, node.lineno))
+        return []
+
+    def finalize(self) -> List[Finding]:
+        findings: List[Finding] = []
+        for kind in sorted(set(self.pushed) - set(self.registered)):
+            path, line = self.pushed[kind][0]
+            findings.append(self.finding(
+                path, line,
+                f"event kind '{kind}' is pushed/streamed but has no "
+                "loop.on() handler registration in the linted tree"))
+        for kind in sorted(set(self.registered) - set(self.pushed)):
+            path, line = self.registered[kind][0]
+            findings.append(self.finding(
+                path, line,
+                f"event kind '{kind}' has a handler but is never "
+                "pushed/streamed in the linted tree"))
+        return findings

@@ -1,0 +1,237 @@
+"""SL003 — summary-schema drift between producers and consumers.
+
+The serving stack's observability contract is a family of summary dicts:
+``summary()`` / ``cache_summary()`` / ``cell_stats()`` / ``stats()`` /
+``as_dict()`` producers on one side, and the fleet rollups plus the
+Prometheus registry (``fleet_cache_rollup``, ``fleet_control_rollup``,
+``fleet_breakdown_rollup``, ``federated_rollup``,
+``MetricsRegistry.from_summary``/``_add_scope``/``_add_breakdown``) on
+the consumer side. PR 9 caught producer/consumer drift by hand; this
+rule checks it mechanically:
+
+  * every string key a consumer *requires* (``x["key"]`` subscripts and
+    loops over key lists) must be emitted by at least one producer —
+    dict literals, ``out["key"] = ...`` stores, dataclass fields behind
+    ``dataclasses.asdict(self)``, and ``{k: 0 for k in *_KEYS}``
+    comprehensions all count as production;
+  * consumers must not hardcode inline schema key lists — iterate a
+    module-level ``*_KEYS`` constant instead, so the key set has one
+    source of truth the first check can then verify.
+
+``.get("key", default)`` reads are treated as optional and never
+required — back-compat fallbacks stay legal.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .core import Checker, Finding, register, str_const
+
+PRODUCER_NAMES = {"summary", "stats", "totals", "percentiles",
+                  "cache_summary", "control_summary", "cell_stats",
+                  "as_dict"}
+CONSUMER_NAMES = {"fleet_cache_rollup", "fleet_control_rollup",
+                  "fleet_breakdown_rollup", "federated_rollup",
+                  "from_summary", "_add_scope", "_add_breakdown"}
+
+
+def _is_producer(name: str) -> bool:
+    return name in PRODUCER_NAMES or name.endswith("_rollup")
+
+
+def _element_key(node: ast.AST) -> Optional[str]:
+    """'k' for 'k' or ('k', ...) elements of a key list."""
+    s = str_const(node)
+    if s is not None:
+        return s
+    if isinstance(node, (ast.Tuple, ast.List)) and node.elts:
+        return str_const(node.elts[0])
+    return None
+
+
+def _resolve_keys(node: ast.AST,
+                  constants: Dict[str, List[str]]) -> Optional[List[str]]:
+    """Key strings of a literal list/tuple, a *_KEYS constant name, or a
+    ``+`` concatenation of those; None when unresolvable."""
+    if isinstance(node, ast.Name):
+        return constants.get(node.id)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        keys = []
+        for elt in node.elts:
+            key = _element_key(elt)
+            if key is None:
+                return None
+            keys.append(key)
+        return keys
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        left = _resolve_keys(node.left, constants)
+        right = _resolve_keys(node.right, constants)
+        if left is not None and right is not None:
+            return left + right
+    return None
+
+
+def _module_constants(tree: ast.Module) -> Dict[str, List[str]]:
+    constants: Dict[str, List[str]] = {}
+    for stmt in tree.body:
+        if not (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)):
+            continue
+        name = stmt.targets[0].id
+        if not name.endswith("_KEYS"):
+            continue
+        keys = _resolve_keys(stmt.value, constants)
+        if keys is not None:
+            constants[name] = keys
+    return constants
+
+
+def _dataclass_fields(tree: ast.Module) -> Dict[str, List[str]]:
+    """class name -> annotated field names for @dataclass classes."""
+    fields: Dict[str, List[str]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            name = target.attr if isinstance(target, ast.Attribute) \
+                else getattr(target, "id", None)
+            if name == "dataclass":
+                fields[node.name] = [
+                    s.target.id for s in node.body
+                    if isinstance(s, ast.AnnAssign)
+                    and isinstance(s.target, ast.Name)
+                ]
+                break
+    return fields
+
+
+@register
+class SchemaChecker(Checker):
+    rule = "SL003"
+    title = "summary-schema drift between producers and consumers"
+
+    def __init__(self) -> None:
+        self.produced: Set[str] = set()
+        # (path, line, function, key) for keys a consumer requires
+        self.consumed: List[Tuple[str, int, str, str]] = []
+
+    def check_file(self, path: str, tree: ast.AST,
+                   source: str) -> List[Finding]:
+        assert isinstance(tree, ast.Module)
+        constants = _module_constants(tree)
+        dc_fields = _dataclass_fields(tree)
+        findings: List[Finding] = []
+        for func, owner in _functions_with_class(tree):
+            if _is_producer(func.name):
+                self._collect_produced(func, owner, constants, dc_fields)
+            if func.name in CONSUMER_NAMES:
+                findings.extend(
+                    self._collect_consumed(path, func, constants))
+        return findings
+
+    def finalize(self) -> List[Finding]:
+        return [
+            self.finding(path, line,
+                         f"{func} requires summary key '{key}' that no "
+                         "producer emits")
+            for path, line, func, key in self.consumed
+            if key not in self.produced
+        ]
+
+    # -- producers --
+    def _collect_produced(self, func: ast.AST, owner: Optional[str],
+                          constants: Dict[str, List[str]],
+                          dc_fields: Dict[str, List[str]]) -> None:
+        for node in ast.walk(func):
+            if isinstance(node, ast.Dict):
+                for key in node.keys:
+                    s = str_const(key) if key is not None else None
+                    if s is not None:
+                        self.produced.add(s)
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for target in targets:
+                    if isinstance(target, ast.Subscript):
+                        s = str_const(target.slice)
+                        if s is not None:
+                            self.produced.add(s)
+            elif isinstance(node, ast.DictComp):
+                gen = node.generators[0] if node.generators else None
+                if (gen is not None and isinstance(node.key, ast.Name)
+                        and isinstance(gen.target, ast.Name)
+                        and node.key.id == gen.target.id):
+                    keys = _resolve_keys(gen.iter, constants)
+                    if keys is not None:
+                        self.produced.update(keys)
+            elif isinstance(node, ast.Call):
+                fn = node.func
+                fn_name = fn.attr if isinstance(fn, ast.Attribute) \
+                    else getattr(fn, "id", None)
+                if (fn_name == "asdict" and owner is not None
+                        and node.args
+                        and isinstance(node.args[0], ast.Name)
+                        and node.args[0].id == "self"):
+                    self.produced.update(dc_fields.get(owner, []))
+
+    # -- consumers --
+    def _collect_consumed(self, path: str, func: ast.AST,
+                          constants: Dict[str, List[str]]) -> List[Finding]:
+        findings: List[Finding] = []
+        local_literals: Dict[str, Tuple[List[str], int]] = {}
+        for node in ast.walk(func):
+            if isinstance(node, ast.Subscript) \
+                    and isinstance(node.ctx, ast.Load):
+                s = str_const(node.slice)
+                if s is not None:
+                    self.consumed.append((path, node.lineno, func.name, s))
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, (ast.Tuple, ast.List)):
+                keys = _resolve_keys(node.value, constants)
+                if keys is not None and len(keys) >= 3:
+                    local_literals[node.targets[0].id] = (keys, node.lineno)
+            elif isinstance(node, ast.For):
+                inline: Optional[Tuple[List[str], int]] = None
+                if isinstance(node.iter, (ast.Tuple, ast.List)):
+                    keys = _resolve_keys(node.iter, constants)
+                    if keys is not None and len(keys) >= 3:
+                        inline = (keys, node.iter.lineno)
+                elif isinstance(node.iter, ast.Name):
+                    if node.iter.id in constants:
+                        for key in constants[node.iter.id]:
+                            self.consumed.append(
+                                (path, node.lineno, func.name, key))
+                    elif node.iter.id in local_literals:
+                        inline = local_literals[node.iter.id]
+                if inline is not None:
+                    keys, line = inline
+                    findings.append(self.finding(
+                        path, line,
+                        f"{func.name} iterates an inline schema key list "
+                        f"starting '{keys[0]}'; extract a module-level "
+                        "*_KEYS constant as the single source of truth"))
+                    for key in keys:
+                        self.consumed.append(
+                            (path, node.lineno, func.name, key))
+        return findings
+
+
+def _functions_with_class(tree: ast.Module):
+    """Yield (FunctionDef, enclosing class name or None) pairs."""
+    out = []
+
+    def walk(node: ast.AST, owner: Optional[str]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                walk(child, child.name)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.append((child, owner))
+                walk(child, owner)
+            else:
+                walk(child, owner)
+
+    walk(tree, None)
+    return out

@@ -1,0 +1,104 @@
+"""SL002 — units: seconds-everywhere, conversions must be explicit.
+
+The serving stack carries time in seconds and rates in requests/second,
+and encodes the unit in the identifier suffix (``slo_p99_s``,
+``transit_s``, ``target_rps``). This rule flags the two mistakes that
+silently corrupt that convention:
+
+  * cross-unit assignment: ``x_ms = y_s`` (plain name to plain name,
+    no arithmetic in between);
+  * cross-unit ``+``/``-``: ``a_s + b_ms`` where both operands are bare
+    identifiers with *different* unit suffixes.
+
+A conversion factor exempts the expression naturally: ``lat_s * 1e3``
+is a ``*``/``/`` BinOp and therefore carries no suffix of its own, so
+``t_ms = lat_s * 1e3`` never trips the rule. Recognized suffixes:
+``_s _ms _us _ns _rps _qps``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from .core import Checker, Finding, register
+
+_UNITS = {"s", "ms", "us", "ns", "rps", "qps"}
+_TIME_UNITS = {"s", "ms", "us", "ns"}
+
+
+def unit_of(node: ast.AST) -> Optional[str]:
+    """Unit suffix of a bare Name/Attribute, else None."""
+    if isinstance(node, ast.Name):
+        name = node.id
+    elif isinstance(node, ast.Attribute):
+        name = node.attr
+    else:
+        return None
+    head, _, tail = name.rpartition("_")
+    return tail if head and tail in _UNITS else None
+
+
+def _compatible(a: str, b: str) -> bool:
+    if a == b:
+        return True
+    # time + time is the only cross-family mix we ever see; rate vs time
+    # is always wrong, and so is any ms-vs-s style mismatch
+    return False
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, checker: "UnitsChecker", path: str):
+        self.checker = checker
+        self.path = path
+        self.findings: List[Finding] = []
+
+    def _flag(self, node: ast.AST, u1: str, u2: str, what: str) -> None:
+        self.findings.append(self.checker.finding(
+            self.path, node,
+            f"{what} mixes '_{u1}' and '_{u2}' units without an explicit "
+            "conversion factor"))
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        rhs = unit_of(node.value)
+        if rhs is not None:
+            for target in node.targets:
+                lhs = unit_of(target)
+                if lhs is not None and not _compatible(lhs, rhs):
+                    self._flag(node, lhs, rhs, "assignment")
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            lhs, rhs = unit_of(node.target), unit_of(node.value)
+            if lhs is not None and rhs is not None \
+                    and not _compatible(lhs, rhs):
+                self._flag(node, lhs, rhs, "assignment")
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            lhs, rhs = unit_of(node.target), unit_of(node.value)
+            if lhs is not None and rhs is not None \
+                    and not _compatible(lhs, rhs):
+                self._flag(node, lhs, rhs, "augmented assignment")
+        self.generic_visit(node)
+
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            lhs, rhs = unit_of(node.left), unit_of(node.right)
+            if lhs is not None and rhs is not None \
+                    and not _compatible(lhs, rhs):
+                self._flag(node, lhs, rhs, "arithmetic")
+        self.generic_visit(node)
+
+
+@register
+class UnitsChecker(Checker):
+    rule = "SL002"
+    title = "units: no cross-suffix assignment or arithmetic"
+
+    def check_file(self, path: str, tree: ast.AST,
+                   source: str) -> List[Finding]:
+        visitor = _Visitor(self, path)
+        visitor.visit(tree)
+        return visitor.findings
